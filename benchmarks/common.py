@@ -1,0 +1,131 @@
+"""Shared benchmark machinery: builds the OCTOPUS pipeline on the synthetic
+factorized image set and returns everything the per-table benchmarks need.
+
+Sizes are CPU-tuned: they preserve every *relationship* the paper claims
+(ordering of accuracies, orders of magnitude in bytes) at laptop scale.
+Set OCTOPUS_BENCH_QUICK=1 to shrink further (CI smoke).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import downstream as DS
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig, forward as dvqae_forward
+from repro.data import holdout_atd, make_images, partition, train_test_split
+
+QUICK = bool(int(os.environ.get("OCTOPUS_BENCH_QUICK", "0")))
+
+N_DATA = 400 if QUICK else 1200
+IMG = 16 if QUICK else 32
+N_CLIENTS = 4 if QUICK else 8
+N_IDENTITIES = 8
+PRETRAIN_STEPS = 60 if QUICK else 250
+PROBE_STEPS = 80 if QUICK else 250
+FED_ROUNDS = 3 if QUICK else 8
+
+
+@dataclass
+class Pipeline:
+    cfg: DVQAEConfig
+    server: OC.ServerState
+    train: object          # LabeledData (client-held)
+    test: object
+    atd: object
+    shards_iid: list
+    shards_worst: list
+    shards_skew: list
+    train_codes: jax.Array      # gathered latent features (train)
+    test_codes: jax.Array
+    bytes_transmitted: int
+
+
+def content_label(d):
+    return d.content
+
+
+def style_label(d):
+    return d.style
+
+
+def build_pipeline(key, *, codebook_size: int = 256, apply_in: bool = True,
+                   n_groups: int = 1, n_slices: int = 1) -> Pipeline:
+    cfg = DVQAEConfig(kind="image", in_channels=3, hidden=32, latent_dim=16,
+                      codebook_size=codebook_size, n_res_blocks=1,
+                      apply_in=apply_in, encoder_in=apply_in,
+                      n_groups=n_groups, n_slices=n_slices)
+    kd, ks, kt = jax.random.split(key, 3)
+    data = make_images(kd, N_DATA, size=IMG, n_identities=N_IDENTITIES)
+    tr, te = train_test_split(data, 0.2)
+    tr, atd = holdout_atd(tr, 0.15)
+
+    # Step 1: server pretrains the global DVQ-AE on public ATD
+    server = OC.server_init(ks, cfg)
+    atd_x = atd.x
+    step = jax.jit(lambda s, x: OC.server_pretrain_step(s, cfg, x),
+                   static_argnums=())
+    for i in range(PRETRAIN_STEPS):
+        sel = jax.random.randint(jax.random.fold_in(ks, i), (32,), 0,
+                                 atd_x.shape[0])
+        server, _ = OC.server_pretrain_step(server, cfg, atd_x[sel])
+
+    shards_iid = partition(tr, N_CLIENTS, regime="iid")
+    shards_worst = partition(tr, N_CLIENTS, regime="worst")
+    shards_skew = partition(tr, N_CLIENTS, regime="skewed", skew=0.2)
+
+    # Steps 2-4: each (worst-case) client fine-tunes once and transmits codes
+    total_bytes = 0
+    txs = []
+    for ci, shard in enumerate(shards_worst):
+        client = OC.client_init(server)
+        client, _, _ = OC.client_finetune_step(client, cfg, shard.x[:32])
+        tx = OC.client_transmit(client, cfg, shard.x, labels=shard.content)
+        total_bytes += tx.nbytes
+        txs.append(tx)
+    idx, labels, _ = OC.gather_codes(txs)
+    train_codes = OC.codes_to_features(server, cfg, idx)
+
+    te_client = OC.client_init(server)
+    te_tx = OC.client_transmit(te_client, cfg, te.x, labels=te.content)
+    test_codes = OC.codes_to_features(server, cfg, te_tx.indices)
+
+    # reorder train labels to match gathered order
+    gathered_train = type(tr)(x=jnp.concatenate([s.x for s in shards_worst]),
+                              content=labels,
+                              style=jnp.concatenate(
+                                  [s.style for s in shards_worst]))
+    return Pipeline(cfg=cfg, server=server, train=gathered_train, test=te,
+                    atd=atd, shards_iid=shards_iid,
+                    shards_worst=shards_worst, shards_skew=shards_skew,
+                    train_codes=train_codes, test_codes=test_codes,
+                    bytes_transmitted=total_bytes)
+
+
+def train_probe_on_codes(key, pipe: Pipeline, labels_tr, labels_te):
+    in_dim = int(pipe.train_codes[0].size)
+    probe = DS.init_linear_probe(key, in_dim, int(labels_tr.max()) + 1)
+    probe = DS.sgd_train(key, DS.linear_probe, probe, pipe.train_codes,
+                         labels_tr, steps=PROBE_STEPS)
+    return DS.accuracy(DS.linear_probe, probe, pipe.test_codes, labels_te)
+
+
+def train_conv_on_raw(key, x_tr, y_tr, x_te, y_te, steps=None):
+    clf = DS.init_conv_classifier(key, in_channels=3,
+                                  n_classes=int(y_tr.max()) + 1)
+    clf = DS.sgd_train(key, DS.conv_classifier, clf, x_tr, y_tr,
+                       steps=steps or PROBE_STEPS)
+    return DS.accuracy(DS.conv_classifier, clf, x_te, y_te)
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def ms(self):
+        return (time.time() - self.t0) * 1000.0

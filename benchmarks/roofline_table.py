@@ -1,0 +1,66 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table \
+        [--dir experiments/dryrun] [--mesh 16x16] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+ARCH_ORDER = ["jamba_v0_1_52b", "qwen3_0_6b", "chameleon_34b", "minicpm3_4b",
+              "gemma_7b", "xlstm_350m", "starcoder2_3b", "whisper_base",
+              "deepseek_v3_671b", "qwen3_moe_30b_a3b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_, mesh):
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = os.path.join(dir_, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(p):
+                continue
+            with open(p) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def fmt(rows, markdown=False):
+    cols = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+            "bottleneck", "useful", "HBM/dev GB", "flops", "coll GB"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(cols) + " |")
+        lines.append("|" + "---|" * len(cols))
+    else:
+        lines.append(" ".join(f"{c:>12s}" for c in cols))
+    for r in rows:
+        vals = [r["arch"], r["shape"],
+                f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+                f"{r['collective_s']:.3e}", r["bottleneck"],
+                f"{r['useful_ratio']:.3f}",
+                f"{r['per_device_hbm_bytes']/1e9:.1f}",
+                f"{r['hlo_flops']:.2e}",
+                f"{r['collective_bytes']/1e9:.1f}"]
+        if markdown:
+            lines.append("| " + " | ".join(vals) + " |")
+        else:
+            lines.append(" ".join(f"{v:>12s}" for v in vals))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh)
+    print(fmt(rows, args.markdown))
+    print(f"\n{len(rows)} combos")
+
+
+if __name__ == "__main__":
+    main()

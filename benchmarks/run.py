@@ -1,0 +1,310 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
+
+Emits ``section,name,value[,extra]`` CSV lines plus wall-time per section.
+Paper targets:
+  fig4     downstream accuracy: centralized vs FL variants vs OCTOPUS
+  fig5     privatization: private-attribute accuracy + conditional entropy
+  table1   disentanglement on/off across codebook sizes
+  fig9     multi-task probes on latent codes vs raw baseline
+  sec2_8   communication-overhead accounting (measured bytes)
+  sec3_8   time overheads (encode latency, probe vs conv train time)
+  kernels  Pallas kernel microbenchmarks vs jnp reference
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+
+
+def _emit(section, name, value, extra=""):
+    print(f"{section},{name},{value}{',' + str(extra) if extra else ''}",
+          flush=True)
+
+
+# ------------------------------------------------------------------- fig 4
+
+def bench_fig4(key):
+    """Downstream (content) accuracy across schemes (Fig. 4)."""
+    from repro.core.downstream import conv_classifier, init_conv_classifier
+    from repro.core.fedavg import FedConfig, fedavg_train
+    from repro.core import downstream as DS
+
+    pipe = C.build_pipeline(key, codebook_size=256)
+    n_classes = 8
+    y_tr, y_te = pipe.train.content, pipe.test.content
+
+    # centralized on raw data (upper baseline)
+    acc = C.train_conv_on_raw(key, pipe.train.x, y_tr, pipe.test.x, y_te)
+    _emit("fig4", "centralized", f"{acc:.4f}")
+
+    # centralized + DP (clip + noise during training)
+    clf0 = init_conv_classifier(key, in_channels=3, n_classes=n_classes)
+    dp = fedavg_train(key, conv_classifier, clf0, [pipe.train],
+                      C.content_label,
+                      FedConfig(rounds=C.FED_ROUNDS, dp_clip=1.0,
+                                dp_noise=0.05, local_epochs=8))
+    _emit("fig4", "centralized_dp",
+          f"{DS.accuracy(conv_classifier, dp, pipe.test.x, y_te):.4f}")
+
+    # federated variants
+    def fed(shards, fc, shared=None, tag=""):
+        p0 = init_conv_classifier(key, in_channels=3, n_classes=n_classes)
+        p = fedavg_train(key, conv_classifier, p0, shards, C.content_label,
+                         fc, shared_data=shared)
+        a = DS.accuracy(conv_classifier, p, pipe.test.x, y_te)
+        _emit("fig4", tag, f"{a:.4f}")
+        return a
+
+    base_fc = FedConfig(rounds=C.FED_ROUNDS, local_epochs=8)
+    fed(pipe.shards_iid, base_fc, tag="fed_iid")
+    fed(pipe.shards_worst, base_fc, tag="fed_noniid_worst")
+    fed(pipe.shards_skew, base_fc, tag="fed_noniid_moderate")
+    fed(pipe.shards_worst, FedConfig(rounds=C.FED_ROUNDS, prox_mu=0.1,
+                                     local_epochs=8), tag="fedprox_worst")
+    fed(pipe.shards_worst, base_fc, shared=pipe.atd, tag="fed_datashare")
+    fed(pipe.shards_iid, FedConfig(rounds=C.FED_ROUNDS, dp_clip=1.0,
+                                   dp_noise=0.05, local_epochs=8),
+        tag="fed_iid_dp")
+
+    # OCTOPUS across codebook sizes
+    for B in (32, 64, 128, 256):
+        p = pipe if B == 256 else C.build_pipeline(key, codebook_size=B)
+        acc = C.train_probe_on_codes(key, p, p.train.content, p.test.content)
+        _emit("fig4", f"octopus_B{B}", f"{acc:.4f}")
+
+
+# ------------------------------------------------------------------- fig 5
+
+def bench_fig5(key):
+    """Privatization: identity (style) recognition accuracy on raw vs
+    OCTOPUS public codes; conditional entropy per Thm. 1 (Fig. 5 + Fig. 7)."""
+    from repro.core import privacy as PV
+    pipe = C.build_pipeline(key, codebook_size=256)
+
+    # adversary on RAW data (centralized leak baseline)
+    acc_raw = C.train_conv_on_raw(key, pipe.train.x, pipe.train.style,
+                                  pipe.test.x, pipe.test.style)
+    _emit("fig5", "identity_acc_raw_centralized", f"{acc_raw:.4f}")
+
+    # adversary on released public codes Z•
+    adv = PV.train_adversary(key, pipe.train_codes, pipe.train.style,
+                             C.N_IDENTITIES, steps=C.PROBE_STEPS)
+    m_pub = PV.evaluate_adversary(adv, pipe.test_codes, pipe.test.style,
+                                  C.N_IDENTITIES)
+    _emit("fig5", "identity_acc_octopus_public", f"{m_pub.accuracy:.4f}")
+    _emit("fig5", "cond_entropy_bits_public",
+          f"{m_pub.conditional_entropy_bits:.4f}")
+
+    # adversary on the private component Z∘ (should leak MORE)
+    from repro.core.dvqae import forward as fwd
+    out_tr = fwd(pipe.server.params, pipe.cfg, pipe.train.x)
+    out_te = fwd(pipe.server.params, pipe.cfg, pipe.test.x)
+    priv_tr = jnp.broadcast_to(out_tr.latent.private,
+                               out_tr.latent.public.shape)
+    priv_te = jnp.broadcast_to(out_te.latent.private,
+                               out_te.latent.public.shape)
+    adv2 = PV.train_adversary(key, priv_tr, pipe.train.style,
+                              C.N_IDENTITIES, steps=C.PROBE_STEPS)
+    m_prv = PV.evaluate_adversary(adv2, priv_te, pipe.test.style,
+                                  C.N_IDENTITIES)
+    _emit("fig5", "identity_acc_octopus_private", f"{m_prv.accuracy:.4f}")
+    _emit("fig5", "cond_entropy_bits_private",
+          f"{m_prv.conditional_entropy_bits:.4f}")
+
+    _emit("fig5", "claim_public_much_lower",
+          str(m_pub.accuracy < 0.6 * acc_raw))
+    _emit("fig5", "claim_private_leaks_more",
+          str(m_prv.accuracy > m_pub.accuracy))
+
+    # utility retained on the same released codes
+    util = C.train_probe_on_codes(key, pipe, pipe.train.content,
+                                  pipe.test.content)
+    _emit("fig5", "content_acc_on_public_codes", f"{util:.4f}")
+
+
+# ------------------------------------------------------------------ table 1
+
+def bench_table1(key):
+    """Identity accuracy with/without disentanglement across codebook
+    sizes (Table 1 / Fig. 8)."""
+    from repro.core import privacy as PV
+    for B in (32, 64, 128):
+        row = []
+        for apply_in in (True, False):
+            pipe = C.build_pipeline(key, codebook_size=B, apply_in=apply_in)
+            adv = PV.train_adversary(key, pipe.train_codes, pipe.train.style,
+                                     C.N_IDENTITIES, steps=C.PROBE_STEPS)
+            m = PV.evaluate_adversary(adv, pipe.test_codes, pipe.test.style,
+                                      C.N_IDENTITIES)
+            row.append(m.accuracy)
+        _emit("table1", f"B{B}_with_disent", f"{row[0]:.4f}")
+        _emit("table1", f"B{B}_without_disent", f"{row[1]:.4f}")
+        _emit("table1", f"B{B}_disent_helps", str(row[0] <= row[1] + 0.05))
+
+
+# ------------------------------------------------------------------- fig 9
+
+def bench_fig9(key):
+    """Multi-task: several binary attributes from ONE set of latent codes
+    vs per-task conv baselines (Fig. 9)."""
+    pipe = C.build_pipeline(key, codebook_size=256)
+    tasks = {
+        "is_round": lambda c: (c <= 1).astype(jnp.int32),
+        "has_bar": lambda c: ((c == 6) | (c == 7)).astype(jnp.int32),
+        "is_diag": lambda c: ((c == 4) | (c == 5)).astype(jnp.int32),
+        "high_class": lambda c: (c >= 4).astype(jnp.int32),
+    }
+    t0 = time.time()
+    for name, fn in tasks.items():
+        acc = C.train_probe_on_codes(key, pipe, fn(pipe.train.content),
+                                     fn(pipe.test.content))
+        _emit("fig9", f"octopus_probe_{name}", f"{acc:.4f}")
+    probe_t = time.time() - t0
+    t0 = time.time()
+    for name, fn in tasks.items():
+        acc = C.train_conv_on_raw(key, pipe.train.x, fn(pipe.train.content),
+                                  pipe.test.x, fn(pipe.test.content))
+        _emit("fig9", f"conv_raw_{name}", f"{acc:.4f}")
+    conv_t = time.time() - t0
+    _emit("fig9", "probe_total_s", f"{probe_t:.2f}")
+    _emit("fig9", "conv_total_s", f"{conv_t:.2f}")
+
+
+# ------------------------------------------------------------------ §2.8
+
+def bench_sec2_8(key):
+    """Communication overheads with bytes measured from THIS system."""
+    from repro.core.overheads import (CommModel, comparison_table,
+                                      multi_task_bytes)
+    from repro.core.downstream import init_conv_classifier
+    pipe = C.build_pipeline(key, codebook_size=256)
+    clf = init_conv_classifier(key, in_channels=3, n_classes=8)
+    model_bytes = sum(l.size * 4 for l in jax.tree.leaves(clf))
+    n_samples = pipe.train.x.shape[0]
+    code_bytes = pipe.bytes_transmitted // max(n_samples, 1)
+    cb = pipe.server.params["codebook"]
+    c = CommModel(
+        n_clients=C.N_CLIENTS, model_bytes=model_bytes,
+        n_samples=n_samples, n_epochs=100,
+        code_bytes_per_sample=code_bytes,
+        smashed_bytes_per_sample=int(pipe.train_codes[0].size) * 4,
+        codebook_bytes=cb.size * 4, downstream_model_bytes=model_bytes)
+    for k, v in comparison_table(c).items():
+        _emit("sec2_8", k, f"{v:.3e}" if isinstance(v, float) else v)
+    mt = multi_task_bytes(c, 10)
+    _emit("sec2_8", "multitask10_federated", mt["federated"])
+    _emit("sec2_8", "multitask10_octopus", mt["octopus"])
+    _emit("sec2_8", "raw_bytes_per_sample", pipe.train.x[0].size * 4)
+    _emit("sec2_8", "code_bytes_per_sample", code_bytes)
+
+
+# ------------------------------------------------------------------ §3.8
+
+def bench_sec3_8(key):
+    """Time overheads: per-sample encode latency; probe vs conv train."""
+    from repro.core import octopus as OC
+    pipe = C.build_pipeline(key, codebook_size=256)
+    client = OC.client_init(pipe.server)
+    x1 = pipe.test.x[:1]
+    tx = OC.client_transmit(client, pipe.cfg, x1)   # compile
+    t0 = time.time()
+    for _ in range(20):
+        tx = OC.client_transmit(client, pipe.cfg, x1)
+    jax.block_until_ready(tx.indices)
+    _emit("sec3_8", "encode_ms_per_sample", f"{(time.time()-t0)/20*1e3:.2f}")
+
+    t0 = time.time()
+    C.train_probe_on_codes(key, pipe, pipe.train.content, pipe.test.content)
+    _emit("sec3_8", "probe_train_s", f"{time.time()-t0:.2f}")
+    t0 = time.time()
+    C.train_conv_on_raw(key, pipe.train.x, pipe.train.content, pipe.test.x,
+                        pipe.test.content)
+    _emit("sec3_8", "conv_train_s", f"{time.time()-t0:.2f}")
+
+
+# ---------------------------------------------------------------- kernels
+
+def bench_kernels(key):
+    """Microbenchmarks: Pallas (interpret on CPU) vs jnp reference."""
+    from repro.kernels import ops, ref
+
+    z = jax.random.normal(key, (2048, 64))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+
+    def timeit(fn, *args, n=5):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(n):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / n * 1e6
+
+    jref = jax.jit(ref.vq_nearest_ref)
+    _emit("kernels", "vq_nn_ref_us", f"{timeit(jref, z, cb):.0f}")
+    _emit("kernels", "vq_nn_pallas_interpret_us",
+          f"{timeit(lambda a, b: ops.vq_nearest(a, b), z, cb):.0f}")
+
+    q = jax.random.normal(key, (1, 512, 4, 64))
+    jref2 = jax.jit(lambda q: ref.flash_attention_ref(q, q, q))
+    _emit("kernels", "flash_ref_us", f"{timeit(jref2, q):.0f}")
+
+    x = jax.random.normal(key, (4096, 1024))
+    s = jnp.ones((1024,))
+    jref3 = jax.jit(ref.rmsnorm_ref)
+    _emit("kernels", "rmsnorm_ref_us", f"{timeit(jref3, x, s):.0f}")
+    _emit("kernels", "note", "pallas timed in interpret mode on CPU; "
+          "TPU timings require hardware")
+
+
+def bench_gsvq(key):
+    """§3.1 group setups: GSVQ (groups x slices) vs plain VQ — accuracy and
+    bits-per-position trade-off."""
+    from repro.core.gsvq import gsvq_bits_per_position
+    for (g, sl) in ((1, 1), (4, 1), (8, 2), (16, 4)):
+        pipe = C.build_pipeline(key, codebook_size=64, n_groups=g,
+                                n_slices=sl)
+        acc = C.train_probe_on_codes(key, pipe, pipe.train.content,
+                                     pipe.test.content)
+        bits = (gsvq_bits_per_position(g, sl) if g > 1
+                else 6)                      # log2(64) plain VQ
+        _emit("gsvq", f"G{g}_S{sl}_acc", f"{acc:.4f}")
+        _emit("gsvq", f"G{g}_S{sl}_bits_per_pos", bits)
+
+
+SECTIONS = {
+    "fig4": bench_fig4,
+    "fig5": bench_fig5,
+    "table1": bench_table1,
+    "fig9": bench_fig9,
+    "sec2_8": bench_sec2_8,
+    "sec3_8": bench_sec3_8,
+    "kernels": bench_kernels,
+    "gsvq": bench_gsvq,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of sections")
+    args = ap.parse_args()
+    run = [s.strip() for s in args.only.split(",") if s.strip()] or \
+        list(SECTIONS)
+    key = jax.random.PRNGKey(0)
+    print("section,name,value,extra")
+    for name in run:
+        t0 = time.time()
+        SECTIONS[name](key)
+        _emit(name, "_section_wall_s", f"{time.time()-t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

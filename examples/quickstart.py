@@ -1,0 +1,71 @@
+"""Quickstart: the OCTOPUS protocol end-to-end in ~80 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Server pretrains a DVQ-AE on public data (ATD).
+2. Non-IID clients fine-tune encoders locally and transmit ONLY discrete
+   latent codes (a few bytes per sample instead of the raw image).
+3. The server trains a downstream classifier on the gathered codes.
+4. A privacy audit shows identity (style) is filtered while content
+   classification survives.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import downstream as DS
+from repro.core import octopus as OC
+from repro.core import privacy as PV
+from repro.core.dvqae import DVQAEConfig
+from repro.data import holdout_atd, make_images, partition, train_test_split
+
+key = jax.random.PRNGKey(0)
+cfg = DVQAEConfig(kind="image", in_channels=3, hidden=32, latent_dim=16,
+                  codebook_size=256, n_res_blocks=1)
+
+# ------------------------------------------------- data (content x style)
+data = make_images(key, 800, size=32, n_identities=8)
+train, test = train_test_split(data, 0.2)
+train, atd = holdout_atd(train, 0.15)
+clients = partition(train, 4, regime="worst")      # worst-case non-IID
+print(f"{len(clients)} clients, {train.x.shape[0]} train samples, "
+      f"{atd.x.shape[0]} public ATD samples")
+
+# ------------------------------------------------- Step 1: server pretrain
+server = OC.server_init(key, cfg)
+for i in range(200):
+    sel = jax.random.randint(jax.random.fold_in(key, i), (32,), 0,
+                             atd.x.shape[0])
+    server, out = OC.server_pretrain_step(server, cfg, atd.x[sel])
+print(f"server DVQ-AE pretrained: recon loss {float(out.recon_loss):.4f}")
+
+# ------------------------- Steps 2-4: clients fine-tune + transmit codes
+txs = []
+total_bytes = 0
+for ci, shard in enumerate(clients):
+    client = OC.client_init(server)
+    client, _, _ = OC.client_finetune_step(client, cfg, shard.x[:32])
+    tx = OC.client_transmit(client, cfg, shard.x, labels=shard.content)
+    txs.append(tx)
+    total_bytes += tx.nbytes
+raw_bytes = sum(int(s.x.size) * 4 for s in clients)
+print(f"transmitted {total_bytes:,} bytes of codes "
+      f"(raw would be {raw_bytes:,}: {raw_bytes/total_bytes:.0f}x saving)")
+
+# --------------------------------------- Step 6: downstream at the server
+codes, labels, _ = OC.gather_codes(txs)
+feats = OC.codes_to_features(server, cfg, codes)
+probe = DS.init_linear_probe(key, int(feats[0].size), 8)
+probe = DS.sgd_train(key, DS.linear_probe, probe, feats, labels, steps=200)
+
+test_client = OC.client_init(server)
+te_tx = OC.client_transmit(test_client, cfg, test.x)
+te_feats = OC.codes_to_features(server, cfg, te_tx.indices)
+acc = DS.accuracy(DS.linear_probe, probe, te_feats, test.content)
+print(f"downstream content accuracy on codes: {acc:.3f}")
+
+# ----------------------------------------------------------- privacy audit
+adv = PV.train_adversary(key, te_feats, test.style, 8, steps=200)
+m = PV.evaluate_adversary(adv, te_feats, test.style, 8)
+print(f"identity re-identification from released codes: "
+      f"acc={m.accuracy:.3f}, H(Y|Z)={m.conditional_entropy_bits:.2f} bits "
+      f"(chance = {1/8:.3f}, max H = 3 bits)")

@@ -1,0 +1,2 @@
+"""Pytree checkpointing to .npz (flat path-keyed arrays) + metadata json."""
+from .npz import load_pytree, restore, save, save_pytree

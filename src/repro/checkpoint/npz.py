@@ -1,0 +1,86 @@
+"""Pytree checkpointing: flatten to path-keyed arrays in one .npz + a JSON
+sidecar with step/config metadata. No orbax in the container; this is the
+minimal deployable equivalent (atomic rename, versioned, restart-safe)."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_pytree(path: str, tree, *, metadata: Optional[dict] = None):
+    """Atomic save: write temp file then rename."""
+    arrays, _ = _flatten_with_paths(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".npz.tmp")
+    os.close(fd)
+    np.savez(tmp, **arrays)
+    saved = tmp if tmp.endswith(".npz") else tmp + ".npz"
+    if saved != tmp and os.path.exists(tmp + ".npz"):
+        tmp = tmp + ".npz"
+    os.replace(tmp, path)
+    if metadata is not None:
+        with open(path + ".json", "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+
+
+def load_pytree(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (paths must match)."""
+    data = np.load(path)
+    arrays, _ = _flatten_with_paths(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for (p, leaf) in flat:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+def save(ckpt_dir: str, step: int, state, *, keep: int = 3,
+         metadata: Optional[dict] = None):
+    """Versioned save: ckpt_dir/step_000042.npz, pruned to ``keep``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    md = dict(metadata or {})
+    md["step"] = step
+    save_pytree(path, state, metadata=md)
+    ckpts = sorted(f for f in os.listdir(ckpt_dir)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(ckpt_dir, old))
+        side = os.path.join(ckpt_dir, old + ".json")
+        if os.path.exists(side):
+            os.remove(side)
+    return path
+
+
+def restore(ckpt_dir: str, like) -> Tuple[Optional[Any], int]:
+    """Latest checkpoint in dir, or (None, 0)."""
+    if not os.path.isdir(ckpt_dir):
+        return None, 0
+    ckpts = sorted(f for f in os.listdir(ckpt_dir)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    if not ckpts:
+        return None, 0
+    latest = ckpts[-1]
+    step = int(latest[len("step_"):-len(".npz")])
+    return load_pytree(os.path.join(ckpt_dir, latest), like), step

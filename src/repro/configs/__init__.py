@@ -1,0 +1,2 @@
+from .base import INPUT_SHAPES, MLAConfig, MoEConfig, ModelConfig, ShapeConfig, SSMConfig, TrainConfig, XLSTMConfig
+from .registry import ALIASES, ARCH_IDS, all_configs, canonical, get_config, smoke_config

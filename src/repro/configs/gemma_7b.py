@@ -1,0 +1,15 @@
+"""Gemma 7B — dense, GeGLU, head_dim=256 [arXiv:2403.08295]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b", family="dense", source="arXiv:2403.08295",
+    n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16, head_dim=256,
+    d_ff=24576, vocab_size=256000, activation="gelu",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="gemma-smoke", family="dense", source="reduced",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+    d_ff=512, vocab_size=512, activation="gelu", tie_embeddings=True,
+)

@@ -1,0 +1,57 @@
+"""Architecture registry: the 10 assigned configs + the paper's own DVQ-AE.
+
+``get_config(name)`` returns the FULL assigned config (dry-run only);
+``smoke_config(name)`` returns the reduced same-family variant (<=2 layers,
+d_model<=512, <=4 experts) used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from .base import ModelConfig
+
+ARCH_IDS = (
+    "jamba_v0_1_52b",
+    "qwen3_0_6b",
+    "chameleon_34b",
+    "minicpm3_4b",
+    "gemma_7b",
+    "xlstm_350m",
+    "starcoder2_3b",
+    "whisper_base",
+    "deepseek_v3_671b",
+    "qwen3_moe_30b_a3b",
+)
+
+# CLI-facing aliases (match the assignment's hyphenated ids)
+ALIASES = {
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "chameleon-34b": "chameleon_34b",
+    "minicpm3-4b": "minicpm3_4b",
+    "gemma-7b": "gemma_7b",
+    "xlstm-350m": "xlstm_350m",
+    "starcoder2-3b": "starcoder2_3b",
+    "whisper-base": "whisper_base",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+}
+
+
+def canonical(name: str) -> str:
+    return ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,15 @@
+"""OCTOPUS core: the paper's contribution as composable JAX modules.
+
+  vq           basic VQ + straight-through estimator (Eq. 1)
+  gsvq         Group & Sliced VQ (Eq. 2-3)
+  disentangle  IN + public/private latent split (Eq. 4-6)
+  ema          codebook EMA refresh (Eq. 7-9)
+  dvqae        conv/sequence DVQ-AE models
+  octopus      client/server protocol (Steps 1-6)
+  privacy      computational adversary + conditional entropy (Thm. 1)
+  overheads    §2.8 communication byte models
+"""
+from . import disentangle, dvqae, ema, gsvq, octopus, overheads, privacy, vq
+
+__all__ = ["vq", "gsvq", "disentangle", "ema", "dvqae", "octopus",
+           "privacy", "overheads"]

@@ -1,0 +1,109 @@
+"""Disentanglement for local privatization (OCTOPUS §2.5, Eq. 4-6).
+
+Latent Z splits into:
+  public  Z• = VQ(Z_e(x))                — codebook-carried content
+  private Z∘ = E[Z_e(x) − Z•]            — per-group residual style
+
+Two mechanisms, no adversarial training:
+  1. codebook quantization — shared content clusters to shared atoms; what
+     the discrete code cannot carry (the residual) is the style.
+  2. instance normalization before VQ — removes per-instance channel
+     statistics (mu, sigma), which are temporally-invariant style carriers.
+
+The latent loss (Eq. 6 second term) pulls IN(Z_e) toward its quantization,
+tightening the content bottleneck:  lambda * ||IN(Z_e(x)) − Z•||^2.
+
+Group supervision: samples within a group share the sensitive attribute
+(same speaker / same identity); Z∘ is averaged over the group axis, so only
+attribute-consistent residual style survives.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .vq import VQOut, quantize
+from .gsvq import GSVQOut, gsvq_quantize
+
+
+class DisentangledLatent(NamedTuple):
+    public: jax.Array        # Z• quantized content, (..., M) (STE)
+    private: jax.Array       # Z∘ group-averaged residual, broadcastable
+    indices: jax.Array       # transmitted codes
+    codebook_loss: jax.Array
+    commit_loss: jax.Array
+    latent_loss: jax.Array   # ||IN(z_e) - Z•||^2 (Eq. 6)
+
+
+def instance_norm_latent(z_e, gamma=None, beta=None, eps: float = 1e-5):
+    """IN over the token/spatial axis of (B, T, M) latents (Eq. 4).
+
+    Channel-wise mu/sigma are computed per instance across positions — these
+    statistics ARE the style signal being normalized away.
+    """
+    mu = jnp.mean(z_e, axis=-2, keepdims=True)
+    sigma = jnp.sqrt(jnp.var(z_e, axis=-2, keepdims=True) + eps)
+    out = (z_e - mu) / sigma
+    if gamma is not None:
+        out = out * gamma
+    if beta is not None:
+        out = out + beta
+    return out
+
+
+def split_public_private(z_e, codebook, *, group_axis: int = 0,
+                         apply_in: bool = True, n_groups: int = 1,
+                         n_slices: int = 1, gamma=None, beta=None
+                         ) -> DisentangledLatent:
+    """Eq. 5: Z• = VQ(IN(z_e)), Z∘ = E_group[z_e − Z•].
+
+    z_e: (G?, B, T, M) — ``group_axis`` indexes attribute-sharing groups when
+    present; with no grouping pass group_axis=None and the residual average
+    is per-instance over T (the paper's speech framing).
+    """
+    z_in = instance_norm_latent(z_e, gamma, beta) if apply_in else z_e
+    if n_groups > 1 or n_slices > 1:
+        q: GSVQOut = gsvq_quantize(z_in, codebook, n_groups=n_groups,
+                                   n_slices=n_slices)
+    else:
+        q: VQOut = quantize(z_in, codebook)
+    residual = z_e - jax.lax.stop_gradient(q.quantized)
+    if group_axis is None:
+        private = jnp.mean(residual, axis=-2, keepdims=True)     # E over T
+    else:
+        private = jnp.mean(residual, axis=group_axis, keepdims=True)
+    latent_loss = jnp.mean(jnp.square(z_in - jax.lax.stop_gradient(q.quantized)))
+    return DisentangledLatent(public=q.quantized, private=private,
+                              indices=q.indices,
+                              codebook_loss=q.codebook_loss,
+                              commit_loss=q.commit_loss,
+                              latent_loss=latent_loss)
+
+
+def recombine(public, private):
+    """Decoder input: Z• + Z∘ (Eq. 6 reconstruction path)."""
+    return public + private
+
+
+def perturb_private(key, private, scale: float = 1.0):
+    """§3.3 style transformation (1): Z∘' = Z∘ + noise — anonymized copy."""
+    return private + scale * jax.random.normal(key, private.shape,
+                                               private.dtype)
+
+
+def replace_private(private_src):
+    """§3.3 style transformation (2): swap in a reference sample's Z∘.
+
+    Trivial by construction — returned as-is; named for protocol clarity.
+    """
+    return private_src
+
+
+def total_loss(x, x_rec, dis: DisentangledLatent, *, alpha: float = 1.0,
+               beta: float = 0.25, lam: float = 0.01):
+    """Eq. 6 total: recon + alpha*codebook + beta*commit + lambda*latent."""
+    recon = jnp.mean(jnp.square(x - x_rec))
+    return (recon + alpha * dis.codebook_loss + beta * dis.commit_loss
+            + lam * dis.latent_loss), recon

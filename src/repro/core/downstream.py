@@ -1,0 +1,95 @@
+"""Downstream-task models (§3.1.1): a small conv classifier for raw
+images/speech (the centralized/federated baseline) and a linear probe for
+OCTOPUS latent codes (the paper's 3-linear-layer head)."""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import conv2d, conv1d, dense_init, init_conv1d, init_conv2d
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+# ------------------------------------------------------------ conv baseline
+
+def init_conv_classifier(key, *, in_channels: int, n_classes: int,
+                         hidden: int = 32, kind: str = "image"):
+    ks = jax.random.split(key, 4)
+    if kind == "image":
+        return {
+            "c1": init_conv2d(ks[0], in_channels, hidden, 3),
+            "c2": init_conv2d(ks[1], hidden, hidden * 2, 3),
+            "w": dense_init(ks[2], hidden * 2, hidden * 2),
+            "b": jnp.zeros((hidden * 2,)),
+            "head": dense_init(ks[3], hidden * 2, n_classes),
+            "hb": jnp.zeros((n_classes,)),
+        }
+    return {
+        "c1": init_conv1d(ks[0], in_channels, hidden, 3),
+        "c2": init_conv1d(ks[1], hidden, hidden * 2, 3),
+        "w": dense_init(ks[2], hidden * 2, hidden * 2),
+        "b": jnp.zeros((hidden * 2,)),
+        "head": dense_init(ks[3], hidden * 2, n_classes),
+        "hb": jnp.zeros((n_classes,)),
+    }
+
+
+def conv_classifier(params, x, kind: str = "image"):
+    conv = conv2d if kind == "image" else conv1d
+    h = jax.nn.relu(conv(params["c1"], x, stride=2))
+    h = jax.nn.relu(conv(params["c2"], h, stride=2))
+    h = jnp.mean(h, axis=tuple(range(1, h.ndim - 1)))     # GAP
+    h = jax.nn.relu(h @ params["w"] + params["b"])
+    return h @ params["head"] + params["hb"]
+
+
+# ------------------------------------------------------------- linear probe
+
+def init_linear_probe(key, in_dim: int, n_classes: int, hidden: int = 128):
+    """The paper's latent-code head: three linear layers (§3.6)."""
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], in_dim, hidden), "b1": jnp.zeros((hidden,)),
+        "w2": dense_init(ks[1], hidden, hidden), "b2": jnp.zeros((hidden,)),
+        "w3": dense_init(ks[2], hidden, n_classes),
+        "b3": jnp.zeros((n_classes,)),
+    }
+
+
+def linear_probe(params, z):
+    z = z.reshape(z.shape[0], -1)
+    h = jax.nn.relu(z @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+# --------------------------------------------------------------- train/eval
+
+def xent_loss(apply_fn: Callable, params, x, y):
+    logits = apply_fn(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def sgd_train(key, apply_fn, params, x, y, *, steps: int = 200,
+              lr: float = 1e-3, batch: int = 64):
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        g = jax.grad(lambda p: xent_loss(apply_fn, p, xb, yb))(params)
+        return adamw_update(params, g, opt, lr=lr)
+
+    n = x.shape[0]
+    for i in range(steps):
+        sel = jax.random.randint(jax.random.fold_in(key, i),
+                                 (min(batch, n),), 0, n)
+        params, opt = step(params, opt, x[sel], y[sel])
+    return params
+
+
+def accuracy(apply_fn, params, x, y) -> float:
+    logits = apply_fn(params, x)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))

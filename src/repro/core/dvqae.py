@@ -1,0 +1,267 @@
+"""Distributed Vector-Quantized Autoencoder (OCTOPUS §2.3).
+
+Three variants share the VQ/GSVQ/disentangle core:
+
+  * ``image``  — Conv2D encoder (stride-2 downsampling + resnet blocks) to a
+    (H/4, W/4, M) latent grid; ConvTranspose decoder. The paper's
+    MNIST/CelebA path.
+  * ``speech`` — Conv1D encoder over (B, T, C) frames to (B, T/4, M);
+    Conv1D + upsample decoder. The paper's Speech path.
+  * ``sequence`` — embedding-space encoder for token sequences: this is the
+    bridge that feeds OCTOPUS codes into the assigned LM-scale backbones
+    (a VQ tokenizer over d_model-dim hidden states).
+
+All apply an IN layer before VQ (the disentanglement strategy) and return
+both components so the client can transmit Z• only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import (conv1d, conv2d, conv2d_transpose, dense_init,
+                             init_conv1d, init_conv2d, init_conv2d_transpose,
+                             instance_norm_1d, instance_norm_2d)
+from .disentangle import DisentangledLatent, recombine, split_public_private
+from .vq import init_codebook
+
+
+@dataclass(frozen=True)
+class DVQAEConfig:
+    kind: str = "image"            # image | speech | sequence
+    in_channels: int = 3           # image channels / speech feature dim
+    hidden: int = 128              # conv channel width
+    n_res_blocks: int = 2
+    latent_dim: int = 64           # M, codebook atom dim
+    codebook_size: int = 256       # K
+    n_groups: int = 1              # GSVQ groups (1 = plain VQ)
+    n_slices: int = 1              # GSVQ slices
+    apply_in: bool = True          # InstanceNorm disentanglement on/off
+    encoder_in: bool = True        # IN inside encoder convs (paper's encoder-
+                                   # block IN; the stronger style filter)
+    alpha: float = 1.0             # codebook loss weight
+    beta: float = 0.25             # commitment weight
+    lam: float = 0.01              # latent (IN-pull) weight, paper lambda
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+class DVQAEOut(NamedTuple):
+    recon: jax.Array
+    latent: DisentangledLatent
+    loss: jax.Array
+    recon_loss: jax.Array
+
+
+# ------------------------------------------------------------- resnet block
+
+def _init_resblock(key, c, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"c1": init_conv2d(k1, c, c, 3, dtype),
+            "c2": init_conv2d(k2, c, c, 1, dtype)}
+
+
+def _resblock(p, x):
+    h = conv2d(p["c1"], jax.nn.relu(x))
+    h = conv2d(p["c2"], jax.nn.relu(h))
+    return x + h
+
+
+def _init_resblock1d(key, c, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"c1": init_conv1d(k1, c, c, 3, dtype),
+            "c2": init_conv1d(k2, c, c, 1, dtype)}
+
+
+def _resblock1d(p, x):
+    h = conv1d(p["c1"], jax.nn.relu(x))
+    h = conv1d(p["c2"], jax.nn.relu(h))
+    return x + h
+
+
+# ------------------------------------------------------------------ image
+
+def init_image_encoder(key, cfg: DVQAEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4 + cfg.n_res_blocks)
+    p = {
+        "down1": init_conv2d(ks[0], cfg.in_channels, cfg.hidden // 2, 4, dtype),
+        "down2": init_conv2d(ks[1], cfg.hidden // 2, cfg.hidden, 4, dtype),
+        "mid": init_conv2d(ks[2], cfg.hidden, cfg.hidden, 3, dtype),
+        "to_latent": init_conv2d(ks[3], cfg.hidden, cfg.latent_dim, 1, dtype),
+    }
+    for i in range(cfg.n_res_blocks):
+        p[f"res{i}"] = _init_resblock(ks[4 + i], cfg.hidden, dtype)
+    return p
+
+
+def image_encode(p, cfg: DVQAEConfig, x):
+    """x: (B, H, W, C) -> (B, H/4, W/4, M)."""
+    h = jax.nn.relu(conv2d(p["down1"], x, stride=2))
+    if cfg.encoder_in:
+        h = instance_norm_2d(h)
+    h = jax.nn.relu(conv2d(p["down2"], h, stride=2))
+    if cfg.encoder_in:
+        h = instance_norm_2d(h)
+    h = conv2d(p["mid"], h)
+    for i in range(cfg.n_res_blocks):
+        h = _resblock(p[f"res{i}"], h)
+    return conv2d(p["to_latent"], jax.nn.relu(h))
+
+
+def init_image_decoder(key, cfg: DVQAEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4 + cfg.n_res_blocks)
+    p = {
+        "from_latent": init_conv2d(ks[0], cfg.latent_dim, cfg.hidden, 3, dtype),
+        "up1": init_conv2d_transpose(ks[1], cfg.hidden, cfg.hidden // 2, 4, dtype),
+        "up2": init_conv2d_transpose(ks[2], cfg.hidden // 2, cfg.in_channels, 4, dtype),
+    }
+    for i in range(cfg.n_res_blocks):
+        p[f"res{i}"] = _init_resblock(ks[3 + i], cfg.hidden, dtype)
+    return p
+
+
+def image_decode(p, cfg: DVQAEConfig, z):
+    h = conv2d(p["from_latent"], z)
+    for i in range(cfg.n_res_blocks):
+        h = _resblock(p[f"res{i}"], h)
+    h = jax.nn.relu(conv2d_transpose(p["up1"], jax.nn.relu(h), stride=2))
+    return conv2d_transpose(p["up2"], h, stride=2)
+
+
+# ------------------------------------------------------------------ speech
+
+def init_speech_encoder(key, cfg: DVQAEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4 + cfg.n_res_blocks)
+    p = {
+        "down1": init_conv1d(ks[0], cfg.in_channels, cfg.hidden // 2, 4, dtype),
+        "down2": init_conv1d(ks[1], cfg.hidden // 2, cfg.hidden, 4, dtype),
+        "mid": init_conv1d(ks[2], cfg.hidden, cfg.hidden, 3, dtype),
+        "to_latent": init_conv1d(ks[3], cfg.hidden, cfg.latent_dim, 1, dtype),
+    }
+    for i in range(cfg.n_res_blocks):
+        p[f"res{i}"] = _init_resblock1d(ks[4 + i], cfg.hidden, dtype)
+    return p
+
+
+def speech_encode(p, cfg: DVQAEConfig, x):
+    """x: (B, T, C) -> (B, T/4, M)."""
+    h = jax.nn.relu(conv1d(p["down1"], x, stride=2))
+    if cfg.encoder_in:
+        h = instance_norm_1d(h)
+    h = jax.nn.relu(conv1d(p["down2"], h, stride=2))
+    if cfg.encoder_in:
+        h = instance_norm_1d(h)
+    h = conv1d(p["mid"], h)
+    for i in range(cfg.n_res_blocks):
+        h = _resblock1d(p[f"res{i}"], h)
+    return conv1d(p["to_latent"], jax.nn.relu(h))
+
+
+def init_speech_decoder(key, cfg: DVQAEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 3 + cfg.n_res_blocks)
+    p = {
+        "from_latent": init_conv1d(ks[0], cfg.latent_dim, cfg.hidden, 3, dtype),
+        "up1": init_conv1d(ks[1], cfg.hidden, cfg.hidden // 2, 3, dtype),
+        "up2": init_conv1d(ks[2], cfg.hidden // 2, cfg.in_channels, 3, dtype),
+    }
+    for i in range(cfg.n_res_blocks):
+        p[f"res{i}"] = _init_resblock1d(ks[3 + i], cfg.hidden, dtype)
+    return p
+
+
+def _upsample_1d(x, factor=2):
+    B, T, C = x.shape
+    return jnp.repeat(x, factor, axis=1)
+
+
+def speech_decode(p, cfg: DVQAEConfig, z):
+    h = conv1d(p["from_latent"], z)
+    for i in range(cfg.n_res_blocks):
+        h = _resblock1d(p[f"res{i}"], h)
+    h = jax.nn.relu(conv1d(p["up1"], _upsample_1d(jax.nn.relu(h))))
+    return conv1d(p["up2"], _upsample_1d(h))
+
+
+# ---------------------------------------------------------------- sequence
+
+def init_sequence_codec(key, cfg: DVQAEConfig, d_model: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"enc": dense_init(k1, d_model, cfg.latent_dim, dtype),
+            "dec": dense_init(k2, cfg.latent_dim, d_model, dtype)}
+
+
+def sequence_encode(p, cfg: DVQAEConfig, h):
+    """h: (B, T, d_model) backbone embeddings -> (B, T, M) latents."""
+    return h @ p["enc"]
+
+
+def sequence_decode(p, cfg: DVQAEConfig, z):
+    return z @ p["dec"]
+
+
+# ------------------------------------------------------------------- model
+
+def init_dvqae(key, cfg: DVQAEConfig, d_model: Optional[int] = None,
+               dtype=jnp.float32):
+    ke, kd, kc = jax.random.split(key, 3)
+    if cfg.kind == "image":
+        enc = init_image_encoder(ke, cfg, dtype)
+        dec = init_image_decoder(kd, cfg, dtype)
+    elif cfg.kind == "speech":
+        enc = init_speech_encoder(ke, cfg, dtype)
+        dec = init_speech_decoder(kd, cfg, dtype)
+    elif cfg.kind == "sequence":
+        assert d_model is not None
+        codec = init_sequence_codec(ke, cfg, d_model, dtype)
+        enc, dec = {"proj": codec["enc"]}, {"proj": codec["dec"]}
+    else:
+        raise ValueError(cfg.kind)
+    return {"encoder": enc, "decoder": dec,
+            "codebook": init_codebook(kc, cfg.codebook_size, cfg.latent_dim,
+                                      dtype)}
+
+
+def encode(params, cfg: DVQAEConfig, x):
+    if cfg.kind == "image":
+        z = image_encode(params["encoder"], cfg, x)
+        B, H, W, M = z.shape
+        return z.reshape(B, H * W, M), (H, W)
+    if cfg.kind == "speech":
+        return speech_encode(params["encoder"], cfg, x), None
+    return x @ params["encoder"]["proj"], None
+
+
+def decode(params, cfg: DVQAEConfig, z, spatial=None):
+    if cfg.kind == "image":
+        H, W = spatial
+        B = z.shape[0]
+        return image_decode(params["decoder"], cfg,
+                            z.reshape(B, H, W, cfg.latent_dim))
+    if cfg.kind == "speech":
+        return speech_decode(params["decoder"], cfg, z)
+    return z @ params["decoder"]["proj"]
+
+
+def forward(params, cfg: DVQAEConfig, x, *, group_axis=None) -> DVQAEOut:
+    """Full autoencoding pass with disentanglement (Eq. 6 objective)."""
+    z_e, spatial = encode(params, cfg, x)
+    dis = split_public_private(
+        z_e, params["codebook"], group_axis=group_axis,
+        apply_in=cfg.apply_in, n_groups=cfg.n_groups, n_slices=cfg.n_slices)
+    z = recombine(dis.public, dis.private)
+    x_rec = decode(params, cfg, z, spatial)
+    recon = jnp.mean(jnp.square(x - x_rec))
+    loss = (recon + cfg.alpha * dis.codebook_loss + cfg.beta * dis.commit_loss
+            + cfg.lam * dis.latent_loss)
+    return DVQAEOut(recon=x_rec, latent=dis, loss=loss, recon_loss=recon)
+
+
+def encode_public(params, cfg: DVQAEConfig, x):
+    """Client transmit path: only the code indices leave the device."""
+    out = forward(params, cfg, x)
+    return out.latent.indices

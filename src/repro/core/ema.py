@@ -1,0 +1,85 @@
+"""Codebook EMA updates (OCTOPUS §2.6, Eq. 7-9).
+
+Flexible & stabilized training: instead of the codebook loss term, atoms are
+updated with exponential moving averages of their assigned encoder outputs:
+
+    N_i <- gamma N_i + (1-gamma) n_i
+    m_i <- gamma m_i + (1-gamma) sum_j z_{i,j}
+    e_i <- m_i / N_i
+
+This is the *non-training* update the paper uses for low-frequency local
+codebook refresh (weekly samples, monthly sync). TPU adaptation: the
+per-atom sums are a ``segment_sum`` over code assignments — one scatter-add,
+sharded over the data axis with a single psum when distributed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EMAState(NamedTuple):
+    counts: jax.Array      # N_i, (K,)
+    sums: jax.Array        # m_i, (K, M)
+    codebook: jax.Array    # e_i, (K, M)
+
+
+def init_ema(codebook) -> EMAState:
+    K, M = codebook.shape
+    return EMAState(counts=jnp.ones((K,), jnp.float32),
+                    sums=codebook.astype(jnp.float32),
+                    codebook=codebook)
+
+
+def ema_update(state: EMAState, z_e, indices, gamma: float = 0.99,
+               laplace_eps: float = 1e-5) -> EMAState:
+    """One EMA step from a batch of encoder outputs and their codes.
+
+    z_e: (..., M); indices: z_e.shape[:-1] int codes.
+    """
+    K, M = state.codebook.shape
+    zf = z_e.reshape(-1, M).astype(jnp.float32)
+    idx = indices.reshape(-1)
+    n = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32), idx, K)
+    s = jax.ops.segment_sum(zf, idx, K)
+    counts = gamma * state.counts + (1.0 - gamma) * n
+    sums = gamma * state.sums + (1.0 - gamma) * s
+    # Laplace smoothing keeps dead atoms from collapsing to 0/0
+    total = jnp.sum(counts)
+    smoothed = ((counts + laplace_eps) / (total + K * laplace_eps)) * total
+    codebook = (sums / smoothed[:, None]).astype(state.codebook.dtype)
+    return EMAState(counts=counts, sums=sums, codebook=codebook)
+
+
+def ema_update_distributed(state: EMAState, z_e, indices, gamma: float = 0.99,
+                           axis_name: str = "data") -> EMAState:
+    """shard_map/pmap body: per-shard segment sums + one psum each.
+
+    The paper's client-side weekly accumulation maps to per-shard sums; the
+    monthly server sync is the psum.
+    """
+    K, M = state.codebook.shape
+    zf = z_e.reshape(-1, M).astype(jnp.float32)
+    idx = indices.reshape(-1)
+    n = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32), idx, K)
+    s = jax.ops.segment_sum(zf, idx, K)
+    n = jax.lax.psum(n, axis_name)
+    s = jax.lax.psum(s, axis_name)
+    counts = gamma * state.counts + (1.0 - gamma) * n
+    sums = gamma * state.sums + (1.0 - gamma) * s
+    total = jnp.sum(counts)
+    smoothed = ((counts + 1e-5) / (total + K * 1e-5)) * total
+    codebook = (sums / smoothed[:, None]).astype(state.codebook.dtype)
+    return EMAState(counts=counts, sums=sums, codebook=codebook)
+
+
+def batch_optimal_atoms(z_e, indices, n_atoms: int):
+    """Eq. 8: per-atom mean of assigned outputs (the EMA fixed point)."""
+    M = z_e.shape[-1]
+    zf = z_e.reshape(-1, M).astype(jnp.float32)
+    idx = indices.reshape(-1)
+    n = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32), idx, n_atoms)
+    s = jax.ops.segment_sum(zf, idx, n_atoms)
+    return s / jnp.maximum(n, 1.0)[:, None], n

@@ -1,0 +1,103 @@
+"""Federated baselines the paper compares against (§3.1): FedAvg
+[McMahan'17], FedProx [Li'18], DP-FL [Geyer'17 style clip+noise], and the
+data-sharing strategy [Zhao'18].
+
+Implemented generically over (apply_fn, params) classifiers so the same
+harness trains the raw-data baselines that OCTOPUS's latent-code probe is
+compared with in Fig. 4/5.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import LabeledData
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from .downstream import xent_loss
+
+
+class FedConfig(NamedTuple):
+    rounds: int = 20
+    local_epochs: int = 1
+    local_batch: int = 32
+    lr: float = 1e-3
+    # FedProx proximal coefficient (0 = plain FedAvg)
+    prox_mu: float = 0.0
+    # client-level DP: clip + gaussian noise on the update
+    dp_clip: float = 0.0
+    dp_noise: float = 0.0
+
+
+def _local_update(key, apply_fn, global_params, shard: LabeledData,
+                  label_fn, fc: FedConfig):
+    """One client's local training pass; returns the delta."""
+    params = jax.tree.map(lambda x: x, global_params)
+    opt = adamw_init(params)
+    y = label_fn(shard)
+    n = shard.x.shape[0]
+
+    def loss(p, xb, yb):
+        l = xent_loss(apply_fn, p, xb, yb)
+        if fc.prox_mu:
+            sq = jax.tree.map(lambda a, b: jnp.sum(jnp.square(a - b)),
+                              p, global_params)
+            l = l + 0.5 * fc.prox_mu * jax.tree.reduce(jnp.add, sq)
+        return l
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        g = jax.grad(loss)(params, xb, yb)
+        return adamw_update(params, g, opt, lr=fc.lr)
+
+    steps = max(1, fc.local_epochs * n // fc.local_batch)
+    for i in range(steps):
+        sel = jax.random.randint(jax.random.fold_in(key, i),
+                                 (min(fc.local_batch, n),), 0, n)
+        params, opt = step(params, opt, shard.x[sel], y[sel])
+    return jax.tree.map(lambda new, old: new - old, params, global_params)
+
+
+def _privatize_delta(key, delta, fc: FedConfig):
+    if not fc.dp_clip:
+        return delta
+    delta, _ = clip_by_global_norm(delta, fc.dp_clip)
+    leaves, treedef = jax.tree.flatten(delta)
+    keys = jax.random.split(key, len(leaves))
+    noised = [l + fc.dp_noise * fc.dp_clip
+              * jax.random.normal(k, l.shape, l.dtype)
+              for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, noised)
+
+
+def fedavg_train(key, apply_fn, init_params, shards: Sequence[LabeledData],
+                 label_fn: Callable, fc: FedConfig = FedConfig(),
+                 shared_data: Optional[LabeledData] = None):
+    """Run federated rounds; returns the final global params.
+
+    ``shared_data`` implements the Zhao'18 data-sharing mitigation: a small
+    public set appended to every client shard.
+    """
+    if shared_data is not None:
+        shards = [LabeledData(
+            x=jnp.concatenate([s.x, shared_data.x]),
+            content=jnp.concatenate([s.content, shared_data.content]),
+            style=jnp.concatenate([s.style, shared_data.style]))
+            for s in shards]
+
+    global_params = init_params
+    sizes = jnp.asarray([s.x.shape[0] for s in shards], jnp.float32)
+    weights = sizes / jnp.sum(sizes)
+    for r in range(fc.rounds):
+        deltas = []
+        for ci, shard in enumerate(shards):
+            k = jax.random.fold_in(jax.random.fold_in(key, r), ci)
+            d = _local_update(k, apply_fn, global_params, shard, label_fn, fc)
+            d = _privatize_delta(jax.random.fold_in(k, 999), d, fc)
+            deltas.append(d)
+        # weighted average of deltas (FedAvg aggregation)
+        avg = jax.tree.map(
+            lambda *ds: sum(w * d for w, d in zip(weights, ds)), *deltas)
+        global_params = jax.tree.map(jnp.add, global_params, avg)
+    return global_params

@@ -1,0 +1,120 @@
+"""Group and Sliced Vector Quantization (OCTOPUS §2.4, Eq. 2-3).
+
+GVQ: the codebook (K, M) is partitioned into G groups of N_g = K/G atoms.
+A latent vector is matched to the *group* with the smallest mean atom
+distance (Eq. 2), then quantized to the inverse-distance-weighted average of
+that group's atoms (Eq. 3). This softens the hard-argmin mismatch under
+non-IID drift: a slightly-off query still lands in the right neighbourhood.
+
+SVQ: atoms and latents are sliced into n_c parts along M and VQ runs
+independently per slice — effective codebook size K^{n_c} at K·M storage.
+
+Transmission: GVQ sends the group index (log2 G bits) per position per
+slice; the weighted combination is reconstructed server-side from the shared
+codebook, so only indices travel (same contract as plain VQ).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GSVQOut(NamedTuple):
+    quantized: jax.Array       # STE-passthrough quantized latents (..., M)
+    indices: jax.Array         # (..., n_c) int32 group indices per slice
+    codebook_loss: jax.Array
+    commit_loss: jax.Array
+
+
+def _group_distances(z, codebook, n_groups: int):
+    """Mean per-group L2 distance (Eq. 2).
+
+    z: (N, m); codebook: (K, m) -> (N, G).
+    """
+    K = codebook.shape[0]
+    ng = K // n_groups
+    # full pairwise distance then mean-pool over groups; the Pallas kernel
+    # streams this without materialising (N, K) when K is large.
+    z2 = jnp.sum(jnp.square(z), axis=-1, keepdims=True)
+    e2 = jnp.sum(jnp.square(codebook), axis=-1)[None, :]
+    d2 = jnp.maximum(z2 - 2.0 * (z @ codebook.T) + e2, 0.0)      # (N, K)
+    d = jnp.sqrt(d2 + 1e-12)
+    return jnp.mean(d.reshape(-1, n_groups, ng), axis=-1)        # (N, G)
+
+
+def _group_weighted_average(z, group_atoms):
+    """Inverse-distance-weighted atom average (Eq. 3).
+
+    z: (N, m); group_atoms: (N, N_g, m) atoms of each row's matched group.
+    """
+    d = jnp.sqrt(jnp.sum(jnp.square(z[:, None, :] - group_atoms), axis=-1)
+                 + 1e-12)                                        # (N, N_g)
+    w = 1.0 / (d + 1e-8)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("ng,ngm->nm", w, group_atoms)
+
+
+def gsvq_quantize(z_e, codebook, *, n_groups: int = 1, n_slices: int = 1) -> GSVQOut:
+    """Group + sliced quantization with STE.
+
+    z_e: (..., M); codebook: (K, M). M must divide by n_slices, K by n_groups.
+    """
+    *lead, M = z_e.shape
+    K = codebook.shape[0]
+    assert M % n_slices == 0, (M, n_slices)
+    assert K % n_groups == 0, (K, n_groups)
+    m = M // n_slices
+    ng = K // n_groups
+
+    zf = z_e.reshape(-1, n_slices, m)                            # (N, n_c, m)
+    cb = codebook.reshape(K, n_slices, m).transpose(1, 0, 2)     # (n_c, K, m)
+
+    def per_slice(z_s, cb_s):
+        gd = _group_distances(z_s, cb_s, n_groups)               # (N, G)
+        gidx = jnp.argmin(gd, axis=-1).astype(jnp.int32)         # (N,)
+        groups = cb_s.reshape(n_groups, ng, m)
+        atoms = groups[gidx]                                     # (N, N_g, m)
+        zq = _group_weighted_average(z_s, atoms)
+        return zq, gidx
+
+    zq, gidx = jax.vmap(per_slice, in_axes=(1, 0), out_axes=(1, 1))(zf, cb)
+    zq = zq.reshape(*lead, M)
+    gidx = gidx.reshape(*lead, n_slices)
+
+    codebook_loss = jnp.mean(jnp.square(jax.lax.stop_gradient(z_e) - zq))
+    commit_loss = jnp.mean(jnp.square(z_e - jax.lax.stop_gradient(zq)))
+    z_st = z_e + jax.lax.stop_gradient(zq - z_e)
+    return GSVQOut(quantized=z_st, indices=gidx,
+                   codebook_loss=codebook_loss, commit_loss=commit_loss)
+
+
+def gsvq_dequantize_indices(indices, codebook, z_hint=None, *, n_groups: int,
+                            n_slices: int):
+    """Server-side reconstruction from group indices.
+
+    Without the original z the exact Eq. 3 weights are unknown; the paper
+    transmits indices only, so the server reconstructs with the *uniform*
+    group average (the weights' expectation), or — when the client also
+    ships a low-rate z hint — the weighted version. indices: (..., n_c).
+    """
+    *lead, n_c = indices.shape
+    K, M = codebook.shape
+    m = M // n_slices
+    ng = K // n_groups
+    cb = codebook.reshape(K, n_slices, m).transpose(1, 0, 2)     # (n_c, K, m)
+    groups = cb.reshape(n_slices, n_groups, ng, m)
+    flat_idx = indices.reshape(-1, n_c)
+
+    def per_slice(idx_s, groups_s):
+        atoms = groups_s[idx_s]                                  # (N, N_g, m)
+        return jnp.mean(atoms, axis=1)
+
+    out = jax.vmap(per_slice, in_axes=(1, 0), out_axes=1)(flat_idx, groups)
+    return out.reshape(*lead, M)
+
+
+def gsvq_bits_per_position(n_groups: int, n_slices: int) -> int:
+    import math
+    return n_slices * max(1, math.ceil(math.log2(max(n_groups, 2))))

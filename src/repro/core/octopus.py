@@ -1,0 +1,179 @@
+"""The OCTOPUS distributed learning protocol (§2.2, Steps 1-6).
+
+Server:  Step 1  train initial global DVQ-AE on public data (ATD)
+Clients: Step 2  one-shot local fine-tune (encoder + joint decoder)
+         Step 3  disentangle; only Z• (indices) are releasable
+         Step 4  transmit code indices at high frequency
+         Step 5  low-frequency codebook EMA refresh -> sync to server
+Server:  Step 6  train downstream tasks on gathered codes
+
+The implementation is functional: ``ClientState`` / ``ServerState`` pytrees
+plus pure transition functions, so the whole protocol jits and the client
+population maps onto the mesh 'data' axis (one client shard per device
+group) — see repro.distributed for the sharded variant.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from .dvqae import DVQAEConfig, DVQAEOut, forward, init_dvqae
+from .ema import EMAState, ema_update, init_ema
+
+
+class ClientState(NamedTuple):
+    params: dict              # local DVQ-AE (encoder fine-tuned, decoder joint)
+    ema: EMAState             # local codebook EMA accumulator
+    step: jax.Array
+
+
+class ServerState(NamedTuple):
+    params: dict              # global DVQ-AE
+    opt: AdamWState
+    step: jax.Array
+
+
+class Transmission(NamedTuple):
+    """What actually crosses the network, with its §2.8 byte accounting."""
+    indices: jax.Array        # int32 code matrix (B, T[, n_c])
+    nbytes: int               # ceil(log2 K)/8-packed size
+    labels: Optional[jax.Array] = None
+
+
+# --------------------------------------------------------------- Step 1
+
+def server_init(key, cfg: DVQAEConfig, lr: float = 1e-3) -> ServerState:
+    params = init_dvqae(key, cfg)
+    return ServerState(params=params, opt=adamw_init(params),
+                       step=jnp.zeros((), jnp.int32))
+
+
+def server_pretrain_step(state: ServerState, cfg: DVQAEConfig, batch,
+                         lr: float = 1e-3, group_axis=None
+                         ) -> Tuple[ServerState, DVQAEOut]:
+    """One ATD pretraining step of the global DVQ-AE (Step 1)."""
+    def loss_fn(p):
+        out = forward(p, cfg, batch, group_axis=group_axis)
+        return out.loss, out
+
+    grads, out = jax.grad(loss_fn, has_aux=True)(state.params)
+    params, opt = adamw_update(state.params, grads, state.opt, lr=lr)
+    return ServerState(params=params, opt=opt, step=state.step + 1), out
+
+
+# --------------------------------------------------------------- Step 2
+
+def client_init(server: ServerState) -> ClientState:
+    """Deploy the global model to a client; codebook starts frozen."""
+    return ClientState(params=jax.tree.map(lambda x: x, server.params),
+                       ema=init_ema(server.params["codebook"]),
+                       step=jnp.zeros((), jnp.int32))
+
+
+def client_finetune_step(client: ClientState, cfg: DVQAEConfig, batch,
+                         lr: float = 1e-4, opt: Optional[AdamWState] = None,
+                         ) -> Tuple[ClientState, AdamWState, DVQAEOut]:
+    """One-shot fine-tuning: encoder + decoder update, codebook FROZEN
+    (§2.6 'initially, the codebook is frozen for local fine-tuning')."""
+    if opt is None:
+        opt = adamw_init({"encoder": client.params["encoder"],
+                          "decoder": client.params["decoder"]})
+
+    def loss_fn(enc_dec):
+        p = {**enc_dec, "codebook": client.params["codebook"]}
+        out = forward(p, cfg, batch)
+        return out.loss, out
+
+    trainable = {"encoder": client.params["encoder"],
+                 "decoder": client.params["decoder"]}
+    grads, out = jax.grad(loss_fn, has_aux=True)(trainable)
+    new, opt = adamw_update(trainable, grads, opt, lr=lr)
+    params = {**new, "codebook": client.params["codebook"]}
+    return (ClientState(params=params, ema=client.ema, step=client.step + 1),
+            opt, out)
+
+
+# ----------------------------------------------------------- Steps 3 + 4
+
+def client_transmit(client: ClientState, cfg: DVQAEConfig, batch,
+                    labels=None) -> Transmission:
+    """Encode a local batch, release ONLY the public code indices."""
+    import math
+    out = forward(client.params, cfg, batch)
+    idx = out.latent.indices
+    bits = max(1, math.ceil(math.log2(max(cfg.codebook_size, 2))))
+    if cfg.n_groups > 1:
+        bits = max(1, math.ceil(math.log2(max(cfg.n_groups, 2))))
+    nbytes = (int(idx.size) * bits + 7) // 8
+    return Transmission(indices=idx, nbytes=nbytes, labels=labels)
+
+
+# --------------------------------------------------------------- Step 5
+
+def client_codebook_refresh(client: ClientState, cfg: DVQAEConfig, batch,
+                            gamma: float = 0.99) -> ClientState:
+    """Low-frequency EMA refresh of the local codebook (Eq. 9).
+
+    Atoms must be updated in the SAME space the quantizer matches in:
+    when the IN disentanglement layer is on, that is IN(z_e), not raw z_e
+    (EMA toward raw latents drags atoms out of the normalized manifold
+    and makes reconstruction worse under drift).
+    """
+    from .disentangle import instance_norm_latent
+    out = forward(client.params, cfg, batch)
+    idx = out.latent.indices
+    if cfg.n_groups > 1:
+        # group indices -> representative atom index (group centre)
+        ng = cfg.codebook_size // cfg.n_groups
+        idx = idx[..., 0] * ng + ng // 2
+    z_e, _ = _encode_only(client.params, cfg, batch)
+    if cfg.apply_in:
+        z_e = instance_norm_latent(z_e)
+    ema = ema_update(client.ema, z_e, idx, gamma=gamma)
+    params = {**client.params, "codebook": ema.codebook}
+    return ClientState(params=params, ema=ema, step=client.step)
+
+
+def _encode_only(params, cfg, x):
+    from .dvqae import encode
+    return encode(params, cfg, x)
+
+
+def server_merge_codebooks(server: ServerState,
+                           client_codebooks: Sequence[jax.Array],
+                           client_counts: Sequence[jax.Array]) -> ServerState:
+    """Count-weighted average of synced client codebooks (global dictionary
+    update, Step 5 tail). counts: per-atom EMA N_i of each client."""
+    cbs = jnp.stack(list(client_codebooks))          # (M_clients, K, M)
+    cts = jnp.stack(list(client_counts))             # (M_clients, K)
+    w = cts / jnp.maximum(jnp.sum(cts, axis=0, keepdims=True), 1e-9)
+    merged = jnp.einsum("ck,ckm->km", w, cbs)
+    params = {**server.params, "codebook": merged.astype(
+        server.params["codebook"].dtype)}
+    return ServerState(params=params, opt=server.opt, step=server.step)
+
+
+# --------------------------------------------------------------- Step 6
+
+def gather_codes(transmissions: Sequence[Transmission]):
+    """Server-side dataset assembly from client uploads."""
+    idx = jnp.concatenate([t.indices for t in transmissions], axis=0)
+    labels = None
+    if transmissions[0].labels is not None:
+        labels = jnp.concatenate([t.labels for t in transmissions], axis=0)
+    total_bytes = sum(t.nbytes for t in transmissions)
+    return idx, labels, total_bytes
+
+
+def codes_to_features(server: ServerState, cfg: DVQAEConfig, indices):
+    """Dequantize gathered codes into downstream-task features."""
+    from .gsvq import gsvq_dequantize_indices
+    from .vq import dequantize
+    cb = server.params["codebook"]
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
+        return gsvq_dequantize_indices(indices, cb, n_groups=cfg.n_groups,
+                                       n_slices=cfg.n_slices)
+    return dequantize(indices, cb)

@@ -1,0 +1,102 @@
+"""Vector quantization with straight-through estimator (OCTOPUS Eq. 1).
+
+The basic DVQ-AE quantizer: map each M-dim latent vector to the nearest
+codebook atom, transmit only the int index. Loss terms:
+
+    L = ||x - D(z_q)||^2  +  alpha * ||sg[z_e] - e||^2  +  beta * ||z_e - sg[e]||^2
+
+The nearest-neighbour search is the per-sample hot spot; the Pallas kernel
+``repro.kernels.vq_nn`` implements the MXU-tiled version of
+:func:`nearest_atom`. This module is the pure-jnp reference and the training
+entry point (the kernel is opt-in via ``use_kernel``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class VQOut(NamedTuple):
+    quantized: jax.Array      # z_q, same shape as z_e (STE-passthrough)
+    indices: jax.Array        # int32 codes, shape z_e.shape[:-1]
+    codebook_loss: jax.Array  # ||sg[z_e] - e||^2
+    commit_loss: jax.Array    # ||z_e - sg[e]||^2
+
+
+def squared_distances(z, codebook):
+    """Pairwise ||z - e||^2 via the expanded form (MXU-friendly).
+
+    z: (N, M); codebook: (K, M) -> (N, K).
+    """
+    z2 = jnp.sum(jnp.square(z), axis=-1, keepdims=True)          # (N, 1)
+    e2 = jnp.sum(jnp.square(codebook), axis=-1)[None, :]         # (1, K)
+    cross = z @ codebook.T                                        # (N, K)
+    return z2 - 2.0 * cross + e2
+
+
+def nearest_atom(z, codebook):
+    """Indices of nearest codebook atoms. z: (..., M) -> (...,) int32."""
+    flat = z.reshape(-1, z.shape[-1])
+    idx = jnp.argmin(squared_distances(flat, codebook), axis=-1)
+    return idx.reshape(z.shape[:-1]).astype(jnp.int32)
+
+
+def quantize(z_e, codebook, *, use_kernel: bool = False) -> VQOut:
+    """Quantize latents against the codebook with STE.
+
+    z_e: (..., M) continuous encoder output.
+    codebook: (K, M).
+    """
+    if use_kernel:
+        from repro.kernels.ops import vq_nearest
+        idx = vq_nearest(z_e.reshape(-1, z_e.shape[-1]), codebook)
+        idx = idx.reshape(z_e.shape[:-1])
+    else:
+        idx = nearest_atom(z_e, codebook)
+    z_q = codebook[idx]                                           # (..., M)
+    codebook_loss = jnp.mean(jnp.square(jax.lax.stop_gradient(z_e) - z_q))
+    commit_loss = jnp.mean(jnp.square(z_e - jax.lax.stop_gradient(z_q)))
+    # straight-through: forward z_q, backward identity to z_e
+    z_st = z_e + jax.lax.stop_gradient(z_q - z_e)
+    return VQOut(quantized=z_st, indices=idx,
+                 codebook_loss=codebook_loss, commit_loss=commit_loss)
+
+
+def dequantize(indices, codebook):
+    """Server-side lookup: int codes -> latent embeddings."""
+    return codebook[indices]
+
+
+def init_codebook(key, n_atoms: int, dim: int, dtype=jnp.float32):
+    """Unit-scale init: the IN layer upstream normalizes latents to
+    ~N(0,1) per channel, so atoms must start at the same scale.
+
+    A tiny init (e.g. 1/K) is a classic VQ-VAE collapse mode: commitment
+    pulls z_e toward the near-zero codebook, the encoder output flattens,
+    and reconstruction degenerates to the batch mean.
+    """
+    return jax.random.normal(key, (n_atoms, dim), dtype)
+
+
+def vq_loss_terms(out: VQOut, alpha: float = 1.0, beta: float = 0.25):
+    """alpha * codebook + beta * commitment (Eq. 1, second + third term)."""
+    return alpha * out.codebook_loss + beta * out.commit_loss
+
+
+def codes_nbits(indices, n_atoms: int) -> int:
+    """Transmission cost of an index matrix in bits (§2.8: 5-10 bits/code)."""
+    import math
+    return int(indices.size) * max(1, math.ceil(math.log2(n_atoms)))
+
+
+def perplexity(indices, n_atoms: int):
+    """Codebook usage perplexity — exp(H(code distribution)).
+
+    Low perplexity = codebook collapse; useful training diagnostic.
+    """
+    onehot = jax.nn.one_hot(indices.reshape(-1), n_atoms, dtype=jnp.float32)
+    probs = jnp.mean(onehot, axis=0)
+    ent = -jnp.sum(jnp.where(probs > 0, probs * jnp.log(probs), 0.0))
+    return jnp.exp(ent)

@@ -1,0 +1,2 @@
+from .federated import batches, holdout_atd, partition, train_test_split
+from .synthetic import LabeledData, make_images, make_speech, make_tokens

@@ -1,0 +1,76 @@
+"""Non-IID federated partitioner (§3.1 settings).
+
+Splits a labeled dataset across M clients under three regimes:
+  * iid          — uniform random assignment (the paper's best case)
+  * worst        — sorted by label, each client gets a single class
+  * skewed(p)    — fraction p assigned by label, remainder uniform
+                   (the paper's 20% moderate case)
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .synthetic import LabeledData
+
+
+def _take(data: LabeledData, idx) -> LabeledData:
+    return LabeledData(x=data.x[idx], content=data.content[idx],
+                       style=data.style[idx])
+
+
+def partition(data: LabeledData, n_clients: int, *, regime: str = "iid",
+              skew: float = 0.2, seed: int = 0) -> List[LabeledData]:
+    """Returns a list of per-client shards."""
+    n = int(data.content.shape[0])
+    rng = np.random.default_rng(seed)
+    labels = np.asarray(data.content)
+
+    if regime == "iid":
+        perm = rng.permutation(n)
+    elif regime == "worst":
+        perm = np.argsort(labels, kind="stable")
+    elif regime == "skewed":
+        n_sorted = int(n * skew)
+        sel = rng.permutation(n)
+        sorted_part = sel[:n_sorted][np.argsort(labels[sel[:n_sorted]],
+                                                kind="stable")]
+        rest = rng.permutation(sel[n_sorted:])
+        perm = np.concatenate([sorted_part, rest])
+    else:
+        raise ValueError(regime)
+
+    shards = np.array_split(perm, n_clients)
+    return [_take(data, jnp.asarray(s)) for s in shards]
+
+
+def train_test_split(data: LabeledData, test_frac: float = 0.2, seed: int = 0):
+    n = int(data.content.shape[0])
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    cut = int(n * (1 - test_frac))
+    return _take(data, jnp.asarray(perm[:cut])), _take(data, jnp.asarray(perm[cut:]))
+
+
+def holdout_atd(data: LabeledData, atd_frac: float = 0.15, seed: int = 1):
+    """§3.1: 15% of Tr held out as the public ATD set for server pretraining."""
+    n = int(data.content.shape[0])
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    cut = int(n * atd_frac)
+    return _take(data, jnp.asarray(perm[cut:])), _take(data, jnp.asarray(perm[:cut]))
+
+
+def batches(data: LabeledData, batch_size: int, *, seed: int = 0,
+            epochs: int = 1):
+    """Shuffled minibatch iterator (numpy-side, feeds jit'd steps)."""
+    n = int(data.content.shape[0])
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = jnp.asarray(perm[i:i + batch_size])
+            yield _take(data, idx)

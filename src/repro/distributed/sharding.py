@@ -1,0 +1,235 @@
+"""Sharding rules: param-path names -> PartitionSpecs, with a greedy
+divisible-dim fallback so EVERY assigned architecture lowers on the
+(data=16, model=16) production mesh.
+
+Contract (names set in repro.nn.layers docstring):
+
+  embed (V, d)                 vocab on 'model'  (fallback d)
+  head  (d, V)                 V on 'model'
+  column-parallel  (.., in, out)   out on 'model'   [wq wk wv wi wg up_proj
+                                                     in_proj x_proj w_in
+                                                     wq_a wq_b wkv_a wkv_b
+                                                     ffn_up router]
+  row-parallel     (.., in, out)   in on 'model'    [wo down_proj out_proj
+                                                     dt_proj ffn_down]
+  experts (.., E, in, out)     E on 'model' (expert parallelism)
+  scale/bias/1-D               replicated
+
+Stacked segments add a leading layer axis (never sharded). Models with
+>= FSDP_THRESHOLD params additionally shard a second dim over the data
+axes (ZeRO-3-style fully-sharded params; optimizer state inherits specs).
+
+If a preferred dim is not divisible by the mesh axis, the rule walks the
+remaining dims largest-first and shards the first divisible one; if none
+divides, the axis is dropped (replicated) — this is what lets
+starcoder2's 24 heads and minicpm3's 73448 vocab lower on a 16-way axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_THRESHOLD = 10_000_000_000
+
+COLUMN_NAMES = {"wq", "wk", "wv", "wi", "wg", "up_proj", "in_proj", "x_proj",
+                "w_in", "wq_a", "wq_b", "wkv_a", "wkv_b", "ffn_up", "router",
+                "w_if", "proj"}
+ROW_NAMES = {"wo", "down_proj", "out_proj", "dt_proj", "ffn_down"}
+EMBED_NAMES = {"embed"}
+HEAD_NAMES = {"head"}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _place(spec: list, shape, dim: int, axes, size: int,
+           taken: set) -> bool:
+    """Try to put ``axes`` on ``dim``; greedy fallback over free dims."""
+    order = [dim] + sorted((d for d in range(len(shape)) if d != dim),
+                           key=lambda d: -shape[d])
+    for d in order:
+        if d in taken or spec[d] is not None:
+            continue
+        if shape[d] % size == 0 and shape[d] >= size:
+            spec[d] = axes if isinstance(axes, str) else tuple(axes)
+            taken.add(d)
+            return True
+    return False
+
+
+def _leaf_spec(path_names: Tuple[str, ...], shape, mesh: Mesh, *,
+               fsdp: bool, dp_axes, model_axis="model") -> P:
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    taken: set = set()
+    msize = _axis_size(mesh, model_axis)
+    dsize = _axis_size(mesh, dp_axes)
+    name = path_names[-1] if path_names else ""
+    in_experts = "experts" in path_names
+    # stacked segments have a leading layer axis; skip it for rule dims
+    lead = 1 if ("segments" in path_names and ndim >= 2) else 0
+    if in_experts:
+        lead += 1  # expert axis sits after the layer axis
+
+    if ndim == 0 or ndim == 1 or name in {"scale", "bias", "dt_bias", "A_log",
+                                          "D", "skip_scale"}:
+        return P()
+
+    if in_experts and ndim - lead >= 2:
+        # expert-parallel: expert dim on model axis
+        edim = lead - 1
+        _place(spec, shape, edim, model_axis, msize, taken)
+        if fsdp:
+            _place(spec, shape, ndim - 1 if name != "wo" else ndim - 2,
+                   dp_axes, dsize, taken)
+        return P(*spec)
+
+    if name in EMBED_NAMES:
+        _place(spec, shape, 0, model_axis, msize, taken)
+        if fsdp:
+            _place(spec, shape, 1, dp_axes, dsize, taken)
+        return P(*spec)
+    if name in HEAD_NAMES:
+        _place(spec, shape, ndim - 1, model_axis, msize, taken)
+        if fsdp:
+            _place(spec, shape, ndim - 2, dp_axes, dsize, taken)
+        return P(*spec)
+    if name in COLUMN_NAMES or (name == "kernel" and ndim >= 3):
+        _place(spec, shape, ndim - 1, model_axis, msize, taken)
+        if fsdp:
+            _place(spec, shape, ndim - 2, dp_axes, dsize, taken)
+        return P(*spec)
+    if name in ROW_NAMES:
+        _place(spec, shape, ndim - 2, model_axis, msize, taken)
+        if fsdp:
+            _place(spec, shape, ndim - 1, dp_axes, dsize, taken)
+        return P(*spec)
+    # unknown matrices: model on the last dim, fsdp on the second-to-last
+    _place(spec, shape, ndim - 1, model_axis, msize, taken)
+    if fsdp:
+        _place(spec, shape, ndim - 2, dp_axes, dsize, taken)
+    return P(*spec)
+
+
+# TP-only param bytes above which inference keeps FSDP (v5e HBM budget:
+# leave room for caches/activations).
+INFER_TP_BYTES_LIMIT = 12e9
+
+
+def param_specs(params_shape, cfg, mesh: Mesh, *, dp_axes=None,
+                mode: str = "train"):
+    """PartitionSpec pytree for a params (or ShapeDtypeStruct) pytree.
+
+    mode="train": >=10B models FSDP over the data axes (grads/optimizer
+    amortize the gathers). mode="infer": params stay TP-only whenever the
+    per-device TP shard fits HBM — FSDP'd weights would be re-gathered on
+    EVERY decode step (measured ~6.5 GB/step on jamba decode_32k, §Perf
+    iteration 3); only models whose TP shard exceeds the budget (DeepSeek
+    671B: 84 GB/dev) keep FSDP.
+    """
+    dp_axes = dp_axes or _default_dp_axes(mesh)
+    fsdp = cfg.param_count() >= FSDP_THRESHOLD
+    if mode == "infer" and fsdp:
+        tp_bytes = cfg.param_count() * 2 / _axis_size(mesh, "model")
+        if tp_bytes <= INFER_TP_BYTES_LIMIT:
+            fsdp = False
+
+    def spec_one(path, leaf):
+        names = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path)
+        return _leaf_spec(names, leaf.shape, mesh, fsdp=fsdp,
+                          dp_axes=dp_axes)
+
+    return jax.tree_util.tree_map_with_path(spec_one, params_shape)
+
+
+def _default_dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(_default_dp_axes(mesh))
+
+
+# model-axis dim preference per cache field (dims indexed on the STACKED
+# leaf: 0=segment-layer axis, 1=batch). Chosen so the decode contraction
+# stays local or reduces to a tiny partial-sum all-reduce:
+#   attn k/v (L,B,S,H,D): heads first (fully local attention); else S
+#     (flash-decoding-style sequence parallelism: scores partial over S,
+#     one small all-reduce) — NEVER D-first (D@model makes XLA re-gather
+#     the whole cache when heads don't divide; measured 8 x 1.07 GB
+#     all-gathers per jamba decode step, §Perf iteration 3).
+#   mla c_kv (L,B,S,R): latent rank first (absorbed-decode contraction
+#     partial-sums over R), else S.
+#   mamba h (L,B,di,N): channel di (state update is elementwise in di).
+#   mlstm C/n (L,B,NH,DH[,DH]): last DH.
+_CACHE_MODEL_PREF = {
+    "k": (3, 4, 2), "v": (3, 4, 2),          # KVCache
+    "c_kv": (3, 2), "k_rope": (2,),          # MLACache
+    "h": (2,), "conv": (3,),                 # MambaCache (+ sLSTM h)
+    "C": (4, 3), "n": (3, 2), "m": (),       # MLSTMCache / SLSTMCache
+    "c": (2,),
+}
+
+
+def cache_specs(caches_shape, cfg, mesh: Mesh, *, batch: int):
+    """Field-name-aware cache sharding.
+
+    Leaves are (L_seg, B, ...) stacked per segment. Batch goes on the data
+    axes (global_batch=1 falls back to the longest dim, i.e. sequence);
+    the model axis follows _CACHE_MODEL_PREF per cache field.
+    """
+    dp_axes = _default_dp_axes(mesh)
+    dsize = _axis_size(mesh, dp_axes)
+    msize = _axis_size(mesh, "model")
+
+    def spec_one(path, leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        field = ""
+        for p in reversed(path):
+            n = getattr(p, "name", getattr(p, "key", None))
+            if isinstance(n, str):
+                field = n
+                break
+        spec: list = [None] * ndim
+        taken = {0}                          # stacked layer axis
+        if ndim >= 2:
+            if shape[1] % dsize == 0 and shape[1] >= dsize:
+                spec[1] = dp_axes
+                taken.add(1)
+            elif ndim > 2:
+                # batch too small: put data axes on the longest dim
+                _place(spec, shape, int(max(range(2, ndim),
+                                            key=lambda d: shape[d])),
+                       dp_axes, dsize, taken)
+        pref = _CACHE_MODEL_PREF.get(field)
+        order = [d for d in (pref or ()) if d < ndim] + \
+            [d for d in range(ndim - 1, 1, -1) if pref is None]
+        for d in order:
+            if d not in taken and spec[d] is None and shape[d] % msize == 0 \
+                    and shape[d] >= msize:
+                spec[d] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_one, caches_shape)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_constraint(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

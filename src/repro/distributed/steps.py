@@ -1,0 +1,205 @@
+"""Train / prefill / serve step builders.
+
+Each builder returns (step_fn, in_specs, out_specs) ready for
+``jax.jit(step_fn, in_shardings=..., out_shardings=...)`` under a mesh.
+State pytrees are described with jax.eval_shape so the dry-run never
+allocates full-size parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import hints
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+from . import sharding as shd
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def state_shape(cfg: ModelConfig, key=None):
+    """ShapeDtypeStruct pytree of the full train state (no allocation)."""
+    def init():
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        return TrainState(params=params, opt=adamw_init(params),
+                          step=jnp.zeros((), jnp.int32))
+    return jax.eval_shape(init)
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh):
+    sshape = state_shape(cfg)
+    pspec = shd.param_specs(sshape.params, cfg, mesh)
+    return TrainState(
+        params=pspec,
+        opt=AdamWState(mu=pspec, nu=pspec, count=P()),
+        step=P(),
+    )
+
+
+# -------------------------------------------------------------------- train
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                     shape: ShapeConfig):
+    """Returns (train_step, in_shardings, out_shardings, arg_shapes)."""
+    bspec = shd.batch_spec(mesh)
+    sspecs = state_specs(cfg, mesh)
+
+    dp_axes = shd._default_dp_axes(mesh)
+
+    def train_step(state: TrainState, batch):
+      with hints.activation_sharding(mesh, dp_axes):
+        def loss_fn(params):
+            if cfg.is_encoder_decoder:
+                enc = T.encode_audio(params, cfg, batch["frames"])
+                return T.lm_loss(params, cfg, batch["tokens"], enc_out=enc,
+                                 remat=tcfg.remat)
+            return T.lm_loss(params, cfg, batch["tokens"], remat=tcfg.remat)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        lr = warmup_cosine(state.step, base_lr=tcfg.learning_rate,
+                           warmup_steps=tcfg.warmup_steps,
+                           total_steps=tcfg.total_steps)
+        params, opt = adamw_update(state.params, grads, state.opt, lr=lr,
+                                   b1=tcfg.b1, b2=tcfg.b2,
+                                   weight_decay=tcfg.weight_decay,
+                                   grad_clip=tcfg.grad_clip)
+        return TrainState(params=params, opt=opt, step=state.step + 1), loss
+
+    batch_shapes = {"tokens": jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len), jnp.int32)}
+    batch_specs = {"tokens": bspec}
+    if cfg.is_encoder_decoder:
+        batch_shapes["frames"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_audio_frames, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+        batch_specs["frames"] = P(bspec[0], None, None)
+
+    in_specs = (sspecs, batch_specs)
+    out_specs = (sspecs, P())
+    arg_shapes = (state_shape(cfg), batch_shapes)
+    return train_step, in_specs, out_specs, arg_shapes
+
+
+# ------------------------------------------------------------------ prefill
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                       window_override: Optional[int] = None):
+    """Prefill: full-sequence forward, emit ONLY last-position logits and
+    the populated caches (realistic serving: logits (B, V), not (B, S, V))."""
+    bspec = shd.batch_spec(mesh)
+    pshape = params_shape(cfg)
+    pspecs = shd.param_specs(pshape, cfg, mesh, mode="infer")
+
+    def cache_shapes():
+        return jax.eval_shape(
+            lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len))
+
+    cspecs = shd.cache_specs(cache_shapes(), cfg, mesh,
+                             batch=shape.global_batch)
+
+    dp_axes = shd._default_dp_axes(mesh)
+
+    def prefill_step(params, batch):
+      with hints.activation_sharding(mesh, dp_axes):
+        enc = None
+        if cfg.is_encoder_decoder:
+            enc = T.encode_audio(params, cfg, batch["frames"])
+        out = T.prefill(params, cfg, batch["tokens"], enc_out=enc,
+                        window_override=window_override)
+        return out.logits[:, -1, :]
+
+    batch_shapes = {"tokens": jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len), jnp.int32)}
+    batch_specs = {"tokens": bspec}
+    if cfg.is_encoder_decoder:
+        batch_shapes["frames"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_audio_frames, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+        batch_specs["frames"] = P(bspec[0], None, None)
+
+    in_specs = (pspecs, batch_specs)
+    vocab_shardable = cfg.vocab_size % mesh.shape["model"] == 0
+    out_specs = P(bspec[0], "model" if vocab_shardable else None)
+    arg_shapes = (pshape, batch_shapes)
+    return prefill_step, in_specs, out_specs, arg_shapes
+
+
+# ------------------------------------------------------------------- serve
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     window_override: Optional[int] = None):
+    """Single-token decode against a seq_len KV cache / recurrent state."""
+    bspec = shd.batch_spec(mesh)
+    pshape = params_shape(cfg)
+    pspecs = shd.param_specs(pshape, cfg, mesh, mode="infer")
+    cshape = jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len))
+    cspecs = shd.cache_specs(cshape, cfg, mesh, batch=shape.global_batch)
+    b_shardable = shape.global_batch % _dp_size(mesh) == 0
+    tok_spec = bspec if b_shardable else P(None)
+
+    dp_axes = shd._default_dp_axes(mesh)
+
+    def serve_step(params, token, caches, index, enc_out=None):
+      with hints.activation_sharding(mesh, dp_axes):
+        logits, new_caches = T.decode_step(
+            params, cfg, token, caches, index, enc_out=enc_out,
+            window_override=window_override)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_caches
+
+    arg_shapes = {
+        "params": pshape,
+        "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "caches": cshape,
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    in_specs = {
+        "params": pspecs, "token": tok_spec, "caches": cspecs, "index": P(),
+    }
+    out_specs = (tok_spec, cspecs)
+    if cfg.is_encoder_decoder:
+        arg_shapes["enc_out"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_audio_frames, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+        in_specs["enc_out"] = P(bspec[0] if b_shardable else None, None, None)
+    return serve_step, in_specs, out_specs, arg_shapes
+
+
+def shd_to(spec_tree, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_size(mesh: Mesh) -> int:
+    size = mesh.shape["data"]
+    if "pod" in mesh.shape:
+        size *= mesh.shape["pod"]
+    return size
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """long_500k: full-attention archs run the sliding-window variant
+    (window 4096); natively sub-quadratic mixers are untouched."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        if cfg.sliding_window:
+            return cfg.sliding_window
+        return 4096
+    return None

@@ -1,0 +1,180 @@
+"""Activation-sharding hints.
+
+``with_sharding_constraint`` calls scattered through the model, active only
+when a hint context is installed (by the step builders) — model code stays
+mesh-agnostic and runs unsharded on CPU tests.
+
+Hints pin the two decisions XLA's SPMD propagation most often gets wrong at
+scale: (1) batch stays on the data axes through every residual-stream
+tensor, (2) the head axis of q/k/v lands on 'model' (falling back to the
+feature axis when heads don't divide it).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, dp_axes: Tuple[str, ...]):
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, tuple(dp_axes))
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def _state():
+    return getattr(_CTX, "state", None)
+
+
+def _constrain(x, spec: P):
+    st = _state()
+    if st is None:
+        return x
+    mesh, _ = st
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except Exception:
+        return x
+
+
+def _dp_for(dim: int) -> Optional[Tuple[str, ...]]:
+    st = _state()
+    if st is None:
+        return None
+    mesh, dp = st
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return dp if dim % size == 0 and dim >= size else None
+
+
+def _model_ok(dim: int) -> bool:
+    st = _state()
+    if st is None:
+        return False
+    mesh, _ = st
+    m = mesh.shape.get("model", 1)
+    return dim % m == 0 and dim >= m
+
+
+def residual(x):
+    """(B, T, d): batch on data axes, d replicated (residual stream)."""
+    if _state() is None:
+        return x
+    dp = _dp_for(x.shape[0])
+    return _constrain(x, P(dp, None, None))
+
+
+def heads(x):
+    """(B, T, H, D): batch on data, heads on model.
+
+    Fallback when heads don't divide the model axis: shard the QUERY
+    SEQUENCE dim (context parallelism), NOT head_dim — sharding D puts the
+    score contraction across 'model' and forces an all-reduce of the full
+    (B,H,Tq,chunk) score tensor on every KV chunk (measured 6.4 GB x 960
+    on starcoder2 prefill_32k; see EXPERIMENTS.md §Perf iteration 1).
+    Decode (T==1) keeps the D fallback — a one-token all-reduce is cheap
+    and T cannot shard.
+    """
+    if _state() is None:
+        return x
+    dp = _dp_for(x.shape[0])
+    if _model_ok(x.shape[2]):
+        return _constrain(x, P(dp, None, "model", None))
+    if x.shape[1] > 1 and _model_ok(x.shape[1]):
+        return _constrain(x, P(dp, "model", None, None))
+    # decode (T==1): D fallback. A/B'd against S-sharded cache +
+    # replicated q — identical collective cost (XLA reshards to its
+    # preferred H@8 partial sharding either way; eliminating the residual
+    # 8x1.07 GB gathers needs an 8-way mesh axis or padded heads).
+    if _model_ok(x.shape[3]):
+        return _constrain(x, P(dp, None, None, "model"))
+    return _constrain(x, P(dp, None, None, None))
+
+
+def kv_heads(x):
+    """(B, T, Hkv, D) keys/values: H on model if divisible, else REPLICATED.
+
+    The q-side fallbacks don't transfer: T-sharding k/v under context-
+    parallel q makes every q-chunk re-gather keys per scan step (measured
+    2x train collectives on chameleon/qwen3 whose kv=8 < 16), and
+    D-sharding puts the score contraction across 'model' (iteration 1).
+    Replicated kv is cheap — GQA kv heads are small by design.
+    """
+    if _state() is None:
+        return x
+    dp = _dp_for(x.shape[0])
+    if _model_ok(x.shape[2]):
+        return _constrain(x, P(dp, None, "model", None))
+    return _constrain(x, P(dp, None, None, None))
+
+
+def ffn_hidden(x):
+    """(B, T, d_ff): the column-parallel intermediate — d_ff on model."""
+    if _state() is None:
+        return x
+    dp = _dp_for(x.shape[0])
+    if _model_ok(x.shape[-1]):
+        return _constrain(x, P(dp, None, "model"))
+    return _constrain(x, P(dp, None, None))
+
+
+def logits(x):
+    """(B, T, V) or (B, V): vocab on model."""
+    if _state() is None:
+        return x
+    dp = _dp_for(x.shape[0])
+    spec = [dp] + [None] * (x.ndim - 1)
+    if _model_ok(x.shape[-1]):
+        spec[-1] = "model"
+    return _constrain(x, P(*spec))
+
+
+def expert_buffer(x):
+    """(E, C, d): expert-parallel dispatch buffer — E on model.
+
+    (Iteration-2 note: sharding C over the data axes was tried and
+    REFUTED — XLA adds dp<->model reshards of the buffers, +20%
+    collective bytes on deepseek train_4k. See §Perf.)
+    """
+    if _state() is None:
+        return x
+    if _model_ok(x.shape[0]):
+        return _constrain(x, P("model", None, None))
+    return x
+
+
+def expert_buffer_bucketed(x):
+    """(S_dp, E, C_loc, d): source-shard-major dispatch buffer.
+
+    Dim 0 is the token's data shard (tokens are contiguous per dp shard
+    under batch sharding), so the scatter that fills the buffer is LOCAL
+    to each data shard; the subsequent (S_dp@data, E@model) -> expert-major
+    exchange is the all-to-all, sized tokens*k*d instead of a full-buffer
+    all-reduce.
+    """
+    if _state() is None:
+        return x
+    dp = _dp_for(x.shape[0])
+    espec = "model" if _model_ok(x.shape[1]) else None
+    return _constrain(x, P(dp, espec, None, None))
+
+
+def dp_size() -> int:
+    st = _state()
+    if st is None:
+        return 1
+    mesh, dp = st
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return size

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+  vq_nn           MXU-tiled codebook nearest-neighbour (OCTOPUS hot spot)
+  flash_attention online-softmax attention for 32k prefill
+  rmsnorm         fused norm
+  selective_scan  fused Mamba recurrence + output (the §Perf-4 memory fix
+                  taken to its VMEM-resident conclusion)
+
+Use via ``repro.kernels.ops``; oracles in ``repro.kernels.ref``.
+"""
+from . import ops, ref

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+Schedule: grid (B*H, Tq/BLOCK_Q, Tk/BLOCK_K) with the KV axis minor; the
+(m, l, acc) carry lives in VMEM scratch across KV steps. Causal/window
+masking prunes nothing at grid level (simplicity > skipping) but masks in
+VREGs; the matmuls (q k^T and p v) hit the MXU with (128, 128) tiles.
+
+This kernel is the TPU twin of ``repro.nn.attention._attend_chunked`` (same
+math, same masking semantics), which serves as its lowering-anywhere oracle
+alongside ``ref.flash_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q, block_k, causal, window, sm_scale, seq_k):
+    qstep = pl.program_id(1)
+    kstep = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (Bq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (Bk, D)
+    v = v_ref[0].astype(jnp.float32)                     # (Bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Bq, Bk)
+
+    qpos = qstep * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = kstep * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kstep == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                           interpret: bool = False):
+    """q,k,v: (B, T, H, D) -> (B, T, H, D). GQA repeat happens in ops.py."""
+    B, Tq, H, D = q.shape
+    Tk = k.shape[1]
+    sm_scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+    pad_q = (-Tq) % block_q
+    pad_k = (-Tk) % block_k
+
+    def bh(t):     # (B, T, H, D) -> (B*H, T, D)
+        return t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], D)
+
+    qh, kh, vh = bh(q), bh(k), bh(v)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+    Tqp, Tkp = Tq + pad_q, Tk + pad_k
+
+    grid = (B * H, Tqp // block_q, Tkp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          causal=causal, window=window, sm_scale=sm_scale,
+                          seq_k=Tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out[:, :Tq].reshape(B, H, Tq, D).transpose(0, 2, 1, 3)
+    return out

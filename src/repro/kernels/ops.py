@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run with interpret=True; on TPU they
+compile natively. ``INTERPRET`` flips automatically from the backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .rmsnorm import rmsnorm_pallas
+from .selective_scan import selective_scan_pallas
+from .vq_nn import vq_nearest_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def vq_nearest(z, codebook, **kw):
+    """(N, M), (K, M) -> (N,) int32 nearest codebook atom per row."""
+    kw.setdefault("interpret", INTERPRET)
+    return vq_nearest_pallas(z, codebook, **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    """(B,T,Hq,D) with GQA k/v (B,T,Hkv,D): repeat kv then run the kernel."""
+    kw.setdefault("interpret", INTERPRET)
+    q_per_kv = q.shape[2] // k.shape[2]
+    if q_per_kv > 1:
+        k = jnp.repeat(k, q_per_kv, axis=2)
+        v = jnp.repeat(v, q_per_kv, axis=2)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window, **kw)
+
+
+def rmsnorm(x, scale, *, eps=1e-6, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return rmsnorm_pallas(x, scale, eps=eps, **kw)
+
+
+def selective_scan(decay, inp, c, h0, **kw):
+    """Fused Mamba recurrence + output contraction (see selective_scan.py)."""
+    kw.setdefault("interpret", INTERPRET)
+    return selective_scan_pallas(decay, inp, c, h0, **kw)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert_allclose against
+these across shape/dtype sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vq_nearest_ref(z, codebook):
+    """(N, M), (K, M) -> (N,) int32. Brute-force pairwise L2 argmin."""
+    z = z.astype(jnp.float32)
+    e = codebook.astype(jnp.float32)
+    d = (jnp.sum(z * z, -1, keepdims=True)
+         - 2.0 * z @ e.T
+         + jnp.sum(e * e, -1)[None, :])
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """(B, T, H, D) x3 -> (B, T, H, D). Materialised softmax attention."""
+    B, Tq, H, D = q.shape
+    Tk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(D, jnp.float32))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def selective_scan_ref(decay, inp, c, h0):
+    """Naive sequential reference: h_t = d_t h_{t-1} + i_t; y_t = <h_t, c_t>.
+
+    decay/inp (B,T,di,N); c (B,T,N); h0 (B,di,N) -> (y (B,T,di), h_last).
+    """
+    def step(h, xs):
+        d, i, ct = xs
+        h = d * h + i
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    d = jnp.moveaxis(decay.astype(jnp.float32), 1, 0)
+    i = jnp.moveaxis(inp.astype(jnp.float32), 1, 0)
+    ct = jnp.moveaxis(c.astype(jnp.float32), 1, 0)
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), (d, i, ct))
+    return jnp.moveaxis(ys, 0, 1), h_last

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused RMSNorm.
+
+Row-blocked over tokens; the full feature dim sits in VMEM (d_model <= 8192
+=> 32 KB/row fp32, well within the ~16 MB VMEM at our block sizes). Fusing
+the mean-square reduction with the scale multiply keeps the activation from
+round-tripping to HBM between the two passes XLA would otherwise emit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)                  # (rows, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)[None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_pallas(x, scale, *, eps: float = 1e-6,
+                   block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """x: (..., d); scale: (d,)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    N = xf.shape[0]
+    block_rows = min(block_rows, N)
+    pad = (-N) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    grid = ((N + pad) // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N + pad, d), x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    return out[:N].reshape(orig_shape)

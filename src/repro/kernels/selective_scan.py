@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused selective scan (Mamba recurrence + output).
+
+    h_t = decay_t * h_{t-1} + inp_t          (B, T, di, N)
+    y_t = <h_t, C_t>_N                        -> (B, T, di)
+
+§Perf iteration 4 showed the JAX chunked formulation still writes one
+(B, chunk, di, N) block per scan step to HBM (plus associative-scan
+internals). This kernel keeps the running state h (BLOCK_DI, N) entirely
+in VMEM scratch and streams decay/inp/C chunks through, writing ONLY the
+(chunk, BLOCK_DI) y output — HBM traffic drops from O(T*di*N) state
+blocks to the O(T*(2*di*N)) input reads + O(T*di) output writes that are
+information-theoretically required.
+
+Grid: (B, di/BLOCK_DI, T/CHUNK) with time minor (sequential carry in
+scratch). Within a chunk the recurrence is a fori_loop over time steps —
+the (BLOCK_DI, N) elementwise update maps onto the VPU; N=16 and
+BLOCK_DI=512 give (512,16) VREG-aligned tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_DI = 512
+CHUNK_T = 128
+
+
+def _selscan_kernel(decay_ref, inp_ref, c_ref, h0_ref, y_ref, hlast_ref,
+                    h_scr, *, chunk_t, seq_len):
+    """One (batch, di-block, t-chunk) tile.
+
+    decay/inp: (1, chunk_t, BLOCK_DI, N); c: (1, chunk_t, N);
+    h0: (1, BLOCK_DI, N); y: (1, chunk_t, BLOCK_DI);
+    hlast: (1, BLOCK_DI, N); h_scr: VMEM (BLOCK_DI, N) carry.
+    """
+    tstep = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(tstep == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    d = decay_ref[0].astype(jnp.float32)      # (chunk, di_blk, N)
+    i = inp_ref[0].astype(jnp.float32)
+    c = c_ref[0].astype(jnp.float32)          # (chunk, N)
+
+    def step(t, carry):
+        h = carry
+        h = d[t] * h + i[t]                   # (di_blk, N)
+        y_ref[0, t, :] = jnp.sum(h * c[t][None, :], axis=-1).astype(
+            y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk_t, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(tstep == nt - 1)
+    def _done():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_di", "chunk_t",
+                                             "interpret"))
+def selective_scan_pallas(decay, inp, c, h0, *, block_di: int = BLOCK_DI,
+                          chunk_t: int = CHUNK_T, interpret: bool = False):
+    """decay/inp: (B, T, di, N); c: (B, T, N); h0: (B, di, N).
+
+    Returns (y (B, T, di) float32, h_last (B, di, N) float32).
+    """
+    B, T, di, N = decay.shape
+    block_di = min(block_di, di)
+    chunk_t = min(chunk_t, T)
+    pad_di = (-di) % block_di
+    pad_t = (-T) % chunk_t
+    if pad_di:
+        decay = jnp.pad(decay, ((0, 0), (0, 0), (0, pad_di), (0, 0)),
+                        constant_values=1.0)
+        inp = jnp.pad(inp, ((0, 0), (0, 0), (0, pad_di), (0, 0)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_di), (0, 0)))
+    if pad_t:
+        decay = jnp.pad(decay, ((0, 0), (0, pad_t), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        inp = jnp.pad(inp, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad_t), (0, 0)))
+    Tp, dip = T + pad_t, di + pad_di
+
+    grid = (B, dip // block_di, Tp // chunk_t)
+    y, hlast = pl.pallas_call(
+        functools.partial(_selscan_kernel, chunk_t=chunk_t, seq_len=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk_t, block_di, N),
+                         lambda b, di_, t: (b, t, di_, 0)),
+            pl.BlockSpec((1, chunk_t, block_di, N),
+                         lambda b, di_, t: (b, t, di_, 0)),
+            pl.BlockSpec((1, chunk_t, N), lambda b, di_, t: (b, t, 0)),
+            pl.BlockSpec((1, block_di, N), lambda b, di_, t: (b, di_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk_t, block_di),
+                         lambda b, di_, t: (b, t, di_)),
+            pl.BlockSpec((1, block_di, N), lambda b, di_, t: (b, di_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tp, dip), jnp.float32),
+            jax.ShapeDtypeStruct((B, dip, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_di, N), jnp.float32)],
+        interpret=interpret,
+    )(decay, inp, c, h0)
+    return y[:, :T, :di], hlast[:, :di]

@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST run before any jax import (device count locks at
+first init); that is why they precede the module docstring's imports.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Outputs one JSON per combo with memory analysis, cost analysis, collective
+byte counts, and the three roofline terms (single-pod numbers feed
+EXPERIMENTS.md §Roofline).
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, ARCH_IDS, get_config
+from repro.distributed import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RA
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               dtype: str = "bfloat16", verbose: bool = True,
+               hlo_out: str = ""):
+    """Lower+compile one combo; returns (report_dict, compiled)."""
+    from repro.configs.base import TrainConfig
+    cfg = get_config(arch).replace(dtype=dtype, param_dtype=dtype)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    window = S.decode_window(cfg, shape)
+
+    t0 = time.time()
+    with mesh:
+        if shape.mode == "train":
+            fn, in_specs, out_specs, arg_shapes = S.build_train_step(
+                cfg, TrainConfig(), mesh, shape)
+            jfn = jax.jit(fn,
+                          in_shardings=S.shd_to(in_specs, mesh),
+                          out_shardings=S.shd_to(out_specs, mesh),
+                          donate_argnums=(0,))
+            lowered = jfn.lower(*arg_shapes)
+        elif shape.mode == "prefill":
+            fn, in_specs, out_specs, arg_shapes = S.build_prefill_step(
+                cfg, mesh, shape, window_override=window)
+            jfn = jax.jit(fn,
+                          in_shardings=S.shd_to(in_specs, mesh),
+                          out_shardings=S.shd_to(out_specs, mesh))
+            lowered = jfn.lower(*arg_shapes)
+        else:  # decode
+            fn, in_specs, out_specs, arg_shapes = S.build_serve_step(
+                cfg, mesh, shape, window_override=window)
+            jfn = jax.jit(fn,
+                          in_shardings=(S.shd_to(in_specs["params"], mesh),
+                                        S.shd_to(in_specs["token"], mesh),
+                                        S.shd_to(in_specs["caches"], mesh),
+                                        S.shd_to(in_specs["index"], mesh))
+                          + ((S.shd_to(in_specs["enc_out"], mesh),)
+                             if "enc_out" in in_specs else ()),
+                          out_shardings=S.shd_to(out_specs, mesh),
+                          donate_argnums=(2,))
+            args = [arg_shapes["params"], arg_shapes["token"],
+                    arg_shapes["caches"], arg_shapes["index"]]
+            if "enc_out" in arg_shapes:
+                args.append(arg_shapes["enc_out"])
+            lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    if hlo_out:
+        with gzip.open(hlo_out, "wt") as f:
+            f.write(hlo_text)
+    rep = RA.analyze(compiled, None, arch=arch, shape_name=shape_name,
+                     mesh_name=mesh_name, chips=chips, cfg=cfg, shape=shape,
+                     hlo_text=hlo_text)
+    d = rep.to_dict()
+    d.update({
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "mode": shape.mode, "window_override": window,
+        "memory_analysis": {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")},
+    })
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+              f"bottleneck={rep.bottleneck}, "
+              f"HBM/dev={rep.per_device_hbm_bytes/1e9:.2f} GB)")
+        print("  memory_analysis:", d["memory_analysis"])
+        print("  cost: flops=%.3e bytes=%.3e coll=%.3e" %
+              (rep.hlo_flops, rep.hlo_bytes, rep.collective_bytes))
+    return d, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    from repro.configs.registry import ALIASES
+    ap.add_argument("--arch", choices=sorted(list(ARCH_IDS) + list(ALIASES)))
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all 40 combos on the single-pod mesh")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="re-derive JSONs from cached .hlo.gz (no compile)")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        from repro.configs import INPUT_SHAPES as SHAPES, get_config as gc
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        chips = 512 if args.multi_pod else 256
+        n = 0
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                hlo_path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_tag}.hlo.gz")
+                json_path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_tag}.json")
+                if not os.path.exists(hlo_path):
+                    continue
+                with gzip.open(hlo_path, "rt") as f:
+                    text = f.read()
+                cfg = gc(arch).replace(dtype=args.dtype,
+                                       param_dtype=args.dtype)
+                rep = RA.analyze(None, None, arch=arch,
+                                 shape_name=shape_name, mesh_name=mesh_tag,
+                                 chips=chips, cfg=cfg,
+                                 shape=SHAPES[shape_name], hlo_text=text)
+                d = rep.to_dict()
+                if os.path.exists(json_path):
+                    with open(json_path) as fj:
+                        old = json.load(fj)
+                    for k in ("lower_s", "compile_s", "mode",
+                              "window_override", "memory_analysis"):
+                        if k in old:
+                            d[k] = old[k]
+                    d["per_device_hbm_bytes"] = old.get(
+                        "per_device_hbm_bytes", d["per_device_hbm_bytes"])
+                with open(json_path, "w") as fj:
+                    json.dump(d, fj, indent=2)
+                n += 1
+        print(f"reanalyzed {n} combos for mesh {mesh_tag}")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    if args.all:
+        combos = [(a, s, args.multi_pod) for a in ARCH_IDS
+                  for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = []
+    for arch, shape_name, mp in combos:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        out_path = os.path.join(
+            args.out, f"{arch}__{shape_name}__{mesh_tag}.json")
+        hlo_path = os.path.join(
+            args.out, f"{arch}__{shape_name}__{mesh_tag}.hlo.gz")
+        try:
+            d, _ = dryrun_one(arch, shape_name, multi_pod=mp,
+                              dtype=args.dtype, hlo_out=hlo_path)
+            with open(out_path, "w") as f:
+                json.dump(d, f, indent=2)
+        except Exception as e:
+            failures.append((arch, shape_name, mesh_tag, repr(e)))
+            print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_tag}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(combos)} combos lowered+compiled OK")
+
+
+if __name__ == "__main__":
+    main()

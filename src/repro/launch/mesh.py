@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Target hardware: TPU v5e pods, 256 chips/pod.
+  single-pod:  (data=16, model=16)
+  multi-pod:   (pod=2, data=16, model=16) = 512 chips
+
+Functions, never module-level constants — importing this module must not
+touch jax device state (device count is locked at first jax init, and the
+dry-run needs to set XLA_FLAGS before that).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model_parallel: int = 1):
+    """Mesh over whatever devices exist (CPU tests / local runs)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

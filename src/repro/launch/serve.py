@@ -1,0 +1,72 @@
+"""Batched serving driver: prefill a prompt batch, then greedy-decode with
+the production serve_step (KV caches / recurrent state).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data import make_tokens
+from repro.distributed import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    mesh = make_host_mesh()
+    max_len = args.prompt_len + args.gen
+    shape = ShapeConfig("serve", max_len, args.batch, "decode")
+    fn, in_specs, out_specs, _ = S.build_serve_step(cfg, mesh, shape)
+
+    with mesh:
+        params = T.init_lm(key, cfg)
+        prompts = make_tokens(key, args.batch, args.prompt_len,
+                              cfg.vocab_size)
+        enc = None
+        if cfg.is_encoder_decoder:
+            frames = jax.random.normal(
+                key, (args.batch, cfg.n_audio_frames, cfg.d_model))
+            enc = T.encode_audio(params, cfg, frames)
+
+        caches = T.init_caches(cfg, args.batch, max_len)
+        jstep = jax.jit(fn, donate_argnums=(2,))
+
+        # prefill token-by-token through the serve step (exactly the decode
+        # path the dry-run lowers; production prefill uses build_prefill_step)
+        t0 = time.time()
+        tok = prompts[:, :1]
+        out_tokens = [tok]
+        for t in range(max_len - 1):
+            nxt, caches = jstep(params, tok, caches, jnp.int32(t),
+                                *([] if enc is None else [enc]))
+            tok = prompts[:, t + 1:t + 2] if t + 1 < args.prompt_len else nxt
+            out_tokens.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        seqs = jnp.concatenate(out_tokens, axis=1)
+        print(f"arch={cfg.name} generated {args.batch}x{args.gen} tokens "
+              f"in {dt:.2f}s ({args.batch * max_len / dt:.1f} tok/s)")
+        print("first sequence:", seqs[0, :48].tolist())
+
+
+if __name__ == "__main__":
+    main()

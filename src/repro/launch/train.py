@@ -1,0 +1,93 @@
+"""End-to-end training driver.
+
+Runs on whatever devices exist (CPU in this container, TPU mesh in
+production — same code path, the mesh adapts). Example:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --smoke --steps 50 --batch 8 --seq 128
+
+``--smoke`` uses the reduced config; omit it on real hardware to train the
+full assigned config.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore, save
+from repro.configs import INPUT_SHAPES, TrainConfig, get_config, smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data import make_tokens
+from repro.distributed import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 10))
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    mesh = make_host_mesh()
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    step_fn, in_specs, out_specs, _ = S.build_train_step(cfg, tcfg, mesh,
+                                                         shape)
+    key = jax.random.PRNGKey(args.seed)
+    with mesh:
+        params = T.init_lm(key, cfg)
+        state = S.TrainState(params=params, opt=adamw_init(params),
+                             step=jnp.zeros((), jnp.int32))
+        if args.ckpt_dir:
+            restored, at = restore(args.ckpt_dir, state)
+            if restored is not None:
+                state = restored
+                print(f"restored checkpoint at step {at}")
+
+        jstep = jax.jit(step_fn, in_shardings=S.shd_to(in_specs, mesh),
+                        out_shardings=S.shd_to(out_specs, mesh))
+
+        data_key = jax.random.fold_in(key, 1)
+        t0 = time.time()
+        for i in range(args.steps):
+            tokens = make_tokens(jax.random.fold_in(data_key, i),
+                                 args.batch, args.seq, cfg.vocab_size)
+            batch = {"tokens": tokens}
+            if cfg.is_encoder_decoder:
+                batch["frames"] = jax.random.normal(
+                    jax.random.fold_in(data_key, 10_000 + i),
+                    (args.batch, cfg.n_audio_frames, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+            state, loss = jstep(state, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                jax.block_until_ready(loss)
+                dt = time.time() - t0
+                tok_s = args.batch * args.seq * (i + 1) / dt
+                print(f"step {i:5d} loss {float(loss):.4f} "
+                      f"({tok_s:,.0f} tok/s)")
+            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                save(args.ckpt_dir, i + 1, state,
+                     metadata={"arch": cfg.name})
+        print(f"done in {time.time()-t0:.1f}s; final loss {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

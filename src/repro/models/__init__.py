@@ -1,0 +1,3 @@
+from . import transformer
+from .transformer import (decode_step, encode_audio, forward, init_caches,
+                          init_lm, lm_loss, prefill, segment_plan)

@@ -1,0 +1,337 @@
+"""Unified decoder-LM assembly for every assigned architecture.
+
+A model is a sequence of blocks; each block = (mixer, ffn) picked per layer
+by ``cfg.layer_kinds()`` (attn / mla / mamba / mlstm / slstm x dense / moe /
+none). Layers are grouped into maximal *homogeneous segments*; each segment
+stacks its params along a leading axis and runs under ``jax.lax.scan`` —
+this keeps HLO size O(#segments), not O(#layers), which matters when
+lowering 61-layer DeepSeek-V3 on a 512-device mesh. Training remats each
+scanned block body.
+
+Decode carries a per-segment stacked cache pytree; one ``decode_step`` is a
+single-token pass updating every layer's cache functionally.
+
+Encoder-decoder (Whisper backbone) adds a non-causal encoder over stub
+frame embeddings and cross-attention in each decoder block. Early-fusion
+VLM (Chameleon) is a plain decoder whose vocab already contains image VQ
+codes — the modality frontend is a stub by assignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import hints
+from repro.configs.base import ModelConfig
+from repro.nn import attention as attn_mod
+from repro.nn import mla as mla_mod
+from repro.nn import moe as moe_mod
+from repro.nn import ssm as ssm_mod
+from repro.nn import xlstm as xlstm_mod
+from repro.nn.attention import KVCache, attention, cross_attention, init_attention, init_cache, init_cross_attention
+from repro.nn.layers import apply_norm, embed_init, init_mlp, init_norm, mlp
+
+
+# ----------------------------------------------------------------- segments
+
+def segment_plan(cfg: ModelConfig) -> Tuple[Tuple[str, str, int], ...]:
+    """Maximal runs of identical (mixer, ffn) layer signatures."""
+    runs = []
+    for mixer, ffn in cfg.layer_kinds():
+        if runs and runs[-1][0] == mixer and runs[-1][1] == ffn:
+            runs[-1][2] += 1
+        else:
+            runs.append([mixer, ffn, 1])
+    return tuple((m, f, n) for m, f, n in runs)
+
+
+def _init_mixer(key, cfg, mixer, dtype):
+    if mixer == "attn":
+        return init_attention(key, cfg, dtype)
+    if mixer == "mla":
+        return mla_mod.init_mla(key, cfg, dtype)
+    if mixer == "mamba":
+        return ssm_mod.init_mamba(key, cfg, dtype)
+    if mixer == "mlstm":
+        return xlstm_mod.init_mlstm(key, cfg, dtype)
+    if mixer == "slstm":
+        return xlstm_mod.init_slstm(key, cfg, dtype)
+    raise ValueError(mixer)
+
+
+def _init_ffn(key, cfg, ffn, dtype):
+    if ffn == "dense":
+        return init_mlp(key, cfg.d_model, cfg.d_ff, dtype)
+    if ffn == "moe":
+        return moe_mod.init_moe(key, cfg, dtype)
+    if ffn == "none":
+        return {}
+    raise ValueError(ffn)
+
+
+def _init_block(key, cfg, mixer, ffn, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "pre_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "mixer": _init_mixer(k1, cfg, mixer, dtype),
+    }
+    if ffn != "none":
+        p["post_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        p["ffn"] = _init_ffn(k2, cfg, ffn, dtype)
+    if cfg.is_encoder_decoder:
+        k3, k4 = jax.random.split(jax.random.fold_in(key, 7))
+        p["cross_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = init_cross_attention(k3, cfg, dtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ModelConfig, dtype=None):
+    """Full parameter pytree. Segments hold layer-stacked params."""
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    params: dict = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(keys[1], cfg.vocab_size, cfg.d_model,
+                                    dtype).T
+    li = 0
+    segments = []
+    for mixer, ffn, n in segment_plan(cfg):
+        blocks = [_init_block(keys[2 + li + j], cfg, mixer, ffn, dtype)
+                  for j in range(n)]
+        segments.append(_stack(blocks))
+        li += n
+    params["segments"] = segments
+
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(keys[-1], cfg.n_encoder_layers + 1)
+        enc_blocks = []
+        for j in range(cfg.n_encoder_layers):
+            k1, k2 = jax.random.split(enc_keys[j])
+            enc_blocks.append({
+                "pre_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+                "mixer": init_attention(k1, cfg, dtype),
+                "post_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+                "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+            })
+        params["encoder"] = _stack(enc_blocks)
+        params["enc_final_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+
+    if cfg.use_mtp:
+        km = jax.random.fold_in(keys[-1], 99)
+        k1, k2 = jax.random.split(km)
+        params["mtp"] = {
+            "proj": embed_init(k1, 2 * cfg.d_model, cfg.d_model, dtype),
+            "block": _init_block(k2, cfg, "attn", "dense", dtype),
+            "norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        }
+    return params
+
+
+# ------------------------------------------------------------------- blocks
+
+def _apply_mixer(bp, cfg, mixer, x, positions, cache, cache_index,
+                 window_override):
+    if mixer == "attn":
+        return attention(bp["mixer"], cfg, x, positions, cache=cache,
+                         cache_index=cache_index,
+                         window_override=window_override)
+    if mixer == "mla":
+        return mla_mod.mla_attention(bp["mixer"], cfg, x, positions,
+                                     cache=cache, cache_index=cache_index)
+    if mixer == "mamba":
+        return ssm_mod.mamba(bp["mixer"], cfg, x, cache=cache,
+                             cache_index=cache_index)
+    if mixer == "mlstm":
+        return xlstm_mod.mlstm(bp["mixer"], cfg, x, cache=cache,
+                               cache_index=cache_index)
+    if mixer == "slstm":
+        return xlstm_mod.slstm(bp["mixer"], cfg, x, cache=cache,
+                               cache_index=cache_index)
+    raise ValueError(mixer)
+
+
+def _apply_block(bp, cfg, mixer, ffn, x, positions, *, cache=None,
+                 cache_index=None, enc_out=None, window_override=None):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    h = apply_norm(cfg.norm, bp["pre_norm"], x, cfg.norm_eps)
+    mix, new_cache = _apply_mixer(bp, cfg, mixer, h, positions, cache,
+                                  cache_index, window_override)
+    x = x + mix
+    if cfg.is_encoder_decoder and enc_out is not None:
+        h = apply_norm(cfg.norm, bp["cross_norm"], x, cfg.norm_eps)
+        x = x + cross_attention(bp["cross"], cfg, h, enc_out)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "dense":
+        h = apply_norm(cfg.norm, bp["post_norm"], x, cfg.norm_eps)
+        x = x + mlp(bp["ffn"], h, cfg.activation)
+    elif ffn == "moe":
+        h = apply_norm(cfg.norm, bp["post_norm"], x, cfg.norm_eps)
+        out = moe_mod.moe_apply(bp["ffn"], cfg, h, activation=cfg.activation)
+        x = x + out.y
+        aux = out.aux_loss
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------------ forward
+
+class LMOut(NamedTuple):
+    logits: jax.Array
+    aux_loss: jax.Array
+    hidden: jax.Array
+
+
+def _run_segments(params, cfg, x, positions, *, caches=None, cache_index=None,
+                  enc_out=None, remat=False, window_override=None):
+    """Scan each homogeneous segment. caches: per-segment stacked pytrees."""
+    plan = segment_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, (mixer, ffn, n) in enumerate(plan):
+        seg_params = params["segments"][si]
+        seg_cache = None if caches is None else caches[si]
+
+        def body(carry, layer_in):
+            xc, aux = carry
+            bp, lc = layer_in
+            xc, nc, a = _apply_block(
+                bp, cfg, mixer, ffn, xc, positions, cache=lc,
+                cache_index=cache_index, enc_out=enc_out,
+                window_override=window_override)
+            return (hints.residual(xc), aux + a), nc
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), seg_new_cache = jax.lax.scan(
+            body_fn, (x, aux_total), (seg_params, seg_cache))
+        new_caches.append(seg_new_cache)
+    return x, aux_total, (new_caches if caches is not None else None)
+
+
+def encode_audio(params, cfg: ModelConfig, frames):
+    """Whisper encoder over stub frame embeddings (B, n_frames, d)."""
+    x = frames
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    # encoder is non-causal: full attention without a mask
+    def body_noncausal(xc, bp):
+        h = apply_norm(cfg.norm, bp["pre_norm"], xc, cfg.norm_eps)
+        B, T, _ = h.shape
+        hd = cfg.resolved_head_dim
+        q = (h @ bp["mixer"]["wq"]).reshape(B, T, cfg.n_heads, hd)
+        k = (h @ bp["mixer"]["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+        v = (h @ bp["mixer"]["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+        q = attn_mod.apply_rope(q, pos, cfg.rope_theta)
+        k = attn_mod.apply_rope(k, pos, cfg.rope_theta)
+        o = attn_mod.attend(q, k, v, causal=False, force_chunked=False)
+        xc = xc + o.reshape(B, T, cfg.n_heads * hd) @ bp["mixer"]["wo"]
+        hh = apply_norm(cfg.norm, bp["post_norm"], xc, cfg.norm_eps)
+        return xc + mlp(bp["ffn"], hh, cfg.activation), None
+
+    x, _ = jax.lax.scan(body_noncausal, x, params["encoder"])
+    return apply_norm(cfg.norm, params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, enc_out=None, remat=False,
+            window_override=None) -> LMOut:
+    """Teacher-forced forward. tokens: (B, T) int32 -> logits (B, T, V)."""
+    B, T = tokens.shape
+    x = hints.residual(params["embed"][tokens].astype(jnp.dtype(cfg.dtype)))
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x, aux, _ = _run_segments(params, cfg, x, positions, enc_out=enc_out,
+                              remat=remat, window_override=window_override)
+    hidden = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(params, cfg, hidden)
+    return LMOut(logits=logits, aux_loss=aux, hidden=hidden)
+
+
+def _lm_head(params, cfg, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = hints.logits(hidden @ w)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, *, enc_out=None, remat=True,
+            window_override=None):
+    """Next-token cross-entropy (+ MoE aux + optional MTP)."""
+    out = forward(params, cfg, tokens, enc_out=enc_out, remat=remat,
+                  window_override=window_override)
+    logits = out.logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll) + out.aux_loss
+
+    if cfg.use_mtp:
+        # DeepSeek-V3 multi-token prediction: predict t+2 from (h_t, emb_{t+1})
+        h = out.hidden[:, :-2]
+        nxt = params["embed"][tokens[:, 1:-1]].astype(h.dtype)
+        z = jnp.concatenate([h, nxt], axis=-1) @ params["mtp"]["proj"]
+        pos = jnp.broadcast_to(jnp.arange(z.shape[1])[None], z.shape[:2])
+        z = _apply_block(params["mtp"]["block"], cfg, "attn", "dense",
+                         z, pos)[0]
+        z = apply_norm(cfg.norm, params["mtp"]["norm"], z, cfg.norm_eps)
+        mtp_logits = _lm_head(params, cfg, z).astype(jnp.float32)
+        t2 = tokens[:, 2:]
+        logp2 = jax.nn.log_softmax(mtp_logits)
+        nll2 = -jnp.take_along_axis(logp2, t2[..., None], axis=-1)[..., 0]
+        loss = loss + cfg.mtp_loss_weight * jnp.mean(nll2)
+    return loss
+
+
+# ------------------------------------------------------------------- decode
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    """Per-segment stacked caches for decode."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    caches = []
+    for mixer, ffn, n in segment_plan(cfg):
+        if mixer == "attn":
+            one = init_cache(cfg, batch, seq_len, dtype)
+        elif mixer == "mla":
+            one = mla_mod.init_mla_cache(cfg, batch, seq_len, dtype)
+        elif mixer == "mamba":
+            one = ssm_mod.init_mamba_cache(cfg, batch, dtype)
+        elif mixer == "mlstm":
+            one = xlstm_mod.init_mlstm_cache(cfg, batch, dtype)
+        elif mixer == "slstm":
+            one = xlstm_mod.init_slstm_cache(cfg, batch, dtype)
+        else:
+            raise ValueError(mixer)
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one))
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, index, *,
+                enc_out=None, window_override=None):
+    """One-token decode. token: (B, 1) int32; index: scalar int32 position.
+
+    Returns (logits (B, 1, V), new_caches).
+    """
+    B = token.shape[0]
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
+    x, _, new_caches = _run_segments(
+        params, cfg, x, positions, caches=caches, cache_index=index,
+        enc_out=enc_out, window_override=window_override)
+    hidden = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    return _lm_head(params, cfg, hidden), new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, enc_out=None,
+            window_override=None) -> LMOut:
+    """Prefill = teacher-forced forward without remat (inference)."""
+    return forward(params, cfg, tokens, enc_out=enc_out, remat=False,
+                   window_override=window_override)

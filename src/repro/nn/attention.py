@@ -1,0 +1,233 @@
+"""Attention: GQA/MQA/MHA with RoPE, qk-norm, sliding window, KV cache.
+
+Two compute paths:
+  * ``_attend_full``   — plain einsum softmax attention (short sequences).
+  * ``_attend_chunked``— KV-blockwise online-softmax (flash-attention
+    algorithm in pure JAX via ``lax.scan``), used when seq >= CHUNK_THRESHOLD
+    so 32k-prefill never materialises an S×S score tensor. The Pallas TPU
+    kernel (repro.kernels.flash_attention) implements the same schedule for
+    the MXU; this is its lowering-anywhere twin and numeric oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, init_rmsnorm, rmsnorm
+from repro import hints
+
+CHUNK_THRESHOLD = 8192
+KV_CHUNK = 1024
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (B, T, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- params
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, nq * hd, dtype),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": dense_init(ks[3], nq * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+# ---------------------------------------------------------------- cores
+
+def _repeat_kv(k, q_per_kv):
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _attend_full(q, k, v, *, causal, q_offset, window, kv_len_mask=None):
+    """q: (B,Tq,Hq,D) k,v: (B,Tk,Hkv,D) with Hq == Hkv (pre-repeated)."""
+    B, Tq, H, D = q.shape
+    Tk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.array(D, jnp.float32))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(Tq)[:, None]        # (Tq,1)
+    kpos = jnp.arange(Tk)[None, :]                   # (1,Tk)
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    if kv_len_mask is not None:                      # (B, Tk) valid-cache mask
+        scores = jnp.where(kv_len_mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _attend_chunked(q, k, v, *, causal, q_offset, window, kv_chunk=KV_CHUNK):
+    """Online-softmax over KV chunks; memory O(Tq * kv_chunk) not O(Tq*Tk).
+
+    Same math as flash attention: carry running (max, denom, weighted sum).
+    """
+    B, Tq, H, D = q.shape
+    Tk = k.shape[1]
+    Dk, Dv = k.shape[-1], v.shape[-1]      # MLA: k/v head dims differ from q
+    n_chunks = -(-Tk // kv_chunk)
+    pad = n_chunks * kv_chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, H, Dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(jnp.array(D, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(Tq)[:, None]
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, cidx = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32))
+        kpos = cidx * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = kpos < Tk
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    Dv = v.shape[-1]
+    m0 = jnp.full((B, H, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Tq), jnp.float32)
+    a0 = jnp.zeros((B, H, Tq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attend(q, k, v, *, causal=True, q_offset=0, window=0, kv_len_mask=None,
+           force_chunked: Optional[bool] = None):
+    """Dispatch full vs chunked attention. Inputs already RoPE'd/normed.
+
+    q: (B,Tq,Hq,D), k/v: (B,Tk,Hkv,D) — GQA repeat happens here.
+    """
+    q_per_kv = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, q_per_kv)
+    v = _repeat_kv(v, q_per_kv)
+    use_chunked = (q.shape[1] * k.shape[1] > CHUNK_THRESHOLD ** 2
+                   if force_chunked is None else force_chunked)
+    if use_chunked and kv_len_mask is None and q.shape[1] > 1:
+        return _attend_chunked(q, k, v, causal=causal, q_offset=q_offset,
+                               window=window)
+    return _attend_full(q, k, v, causal=causal, q_offset=q_offset,
+                        window=window, kv_len_mask=kv_len_mask)
+
+
+# ---------------------------------------------------------------- module
+
+class KVCache(NamedTuple):
+    k: jax.Array            # (B, S, n_kv, head_dim)
+    v: jax.Array
+    # position index is carried once per model, not per layer
+
+
+def attention(params, cfg, x, positions, *, cache: Optional[KVCache] = None,
+              cache_index=None, window_override: Optional[int] = None):
+    """Self-attention forward.
+
+    Train/prefill: ``cache is None`` -> returns (out, new_cache_or_None).
+    Decode: ``cache`` given, x is (B, 1, d); returns (out, updated_cache).
+    """
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    window = cfg.sliding_window if window_override is None else window_override
+    q = hints.heads((x @ params["wq"]).reshape(B, T, cfg.n_heads, hd))
+    k = hints.kv_heads((x @ params["wk"]).reshape(B, T, cfg.n_kv_heads, hd))
+    v = hints.kv_heads((x @ params["wv"]).reshape(B, T, cfg.n_kv_heads, hd))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = attend(q, k, v, causal=True, window=window)
+        new_cache = KVCache(k=k, v=v)
+    else:
+        S = cache.k.shape[1]
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+        kpos = jnp.arange(S)[None, :]
+        valid = kpos <= idx
+        if window:
+            valid &= kpos > idx - window
+        valid = jnp.broadcast_to(valid, (B, S))
+        out = attend(q, ck, cv, causal=False, kv_len_mask=valid,
+                     force_chunked=False)
+        new_cache = KVCache(k=ck, v=cv)
+    out = out.reshape(B, T, cfg.n_heads * hd) @ params["wo"]
+    return out, new_cache
+
+
+def init_cache(cfg, batch, seq_len, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    shape = (batch, seq_len, cfg.n_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# -------------------------------------------------- cross attention (whisper)
+
+def init_cross_attention(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def cross_attention(params, cfg, x, enc_out):
+    """x: (B, T, d) decoder states; enc_out: (B, Tsrc, d)."""
+    B, T, _ = x.shape
+    Ts = enc_out.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, T, cfg.n_heads, hd)
+    k = (enc_out @ params["wk"]).reshape(B, Ts, cfg.n_kv_heads, hd)
+    v = (enc_out @ params["wv"]).reshape(B, Ts, cfg.n_kv_heads, hd)
+    out = attend(q, k, v, causal=False, force_chunked=False)
+    return out.reshape(B, T, cfg.n_heads * hd) @ params["wo"]

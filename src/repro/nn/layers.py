@@ -1,0 +1,201 @@
+"""Base layers: functional, pytree-parameterised.
+
+Convention: every layer is an ``init_*(key, ...) -> params`` plus a pure
+``apply`` function. Params are nested dicts of jnp arrays so they pjit/scan
+cleanly; logical sharding is attached later by ``repro.distributed.sharding``
+based on param-path names, so names here are part of the sharding contract:
+
+  ``emb``      (vocab, d)          -> vocab-sharded
+  ``wq|wk|wv|wi|wg|w_up``          -> column-parallel (last dim on 'model')
+  ``wo|w_down``                    -> row-parallel (first dim on 'model')
+  ``experts/*``                    -> expert axis on 'model'
+  ``scale|bias``                   -> replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, name_scale: float = 1.0):
+    scale = name_scale / math.sqrt(d_in)
+    return uniform_init(key, (d_in, d_out), scale, dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ---------------------------------------------------------------- norms
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_norm(kind, d, dtype=jnp.float32):
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind, params, x, eps=1e-6):
+    return rmsnorm(params, x, eps) if kind == "rmsnorm" else layernorm(params, x, eps)
+
+
+def instance_norm_2d(x, gamma=None, beta=None, eps=1e-5):
+    """InstanceNorm over spatial dims of NHWC input (OCTOPUS Eq. 4).
+
+    Normalizes each (instance, channel) independently across H, W — the
+    paper's style-normalization/disentanglement primitive.
+    """
+    mu = jnp.mean(x, axis=(1, 2), keepdims=True)
+    sigma = jnp.sqrt(jnp.var(x, axis=(1, 2), keepdims=True) + eps)
+    out = (x - mu) / sigma
+    if gamma is not None:
+        out = out * gamma
+    if beta is not None:
+        out = out + beta
+    return out
+
+
+def instance_norm_1d(x, gamma=None, beta=None, eps=1e-5):
+    """InstanceNorm over the time dim of NTC input (speech path)."""
+    mu = jnp.mean(x, axis=1, keepdims=True)
+    sigma = jnp.sqrt(jnp.var(x, axis=1, keepdims=True) + eps)
+    out = (x - mu) / sigma
+    if gamma is not None:
+        out = out * gamma
+    if beta is not None:
+        out = out + beta
+    return out
+
+
+# ---------------------------------------------------------------- activations
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name}")
+
+
+# ---------------------------------------------------------------- gated MLP
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32):
+    """SwiGLU/GeGLU gated MLP: wi (gate), wg (up), wo (down)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "wg": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x, activation="silu"):
+    from repro import hints
+    a = act_fn(activation)
+    h = a(x @ params["wi"]) * (x @ params["wg"])
+    h = hints.ffn_hidden(h)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------- conv (DVQ-AE / frontends)
+
+def init_conv2d(key, c_in, c_out, ksize, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(c_in * ksize * ksize)
+    k1, k2 = jax.random.split(key)
+    return {
+        "kernel": uniform_init(k1, (ksize, ksize, c_in, c_out), scale, dtype),
+        "bias": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv2d(params, x, stride=1, padding="SAME"):
+    """NHWC conv."""
+    y = jax.lax.conv_general_dilated(
+        x, params["kernel"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["bias"]
+
+
+def init_conv2d_transpose(key, c_in, c_out, ksize, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(c_in * ksize * ksize)
+    k1, k2 = jax.random.split(key)
+    return {
+        "kernel": uniform_init(k1, (ksize, ksize, c_in, c_out), scale, dtype),
+        "bias": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv2d_transpose(params, x, stride=2, padding="SAME"):
+    y = jax.lax.conv_transpose(
+        x, params["kernel"], strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["bias"]
+
+
+def init_conv1d(key, c_in, c_out, ksize, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(c_in * ksize)
+    return {
+        "kernel": uniform_init(key, (ksize, c_in, c_out), scale, dtype),
+        "bias": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv1d(params, x, stride=1, padding="SAME"):
+    """NTC conv."""
+    y = jax.lax.conv_general_dilated(
+        x, params["kernel"], window_strides=(stride,), padding=padding,
+        dimension_numbers=("NHC", "HIO", "NHC"))
+    return y + params["bias"]
+
+
+def causal_conv1d(params, x):
+    """Causal depthwise-ish conv used by Mamba/mLSTM blocks.
+
+    x: (B, T, C); params['kernel']: (K, C) depthwise weights.
+    """
+    k = params["kernel"]          # (K, C)
+    K = k.shape[0]
+    xpad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # depthwise conv as feature-group conv
+    y = jax.lax.conv_general_dilated(
+        xpad, k[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1])
+    return y
+
+
+def init_causal_conv1d(key, channels, ksize, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(ksize)
+    return {"kernel": uniform_init(key, (ksize, channels), scale, dtype)}

@@ -1,0 +1,123 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, MiniCPM3).
+
+KV is compressed into a per-token latent ``c_kv`` of rank ``kv_lora_rank``
+plus a single shared RoPE key of ``qk_rope_head_dim``; the decode cache stores
+only ``(c_kv, k_rope)`` — this is the paper-family's KV-cache compression and
+maps naturally onto OCTOPUS-style latent transmission.
+
+Two attention paths:
+  * train/prefill — latents are expanded through ``wkv_b`` and fed to the
+    shared chunked/full attention core.
+  * decode — **absorbed** form: ``wkv_b`` is folded into the query/output
+    projections so attention runs directly in the rank-``kv_lora`` latent
+    space; the S-long cache is never expanded.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import apply_rope, attend
+from .layers import dense_init, init_rmsnorm, rmsnorm
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array          # (B, S, kv_lora_rank)
+    k_rope: jax.Array        # (B, S, qk_rope_head_dim)
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    m = cfg.mla
+    d, nq = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], d, m.q_lora_rank, dtype)
+        p["q_norm"] = init_rmsnorm(m.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(ks[1], m.q_lora_rank, nq * m.qk_head_dim, dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d, nq * m.qk_head_dim, dtype)
+    p["wkv_a"] = dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype)
+    p["kv_norm"] = init_rmsnorm(m.kv_lora_rank, dtype)
+    p["wkv_b"] = dense_init(
+        ks[3], m.kv_lora_rank, nq * (m.qk_nope_head_dim + m.v_head_dim), dtype)
+    p["wo"] = dense_init(ks[4], nq * m.v_head_dim, d, dtype)
+    return p
+
+
+def _queries(params, cfg, x):
+    m = cfg.mla
+    B, T, _ = x.shape
+    if m.q_lora_rank:
+        q = rmsnorm(params["q_norm"], x @ params["wq_a"]) @ params["wq_b"]
+    else:
+        q = x @ params["wq"]
+    from repro import hints
+    q = hints.heads(q.reshape(B, T, cfg.n_heads, m.qk_head_dim))
+    return q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def _latents(params, cfg, x, positions):
+    m = cfg.mla
+    ckr = x @ params["wkv_a"]
+    c_kv = rmsnorm(params["kv_norm"], ckr[..., : m.kv_lora_rank])
+    k_rope = ckr[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(params, cfg, x, positions, *, cache: Optional[MLACache] = None,
+                  cache_index=None):
+    m = cfg.mla
+    B, T, _ = x.shape
+    nq = cfg.n_heads
+    q_nope, q_rope = _queries(params, cfg, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+
+    if cache is None:
+        # expanded path: standard attention with qk_head_dim keys
+        kv = (c_kv @ params["wkv_b"]).reshape(
+            B, T, nq, m.qk_nope_head_dim + m.v_head_dim)
+        k_nope, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, T, nq, m.qk_rope_head_dim))], axis=-1)
+        out = attend(q, k, v, causal=True)
+        new_cache = MLACache(c_kv=c_kv, k_rope=k_rope)
+    else:
+        # absorbed decode: attention in latent space, cache never expanded
+        S = cache.c_kv.shape[1]
+        idx = cache_index
+        cc = jax.lax.dynamic_update_slice(cache.c_kv, c_kv, (0, idx, 0))
+        cr = jax.lax.dynamic_update_slice(cache.k_rope, k_rope, (0, idx, 0))
+        w_b = params["wkv_b"].reshape(
+            m.kv_lora_rank, nq, m.qk_nope_head_dim + m.v_head_dim)
+        w_kb = w_b[..., : m.qk_nope_head_dim]      # (L, H, dn)
+        w_vb = w_b[..., m.qk_nope_head_dim:]       # (L, H, dv)
+        q_lat = jnp.einsum("bthn,lhn->bthl", q_nope.astype(jnp.float32),
+                           w_kb.astype(jnp.float32))
+        scores = (jnp.einsum("bthl,bsl->bhts", q_lat, cc.astype(jnp.float32))
+                  + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
+                               cr.astype(jnp.float32)))
+        scores = scores / jnp.sqrt(jnp.array(m.qk_head_dim, jnp.float32))
+        valid = jnp.arange(S) <= idx
+        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhts,bsl->bthl", probs, cc.astype(jnp.float32))
+        out = jnp.einsum("bthl,lhv->bthv", out_lat,
+                         w_vb.astype(jnp.float32)).astype(x.dtype)
+        new_cache = MLACache(c_kv=cc, k_rope=cr)
+
+    out = out.reshape(B, T, nq * m.v_head_dim) @ params["wo"]
+    return out, new_cache
+
+
+def init_mla_cache(cfg, batch, seq_len, dtype=jnp.float32):
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, seq_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, seq_len, m.qk_rope_head_dim), dtype))

@@ -1,0 +1,249 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential) — arXiv:2405.04517.
+
+TPU adaptation notes:
+  * mLSTM training uses the **chunkwise-parallel** form (linear-attention
+    style): ``lax.scan`` over chunks carrying (C, n, m) inter-chunk state,
+    quadratic-but-tiny intra-chunk weights. Exact stabilised exponential
+    gating (running max ``m``) as in the paper's Appendix.
+  * sLSTM has a true sequential dependency (recurrent R weights); it runs as
+    a ``lax.scan`` over time. The paper notes this is intentionally
+    non-parallelisable; we keep it and bound its cost by placing sLSTM on
+    every ``slstm_every``-th layer only.
+  * Decode for both is an O(1) state update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, dense_init, init_causal_conv1d
+
+MLSTM_CHUNK = 128
+NH = 4                       # assigned config: 4 heads
+
+
+class MLSTMCache(NamedTuple):
+    C: jax.Array             # (B, NH, DH, DH)
+    n: jax.Array             # (B, NH, DH)
+    m: jax.Array             # (B, NH)
+    conv: jax.Array          # (B, K-1, di)
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array             # (B, d)
+    n: jax.Array             # (B, d)
+    h: jax.Array             # (B, d)
+    m: jax.Array             # (B, d)
+
+
+# ================================================================= mLSTM
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = int(x.proj_factor * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv": init_causal_conv1d(ks[1], di, x.conv_dim, dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_if": dense_init(ks[5], di, 2 * NH, jnp.float32),
+        "skip_scale": jnp.ones((di,), dtype),
+        "down_proj": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, ig, lf, C_in, n_in, m_in):
+    """One chunk of stabilised mLSTM.
+
+    q,k,v: (B,NH,L,DH); ig: (B,NH,L) log input gate; lf: (B,NH,L) log forget.
+    Carry: C (B,NH,DH,DH), n (B,NH,DH), m (B,NH).
+    """
+    B, H, L, DH = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(DH, jnp.float32))
+    b = jnp.cumsum(lf, axis=-1)                        # (B,H,L) inclusive
+    # intra-chunk log weights: g[t,s] = b_t - b_s + ig_s  (s <= t)
+    g = b[..., :, None] - b[..., None, :] + ig[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    g = jnp.where(tri, g, -jnp.inf)
+    # stabiliser per target step
+    m_intra = jnp.max(g, axis=-1)                      # (B,H,L)
+    m_t = jnp.maximum(m_in[..., None] + b, m_intra)    # (B,H,L)
+    w = jnp.exp(g - m_t[..., None])                    # (B,H,L,L)
+    qk = jnp.einsum("bhld,bhsd->bhls", q, k) * scale
+    h_intra = jnp.einsum("bhls,bhsd->bhld", w * qk, v)
+    denom_intra = jnp.einsum("bhls,bhsd->bhld", w, k)
+    inter_scale = jnp.exp(m_in[..., None] + b - m_t)   # (B,H,L)
+    h_inter = jnp.einsum("bhld,bhde->bhle", q * scale, C_in) \
+        * inter_scale[..., None]
+    denom = jnp.einsum("bhld,bhd->bhl", q * scale, n_in) * inter_scale \
+        + jnp.einsum("bhld,bhld->bhl", q, denom_intra)
+    h = (h_intra + h_inter) / jnp.maximum(
+        jnp.abs(denom), jnp.exp(-m_t))[..., None]
+    # chunk-end state
+    bL = b[..., -1:]                                   # (B,H,1)
+    m_out = jnp.maximum(m_in + bL[..., 0],
+                        jnp.max(bL - b + ig, axis=-1))
+    wk_end = jnp.exp(bL - b + ig - m_out[..., None])   # (B,H,L)
+    C_out = (jnp.exp(m_in + bL[..., 0] - m_out)[..., None, None] * C_in
+             + jnp.einsum("bhl,bhld,bhle->bhde", wk_end, k, v))
+    n_out = (jnp.exp(m_in + bL[..., 0] - m_out)[..., None] * n_in
+             + jnp.einsum("bhl,bhld->bhd", wk_end, k))
+    return h, C_out, n_out, m_out
+
+
+def mlstm(params, cfg, x, *, cache: Optional[MLSTMCache] = None,
+          cache_index=None, chunk=MLSTM_CHUNK):
+    xc_cfg = cfg.xlstm
+    B, T, d = x.shape
+    di = int(xc_cfg.proj_factor * d)
+    DH = di // NH
+    up = x @ params["up_proj"]
+    xb, z = jnp.split(up, 2, axis=-1)                 # (B,T,di)
+
+    if cache is None:
+        xconv = jax.nn.silu(causal_conv1d(params["conv"], xb))
+        K = xc_cfg.conv_dim
+        conv_tail = xb[:, -(K - 1):, :] if T >= K - 1 else jnp.pad(
+            xb, ((0, 0), (K - 1 - T, 0), (0, 0)))
+    else:
+        K = xc_cfg.conv_dim
+        xfull = jnp.concatenate([cache.conv, xb], axis=1)
+        kern = params["conv"]["kernel"]
+        xconv = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", xfull[:, -K:], kern)[:, None, :])
+        conv_tail = xfull[:, -(K - 1):, :]
+
+    def heads(t):
+        return t.reshape(B, -1, NH, DH).transpose(0, 2, 1, 3)
+    q = heads(xconv @ params["wq"]).astype(jnp.float32)
+    k = heads(xconv @ params["wk"]).astype(jnp.float32)
+    v = heads(xconv @ params["wv"]).astype(jnp.float32)
+    gates = (xconv @ params["w_if"]).astype(jnp.float32)  # (B,T,2NH)
+    ig = gates[..., :NH].transpose(0, 2, 1)               # (B,NH,T) log-i
+    lf = jax.nn.log_sigmoid(gates[..., NH:]).transpose(0, 2, 1)
+
+    C0 = (jnp.zeros((B, NH, DH, DH), jnp.float32) if cache is None else cache.C)
+    n0 = (jnp.zeros((B, NH, DH), jnp.float32) if cache is None else cache.n)
+    m0 = (jnp.full((B, NH), -1e30, jnp.float32) if cache is None else cache.m)
+
+    if T == 1:
+        h, C1, n1, m1 = _mlstm_chunk(q, k, v, ig, lf, C0, n0, m0)
+    else:
+        n_chunks = -(-T // chunk)
+        pad = n_chunks * chunk - T
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            ig = jnp.pad(ig, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+            lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+        def to_chunks(t, extra=()):
+            return t.reshape(*t.shape[:2], n_chunks, chunk,
+                             *t.shape[3:]).transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+        qs = to_chunks(q); ks_ = to_chunks(k); vs = to_chunks(v)
+        igs = ig.reshape(B, NH, n_chunks, chunk).transpose(2, 0, 1, 3)
+        lfs = lf.reshape(B, NH, n_chunks, chunk).transpose(2, 0, 1, 3)
+
+        def step(carry, xs):
+            C, n, m = carry
+            qc, kc, vc, igc, lfc = xs
+            h, C, n, m = _mlstm_chunk(qc, kc, vc, igc, lfc, C, n, m)
+            return (C, n, m), h
+        (C1, n1, m1), hs = jax.lax.scan(step, (C0, n0, m0),
+                                        (qs, ks_, vs, igs, lfs))
+        h = hs.transpose(1, 2, 0, 3, 4).reshape(B, NH, n_chunks * chunk, DH)
+        h = h[:, :, :T]
+
+    h = h.transpose(0, 2, 1, 3).reshape(B, -1, di).astype(x.dtype)
+    h = h + params["skip_scale"] * xconv
+    out = (h * jax.nn.silu(z)) @ params["down_proj"]
+    return out, MLSTMCache(C=C1, n=n1, m=m1, conv=conv_tail)
+
+
+def init_mlstm_cache(cfg, batch, dtype=jnp.float32):
+    x = cfg.xlstm
+    di = int(x.proj_factor * cfg.d_model)
+    DH = di // NH
+    return MLSTMCache(
+        C=jnp.zeros((batch, NH, DH, DH), jnp.float32),
+        n=jnp.zeros((batch, NH, DH), jnp.float32),
+        m=jnp.full((batch, NH), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, x.conv_dim - 1, di), dtype))
+
+
+# ================================================================= sLSTM
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    DH = d // NH
+    ks = jax.random.split(key, 4)
+    ffd = int(cfg.xlstm.slstm_proj_factor * d)
+    # recurrent weights are block-diagonal over heads: (NH, DH, 4*DH)
+    r_scale = 1.0 / jnp.sqrt(jnp.array(DH, jnp.float32))
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),       # z,i,f,o pre-acts
+        "r": jax.random.uniform(ks[1], (NH, DH, 4 * DH), jnp.float32,
+                                -r_scale, r_scale),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "ffn_up": dense_init(ks[2], d, 2 * ffd, dtype),
+        "ffn_down": dense_init(ks[3], ffd, d, dtype),
+    }
+
+
+def _slstm_step(params, d, carry, x_t):
+    """x_t: (B, 4d) input pre-activations. carry: SLSTMCache arrays."""
+    c, n, h, m = carry
+    B = c.shape[0]
+    DH = d // NH
+    hh = h.reshape(B, NH, DH)
+    rec = jnp.einsum("bhd,hde->bhe", hh, params["r"]).reshape(B, 4 * d)
+    pre = x_t + rec + params["bias"]
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zp)
+    o = jax.nn.sigmoid(op)
+    log_f = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(log_f + m, ip)
+    i = jnp.exp(ip - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm(params, cfg, x, *, cache: Optional[SLSTMCache] = None,
+          cache_index=None):
+    B, T, d = x.shape
+    pre = (x @ params["w_in"]).astype(jnp.float32)    # (B,T,4d)
+    if cache is None:
+        carry0 = (jnp.zeros((B, d), jnp.float32),) * 3 + (
+            jnp.full((B, d), -1e30, jnp.float32),)
+    else:
+        carry0 = (cache.c, cache.n, cache.h, cache.m)
+    if T == 1:
+        carry, h = _slstm_step(params, d, carry0, pre[:, 0])
+        hs = h[:, None]
+    else:
+        carry, hs = jax.lax.scan(
+            lambda cy, xt: _slstm_step(params, d, cy, xt),
+            carry0, pre.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+    hs = hs.astype(x.dtype)
+    # GeGLU post-up/down projection (paper's post-sLSTM FFN)
+    up = hs @ params["ffn_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a, approximate=True) * b) @ params["ffn_down"]
+    new_cache = SLSTMCache(c=carry[0], n=carry[1], h=carry[2], m=carry[3])
+    return out, new_cache
+
+
+def init_slstm_cache(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))

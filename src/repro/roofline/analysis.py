@@ -1,0 +1,138 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute    = FLOPs_per_device / PEAK_FLOPS
+    memory     = HBM_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / (ICI_BW * links)
+
+The compiled module (`compiled.as_text()`) is the SPMD-partitioned
+PER-DEVICE program, so all quantities parsed from it are per-device and
+divide by per-chip rates directly.
+
+Accounting comes from ``repro.roofline.hlo_analysis`` — a trip-count-aware
+HLO walker — because XLA's ``cost_analysis()`` counts while-loop (lax.scan)
+bodies once instead of x trip_count, undercounting scanned layer stacks by
+the layer count (verified experimentally; see EXPERIMENTS.md §Method).
+cost_analysis values are still recorded as a secondary diagnostic.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI x 4 links (2-D torus).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from .hlo_analysis import analyze_hlo
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 4                # 2-D torus
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities (from the partitioned module)
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    # secondary diagnostics
+    xla_cost_flops: float = 0.0
+    xla_cost_bytes: float = 0.0
+    while_trip_counts: list = field(default_factory=list)
+    model_flops: float = 0.0       # global analytic 6ND / 2ND
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0      # model_flops / (hlo_flops * chips)
+    per_device_hbm_bytes: float = 0.0
+
+    def finalize(self):
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / (ICI_BW * ICI_LINKS)
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        if self.hlo_flops:
+            self.useful_ratio = self.model_flops / (self.hlo_flops
+                                                    * self.chips)
+        return self
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops_per_step(cfg, shape) -> float:
+    """Global analytic step FLOPs: 6*N_active*D train, 2*N_active*D
+    inference (D = tokens processed)."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch      # decode: 1 token/seq
+
+
+def analyze(compiled, lowered_text: Optional[str], *, arch: str, shape_name,
+            mesh_name: str, chips: int, cfg=None, shape=None,
+            hlo_text: Optional[str] = None) -> RooflineReport:
+    text = hlo_text if hlo_text is not None else (
+        lowered_text if lowered_text is not None else compiled.as_text())
+    totals = analyze_hlo(text)
+
+    cost_flops = cost_bytes = 0.0
+    if compiled is not None:
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            cost_flops = float(cost.get("flops", 0.0))
+            cost_bytes = float(cost.get("bytes accessed", 0.0))
+        except Exception:
+            pass
+
+    rep = RooflineReport(
+        arch=arch, shape=str(shape_name), mesh=mesh_name, chips=chips,
+        hlo_flops=totals.flops,
+        hlo_bytes=totals.hbm_bytes,
+        collective_bytes=totals.collective_bytes,
+        collective_counts=dict(totals.collective_counts),
+        xla_cost_flops=cost_flops, xla_cost_bytes=cost_bytes,
+        while_trip_counts=list(totals.while_trip_counts),
+        model_flops=model_flops_per_step(cfg, shape) if cfg is not None
+        else 0.0,
+    )
+    if compiled is not None:
+        try:
+            mem = compiled.memory_analysis()
+            rep.per_device_hbm_bytes = float(
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0))
+        except Exception:
+            pass
+    return rep.finalize()
+
+
+def format_table(reports) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'bottleneck':>10s} {'useful':>7s} {'HBM/dev(GB)':>12s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.mesh:10s} "
+            f"{r.compute_s:10.4g} {r.memory_s:10.4g} {r.collective_s:10.4g} "
+            f"{r.bottleneck:>10s} {r.useful_ratio:7.3f} "
+            f"{r.per_device_hbm_bytes/1e9:12.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,288 @@
+"""Trip-count-aware HLO accounting.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, but our
+models scan over layer segments — so FLOPs/bytes/collectives inside a
+61-layer scan are undercounted 61x. This module parses the compiled HLO
+text, builds the computation call graph with multiplicities (while bodies
+x trip_count), and produces corrected totals:
+
+  * flops            — dot ops: 2 * |result| * |contracting dims|
+                       (matmul-dominated models; conv approximated the
+                       same way from kernel size when present)
+  * collective_bytes — result bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       each multiplied by its computation's multiplicity
+  * hbm_bytes        — result bytes of top-level materializing ops
+                       (fusion outputs, dots, copies, DUS, collectives),
+                       x2 for read+write; fusion-internal ops excluded
+
+Trip counts come from the while condition's compare-against-constant.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start"}
+
+# ops whose results occupy HBM on TPU. Aliasing/fused-away ops (reshape,
+# broadcast, elementwise — fused into consumers by the TPU backend) are
+# excluded; this is an approximation of post-fusion HBM traffic.
+_MATERIALIZING = {"fusion", "dot", "convolution", "copy",
+                  "dynamic-update-slice", "dynamic-slice", "reduce",
+                  "concatenate", "scatter", "gather",
+                  "dot-general"} | _COLLECTIVES
+
+# result shape at line head:  %name = f32[1,2,3]{2,1,0} opcode(
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\]"
+    r"[^\s]*\s+([a-z0-9\-]+)\(")
+# tuple results:  %name = (f32[..], f32[..]) opcode(
+_OP_TUPLE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\((.*?)\)\s+([a-z0-9\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+).*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\][^\s,]*\s+%")
+_ARGS_RE = re.compile(r"\(([^)]*)\)")
+_NAME_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+@dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    result_bytes: float
+    flops: float = 0.0
+    calls: Tuple[str, ...] = ()
+    cond: Optional[str] = None
+    body: Optional[str] = None
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+    max_const: int = 0           # largest small int constant (trip-count hint)
+    shapes: Dict[str, Tuple[str, str]] = field(default_factory=dict)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    return _DTYPE_BYTES.get(dtype, 4) * _shape_elems(dims)
+
+
+def _operand_names(line: str) -> List[str]:
+    """Names of the op's direct operands (inside the first paren group)."""
+    start = line.index("(")
+    depth = 0
+    end = start
+    for i, ch in enumerate(line[start:], start):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = line[start + 1:end]
+    return _NAME_REF_RE.findall(inner)
+
+
+def _dot_flops(line: str, result_elems: int, comp: "Computation") -> float:
+    """2 * |result| * prod(lhs contracting dim sizes).
+
+    Operands are printed by name only; resolve via the computation's
+    symbol table (covers params and prior ops)."""
+    m = _CONTRACT_RE.search(line)
+    if not m:
+        return 2.0 * result_elems          # fallback
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    names = _operand_names(line)
+    lhs_dims: List[int] = []
+    if names and names[0] in comp.shapes:
+        lhs_dims = [int(x) for x in comp.shapes[names[0]][1].split(",") if x]
+    else:
+        # older HLO prints operand shapes inline
+        inner = line[line.index("("):]
+        shapes = _OPERAND_SHAPE_RE.findall(inner)
+        if shapes:
+            lhs_dims = [int(x) for x in shapes[0][1].split(",") if x]
+    k = 1
+    for d in cdims:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    return 2.0 * result_elems * k
+
+
+def _conv_flops(line: str, result_elems: int, comp: "Computation") -> float:
+    """2 * |result| * kernel_spatial * C_in (approx from rhs shape)."""
+    names = _operand_names(line)
+    rhs: List[int] = []
+    if len(names) >= 2 and names[1] in comp.shapes:
+        rhs = [int(x) for x in comp.shapes[names[1]][1].split(",") if x]
+    else:
+        inner = line[line.index("("):]
+        shapes = _OPERAND_SHAPE_RE.findall(inner)
+        if len(shapes) >= 2:
+            rhs = [int(x) for x in shapes[1][1].split(",") if x]
+    if not rhs:
+        return 2.0 * result_elems
+    k = 1
+    for d in rhs[:-1]:                    # all but output-feature dim
+        k *= d
+    return 2.0 * result_elems * k
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and (line.startswith("%") or line.startswith("ENTRY")):
+            cur = Computation(name=hdr.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        for m in _CONST_RE.finditer(line):
+            cur.max_const = max(cur.max_const, int(m.group(1)))
+        om = _OP_RE.match(line)
+        tuple_bytes = None
+        if not om:
+            tm = _OP_TUPLE_RE.match(line)
+            if not tm:
+                continue
+            name, shapes_str, opcode = tm.group(1), tm.group(2), tm.group(3)
+            tuple_bytes = sum(_shape_bytes(d, s)
+                              for d, s in _SHAPE_RE.findall(shapes_str))
+            dtype, dims = "f32", ""
+        else:
+            name, dtype, dims, opcode = om.groups()
+        rbytes = tuple_bytes if tuple_bytes is not None else \
+            _shape_bytes(dtype, dims)
+        relems = _shape_elems(dims) if tuple_bytes is None else 0
+        if tuple_bytes is None:
+            cur.shapes[name] = (dtype, dims)
+        op = OpInfo(name=name, opcode=opcode, result_bytes=rbytes)
+        if opcode in ("dot", "dot-general"):
+            op.flops = _dot_flops(line, relems, cur)
+        elif opcode == "convolution":
+            op.flops = _conv_flops(line, relems, cur)
+        if opcode == "fusion":
+            cm = _CALLS_RE.search(line)
+            if cm:
+                op.calls = (cm.group(1),)
+        if opcode == "while":
+            wb = _COND_BODY_RE.search(line)
+            if wb:
+                op.cond, op.body = wb.group(1), wb.group(2)
+        if opcode in ("call", "conditional", "custom-call"):
+            cm = _CALLS_RE.search(line)
+            if cm:
+                op.calls = (cm.group(1),)
+        ta = _TO_APPLY_RE.search(line)
+        if ta and not op.calls and opcode not in ("while",):
+            op.calls = (ta.group(1),)
+        cur.ops.append(op)
+    return comps
+
+
+@dataclass
+class HLOTotals:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    while_trip_counts: List[int] = field(default_factory=list)
+
+
+def _fusion_called(comps: Dict[str, Computation]) -> set:
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                called.update(op.calls)
+    return called
+
+
+def analyze_hlo(text: str, entry: Optional[str] = None) -> HLOTotals:
+    comps = parse_hlo(text)
+    if not comps:
+        return HLOTotals()
+    fusion_comps = _fusion_called(comps)
+    if entry is None:
+        if "__entry__" in comps:
+            entry = comps["__entry__"].name
+        else:
+            called = set(fusion_comps)
+            for c in comps.values():
+                for op in c.ops:
+                    called.update(op.calls)
+                    if op.cond:
+                        called.add(op.cond)
+                    if op.body:
+                        called.add(op.body)
+            roots = [n for n in comps if n not in called]
+            entry = max(roots, key=lambda n: len(comps[n].ops)) \
+                if roots else next(iter(comps))
+
+    totals = HLOTotals()
+    seen_stack = []
+
+    def visit(comp_name: str, mult: float, top_level: bool):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.append(comp_name)
+        for op in comp.ops:
+            totals.flops += op.flops * mult
+            base = op.opcode.replace("-start", "")
+            if base in {"all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"}:
+                totals.collective_bytes += op.result_bytes * mult
+                totals.collective_counts[base] = \
+                    totals.collective_counts.get(base, 0) + mult
+            if top_level and op.opcode in _MATERIALIZING:
+                totals.hbm_bytes += 2.0 * op.result_bytes * mult
+            if op.opcode == "while" and op.body:
+                trips = max(comps.get(op.cond, Computation("")).max_const
+                            if op.cond else 1, 1)
+                totals.while_trip_counts.append(trips)
+                visit(op.body, mult * trips, True)
+                visit(op.cond, mult * trips, False)
+            elif op.opcode == "fusion":
+                for cal in op.calls:
+                    visit(cal, mult, False)     # fused interiors: flops only
+            elif op.calls:
+                for cal in op.calls:
+                    visit(cal, mult, True)
+        seen_stack.pop()
+
+    visit(entry, 1.0, True)
+    return totals

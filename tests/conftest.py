@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Tests run on the single CPU device (dry-run owns the 512-device trick).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

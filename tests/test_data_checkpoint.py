@@ -1,0 +1,123 @@
+"""Data pipeline + checkpoint tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as C
+from repro.data import (LabeledData, batches, holdout_atd, make_images,
+                        make_speech, make_tokens, partition,
+                        train_test_split)
+
+
+def test_images_factorized(key):
+    d = make_images(key, 128, size=32, n_identities=5)
+    assert d.x.shape == (128, 32, 32, 3)
+    assert int(d.content.max()) < 8 and int(d.style.max()) < 5
+    # same content, different style -> different pixels (style matters)
+    c0 = np.asarray(d.content)
+    s = np.asarray(d.style)
+    idx = np.where(c0 == c0[0])[0]
+    diff_styles = [i for i in idx if s[i] != s[idx[0]]]
+    if diff_styles:
+        gap = float(jnp.mean(jnp.abs(d.x[idx[0]] - d.x[diff_styles[0]])))
+        assert gap > 0.01
+
+
+def test_speech_structure(key):
+    d = make_speech(key, 64, frames=64, channels=16)
+    assert d.x.shape == (64, 64, 16)
+    assert bool(jnp.all(jnp.isfinite(d.x)))
+
+
+def test_tokens_in_vocab(key):
+    t = make_tokens(key, 8, 64, 100)
+    assert t.shape == (8, 64)
+    assert int(t.min()) >= 0 and int(t.max()) < 100
+
+
+def test_partition_worst_case_single_class(key):
+    d = make_images(key, 256, n_identities=4)
+    shards = partition(d, 8, regime="worst")
+    # worst case: each client sees very few classes
+    for sh in shards:
+        assert len(set(map(int, sh.content))) <= 3
+
+
+def test_partition_iid_covers_classes(key):
+    d = make_images(key, 512, n_identities=4)
+    shards = partition(d, 4, regime="iid")
+    for sh in shards:
+        assert len(set(map(int, sh.content))) >= 6   # of 8 shapes
+
+
+def test_partition_preserves_total(key):
+    d = make_images(key, 100)
+    for regime in ("iid", "worst", "skewed"):
+        shards = partition(d, 7, regime=regime)
+        assert sum(s.x.shape[0] for s in shards) == 100
+
+
+def test_split_and_atd(key):
+    d = make_images(key, 100)
+    tr, te = train_test_split(d, 0.2)
+    assert tr.x.shape[0] == 80 and te.x.shape[0] == 20
+    rest, atd = holdout_atd(tr, 0.15)
+    assert atd.x.shape[0] == 12
+
+
+def test_batches_iterator(key):
+    d = make_images(key, 50)
+    bs = list(batches(d, 16))
+    assert len(bs) == 3
+    assert all(b.x.shape[0] == 16 for b in bs)
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip_nested(key):
+    tree = {"params": {"w": jax.random.normal(key, (4, 4)),
+                       "layers": [jnp.ones(3), jnp.zeros(2)]},
+            "step": jnp.int32(7)}
+    with tempfile.TemporaryDirectory() as td:
+        C.save(td, 1, tree, metadata={"arch": "test"})
+        restored, step = C.restore(td, tree)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(tree["params"]["w"]))
+        assert os.path.exists(os.path.join(td, "step_00000001.npz.json"))
+
+
+def test_checkpoint_keeps_latest(key):
+    tree = {"a": jnp.zeros(2)}
+    with tempfile.TemporaryDirectory() as td:
+        for s in range(6):
+            C.save(td, s, {"a": jnp.full((2,), float(s))}, keep=3)
+        files = sorted(f for f in os.listdir(td) if f.endswith(".npz"))
+        assert len(files) == 3
+        restored, step = C.restore(td, tree)
+        assert step == 5
+        assert float(restored["a"][0]) == 5.0
+
+
+def test_checkpoint_restore_empty_dir():
+    with tempfile.TemporaryDirectory() as td:
+        restored, step = C.restore(td, {"a": jnp.zeros(1)})
+        assert restored is None and step == 0
+
+
+def test_checkpoint_model_state(key):
+    from repro.configs import smoke_config
+    from repro.models import transformer as T
+    cfg = smoke_config("qwen3_0_6b")
+    params = T.init_lm(key, cfg)
+    with tempfile.TemporaryDirectory() as td:
+        C.save(td, 0, params)
+        restored, _ = C.restore(td, params)
+        flat1 = jax.tree.leaves(params)
+        flat2 = jax.tree.leaves(restored)
+        for a, b in zip(flat1, flat2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

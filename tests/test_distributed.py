@@ -1,0 +1,159 @@
+"""Distribution-layer tests: sharding specs, dry-run machinery on a small
+host mesh (the 512-device production dry-run runs via launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.distributed import sharding as shd
+from repro.distributed import steps as S
+from repro.models import transformer as T
+
+
+def _fake_mesh_shape():
+    """AbstractMesh lets us build specs without 256 devices."""
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(arch):
+    """Every sharded dim must be divisible by its mesh axes (the greedy
+    fallback guarantee)."""
+    cfg = get_config(arch)
+    mesh = _fake_mesh_shape()
+    pshape = S.params_shape(cfg)
+    specs = shd.param_specs(pshape, cfg, mesh)
+
+    def check(path, leaf, spec):
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            assert leaf.shape[dim] % size == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, pshape, specs)
+
+
+@pytest.mark.parametrize("arch", ["deepseek_v3_671b", "chameleon_34b",
+                                  "jamba_v0_1_52b", "qwen3_moe_30b_a3b"])
+def test_fsdp_kicks_in_for_big_models(arch):
+    """>=10B models must shard params over the data axis too."""
+    cfg = get_config(arch)
+    assert cfg.param_count() >= shd.FSDP_THRESHOLD
+    mesh = _fake_mesh_shape()
+    specs = shd.param_specs(S.params_shape(cfg), cfg, mesh)
+    found_data = []
+    jax.tree.map(
+        lambda s: found_data.append(
+            any(("data" in ((ax,) if isinstance(ax, str) else ax))
+                for ax in s if ax is not None)),
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert any(found_data)
+
+
+def test_small_models_not_fsdp():
+    cfg = get_config("qwen3_0_6b")
+    mesh = _fake_mesh_shape()
+    specs = shd.param_specs(S.params_shape(cfg), cfg, mesh)
+    leaves = [s for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))]
+    for s in leaves:
+        for ax in s:
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            assert "data" not in axes
+
+
+def test_expert_axis_sharded():
+    cfg = get_config("deepseek_v3_671b")
+    mesh = _fake_mesh_shape()
+    pshape = S.params_shape(cfg)
+    specs = shd.param_specs(pshape, cfg, mesh)
+    # find an experts wi leaf: (L, E, d, ff)
+    seg_specs = specs["segments"][1]["ffn"]["experts"]["wi"]
+    assert seg_specs[1] == "model"          # expert dim on model axis
+
+
+def test_starcoder2_heads_fallback():
+    """24 heads don't divide 16 — wq must still shard (on the feature dim)."""
+    cfg = get_config("starcoder2_3b")
+    mesh = _fake_mesh_shape()
+    pshape = S.params_shape(cfg)
+    specs = shd.param_specs(pshape, cfg, mesh)
+    wq_spec = specs["segments"][0]["mixer"]["wq"]
+    wq_shape = pshape["segments"][0]["mixer"]["wq"].shape
+    assert any(s is not None for s in wq_spec)
+    for dim, axes in enumerate(wq_spec):
+        if axes is not None:
+            size = 16
+            assert wq_shape[dim] % size == 0
+
+
+def test_cache_specs_long_500k_batch1():
+    """global_batch=1 cannot shard batch -> sequence must take the data
+    axes for attention caches."""
+    cfg = get_config("chameleon_34b")
+    mesh = _fake_mesh_shape()
+    cshape = jax.eval_shape(lambda: T.init_caches(cfg, 1, 524288))
+    specs = shd.cache_specs(cshape, cfg, mesh, batch=1)
+    k_spec = specs[0].k       # (L, B, S, H, D)
+    k_shape = cshape[0].k.shape
+    assert k_spec[1] is None                      # B=1 unshardable
+    data_dims = [d for d, ax in enumerate(k_spec)
+                 if ax is not None and "data" in (
+                     (ax,) if isinstance(ax, str) else ax)]
+    assert data_dims, f"no data-axis dim in {k_spec}"
+    for d in data_dims:
+        assert k_shape[d] % 16 == 0
+
+
+def test_train_step_runs_on_host_mesh(key):
+    """Full sharded train step executes on a 1-device host mesh."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim.adamw import adamw_init
+    cfg = smoke_config("qwen3_0_6b")
+    mesh = make_host_mesh()
+    shape = ShapeConfig("t", 32, 4, "train")
+    fn, in_specs, out_specs, _ = S.build_train_step(cfg, TrainConfig(), mesh,
+                                                    shape)
+    with mesh:
+        params = T.init_lm(key, cfg)
+        state = S.TrainState(params=params, opt=adamw_init(params),
+                             step=jnp.zeros((), jnp.int32))
+        jfn = jax.jit(fn, in_shardings=S.shd_to(in_specs, mesh),
+                      out_shardings=S.shd_to(out_specs, mesh))
+        tokens = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+        state2, loss = jfn(state, {"tokens": tokens})
+        assert bool(jnp.isfinite(loss))
+        assert int(state2.step) == 1
+
+
+def test_serve_step_runs_on_host_mesh(key):
+    from repro.launch.mesh import make_host_mesh
+    cfg = smoke_config("qwen3_0_6b")
+    mesh = make_host_mesh()
+    shape = ShapeConfig("d", 64, 2, "decode")
+    fn, in_specs, out_specs, arg_shapes = S.build_serve_step(cfg, mesh, shape)
+    with mesh:
+        params = T.init_lm(key, cfg)
+        caches = T.init_caches(cfg, 2, 64)
+        token = jnp.zeros((2, 1), jnp.int32)
+        nxt, caches = fn(params, token, caches, jnp.int32(0))
+        assert nxt.shape == (2, 1)
+        assert nxt.dtype == jnp.int32
+
+
+def test_decode_window_rules():
+    train = ShapeConfig("train_4k", 4096, 256, "train")
+    long = ShapeConfig("long_500k", 524288, 1, "decode")
+    assert S.decode_window(get_config("gemma_7b"), long) == 4096
+    assert S.decode_window(get_config("xlstm_350m"), long) is None
+    assert S.decode_window(get_config("starcoder2_3b"), long) == 4096
+    assert S.decode_window(get_config("gemma_7b"), train) is None

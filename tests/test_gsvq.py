@@ -1,0 +1,85 @@
+"""Unit tests: Group & Sliced VQ (Eq. 2-3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gsvq
+
+
+def test_reduces_to_group_of_all(key):
+    """n_groups=1, n_slices=1 quantizes to the weighted average of ALL atoms
+    (one big group) — sanity of the degenerate case."""
+    z = jax.random.normal(key, (10, 8))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    out = gsvq.gsvq_quantize(z, cb, n_groups=1, n_slices=1)
+    assert out.indices.shape == (10, 1)
+    assert bool(jnp.all(out.indices == 0))
+
+
+def test_group_index_picks_nearest_group(key):
+    """Two well-separated groups: samples near group 1's atoms index group 1."""
+    g0 = jnp.zeros((4, 8)) + jnp.array([10.0] * 8)
+    g1 = jnp.zeros((4, 8)) - jnp.array([10.0] * 8)
+    cb = jnp.concatenate([g0, g1]) + 0.1 * jax.random.normal(key, (8, 8))
+    z = jnp.stack([jnp.full((8,), 9.5), jnp.full((8,), -9.5)])
+    out = gsvq.gsvq_quantize(z, cb, n_groups=2)
+    np.testing.assert_array_equal(np.asarray(out.indices[:, 0]), [0, 1])
+
+
+def test_weighted_average_in_group_hull(key):
+    """Eq. 3 output is a convex combination of the matched group's atoms."""
+    z = jax.random.normal(key, (6, 4))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+    out = gsvq.gsvq_quantize(z, cb, n_groups=2)
+    groups = cb.reshape(2, 4, 4)
+    for i in range(6):
+        g = np.asarray(groups[out.indices[i, 0]])
+        q = np.asarray(out.quantized[i])
+        assert q.min() >= g.min() - 1e-4 and q.max() <= g.max() + 1e-4
+
+
+def test_sliced_indices_shape(key):
+    z = jax.random.normal(key, (5, 3, 12))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (16, 12))
+    out = gsvq.gsvq_quantize(z, cb, n_groups=4, n_slices=3)
+    assert out.indices.shape == (5, 3, 3)
+    assert int(out.indices.max()) < 4
+
+
+def test_ste_gradient(key):
+    z = jax.random.normal(key, (4, 8))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    g = jax.grad(lambda z: jnp.sum(
+        gsvq.gsvq_quantize(z, cb, n_groups=2).quantized))(z)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g), rtol=1e-6)
+
+
+def test_dequantize_uniform_average(key):
+    """Server reconstruction = uniform group mean of the indexed group."""
+    cb = jax.random.normal(key, (8, 4))
+    idx = jnp.array([[0], [1]])
+    out = gsvq.gsvq_dequantize_indices(idx, cb, n_groups=2, n_slices=1)
+    groups = cb.reshape(2, 4, 4)
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               np.asarray(groups[0].mean(0)), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]),
+                               np.asarray(groups[1].mean(0)), rtol=1e-5)
+
+
+def test_bits_per_position():
+    assert gsvq.gsvq_bits_per_position(16, 1) == 4
+    assert gsvq.gsvq_bits_per_position(16, 4) == 16
+    assert gsvq.gsvq_bits_per_position(2, 2) == 2
+
+
+@pytest.mark.parametrize("n_groups,n_slices", [(2, 1), (4, 2), (8, 4)])
+def test_shapes_roundtrip(key, n_groups, n_slices):
+    z = jax.random.normal(key, (3, 7, 16))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    out = gsvq.gsvq_quantize(z, cb, n_groups=n_groups, n_slices=n_slices)
+    assert out.quantized.shape == z.shape
+    rec = gsvq.gsvq_dequantize_indices(out.indices, cb, n_groups=n_groups,
+                                       n_slices=n_slices)
+    assert rec.shape == z.shape
+    assert bool(jnp.all(jnp.isfinite(rec)))

@@ -1,0 +1,53 @@
+"""hints module: constraint selection logic (no mesh = identity; divisible
+dims get the expected axes)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import hints
+
+
+def test_no_context_is_identity(key):
+    x = jax.random.normal(key, (4, 8, 16))
+    assert hints.residual(x) is x or bool(jnp.all(hints.residual(x) == x))
+    q = jax.random.normal(key, (4, 8, 2, 16))
+    out = hints.heads(q)
+    assert out.shape == q.shape
+
+
+def _mesh22():
+    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+
+
+def test_dp_divisibility_gate():
+    mesh = _mesh22()
+    with hints.activation_sharding(mesh, ("data",)):
+        assert hints._dp_for(4) == ("data",)
+        assert hints._dp_for(3) is None
+        assert hints._model_ok(4)
+        assert not hints._model_ok(3)
+        assert hints.dp_size() == 2
+
+
+def test_heads_prefers_head_axis():
+    mesh = _mesh22()
+    with hints.activation_sharding(mesh, ("data",)):
+        # traced check: constraint must not error for divisible heads
+        @jax.jit
+        def f(x):
+            return hints.heads(x)
+        out = jax.eval_shape(f, jax.ShapeDtypeStruct((4, 8, 2, 16),
+                                                     jnp.float32))
+        assert out.shape == (4, 8, 2, 16)
+
+
+def test_context_nests_and_restores():
+    mesh = _mesh22()
+    assert hints._state() is None
+    with hints.activation_sharding(mesh, ("data",)):
+        assert hints._state() is not None
+        with hints.activation_sharding(mesh, ("data", "model")):
+            assert hints.dp_size() == 4
+        assert hints.dp_size() == 2
+    assert hints._state() is None

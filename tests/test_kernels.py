@@ -1,0 +1,182 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.vq_nn import vq_nearest_pallas
+
+
+# ------------------------------------------------------------------- vq_nn
+
+@pytest.mark.parametrize("n,k,m", [(8, 16, 8), (100, 64, 32), (256, 256, 64),
+                                   (300, 200, 64), (1000, 512, 128),
+                                   (17, 33, 48)])
+def test_vq_nn_matches_ref(key, n, k, m):
+    z = jax.random.normal(key, (n, m))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (k, m))
+    got = vq_nearest_pallas(z, cb, interpret=True)
+    want = ref.vq_nearest_ref(z, cb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vq_nn_dtypes(key, dtype):
+    z = jax.random.normal(key, (64, 32)).astype(dtype)
+    cb = jax.random.normal(jax.random.PRNGKey(1), (48, 32)).astype(dtype)
+    got = vq_nearest_pallas(z, cb, interpret=True)
+    want = ref.vq_nearest_ref(z, cb)
+    # bf16 rounding can flip argmin ties; allow tiny disagreement
+    agree = float(jnp.mean((got == want).astype(jnp.float32)))
+    assert agree > 0.98
+
+
+def test_vq_nn_block_sweep(key):
+    z = jax.random.normal(key, (500, 64))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (300, 64))
+    want = ref.vq_nearest_ref(z, cb)
+    for bn in (64, 128, 256):
+        for bk in (128, 256):
+            got = vq_nearest_pallas(z, cb, block_n=bn, block_k=bk,
+                                    interpret=True)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_vq_nn_consistent_with_core_vq(key):
+    from repro.core.vq import nearest_atom
+    z = jax.random.normal(key, (128, 64))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+    np.testing.assert_array_equal(
+        np.asarray(vq_nearest_pallas(z, cb, interpret=True)),
+        np.asarray(nearest_atom(z, cb)))
+
+
+# --------------------------------------------------------------- flash attn
+
+@pytest.mark.parametrize("t,causal,window", [
+    (64, True, 0), (128, True, 0), (200, True, 0), (128, False, 0),
+    (256, True, 64), (300, True, 128),
+])
+def test_flash_matches_ref(key, t, causal, window):
+    B, H, Dh = 2, 4, 32
+    q = jax.random.normal(key, (B, t, H, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, t, H, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, t, H, Dh))
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_gqa_via_ops(key):
+    q = jax.random.normal(key, (2, 96, 8, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 96, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 96, 2, 16))
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    kk, vv = jnp.repeat(k, 4, 2), jnp.repeat(v, 4, 2)
+    want = ref.flash_attention_ref(q, kk, vv, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_matches_chunked_jax_twin(key):
+    """Kernel vs the pure-JAX online-softmax twin in nn.attention."""
+    from repro.nn.attention import _attend_chunked
+    q = jax.random.normal(key, (1, 160, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 160, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 160, 2, 16))
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = _attend_chunked(q, k, v, causal=True, q_offset=0, window=0,
+                           kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtype(key, dtype):
+    q = jax.random.normal(key, (1, 64, 2, 32)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 32)).astype(dtype)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 7, 128), (2, 5, 11, 256),
+                                   (1, 512)])
+def test_rmsnorm_matches_ref(key, shape):
+    x = jax.random.normal(key, shape)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],))
+    got = rmsnorm_pallas(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_rmsnorm_matches_layer(key):
+    from repro.nn.layers import rmsnorm as layer_rmsnorm
+    x = jax.random.normal(key, (4, 32, 64))
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (64,)))
+    got = rmsnorm_pallas(x, s, interpret=True)
+    want = layer_rmsnorm({"scale": s}, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------- selective scan
+
+@pytest.mark.parametrize("b,t,di,n", [(1, 16, 8, 4), (2, 40, 24, 8),
+                                      (2, 128, 64, 16), (1, 200, 48, 16)])
+def test_selective_scan_matches_ref(key, b, t, di, n):
+    from repro.kernels.selective_scan import selective_scan_pallas
+    decay = jax.nn.sigmoid(jax.random.normal(key, (b, t, di, n)))
+    inp = jax.random.normal(jax.random.PRNGKey(1), (b, t, di, n))
+    c = jax.random.normal(jax.random.PRNGKey(2), (b, t, n))
+    h0 = jax.random.normal(jax.random.PRNGKey(3), (b, di, n))
+    y, hl = selective_scan_pallas(decay, inp, c, h0, interpret=True)
+    yr, hlr = ref.selective_scan_ref(decay, inp, c, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_selective_scan_block_sweep(key):
+    from repro.kernels.selective_scan import selective_scan_pallas
+    b, t, di, n = 1, 64, 32, 8
+    decay = jax.nn.sigmoid(jax.random.normal(key, (b, t, di, n)))
+    inp = jax.random.normal(jax.random.PRNGKey(1), (b, t, di, n))
+    c = jax.random.normal(jax.random.PRNGKey(2), (b, t, n))
+    h0 = jnp.zeros((b, di, n))
+    yr, _ = ref.selective_scan_ref(decay, inp, c, h0)
+    for bd in (16, 32):
+        for ct in (16, 64):
+            y, _ = selective_scan_pallas(decay, inp, c, h0, block_di=bd,
+                                         chunk_t=ct, interpret=True)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                       atol=1e-4, rtol=1e-4)
+
+
+def test_selective_scan_matches_ssm_module(key):
+    """Kernel agrees with the jnp fused scan used by the Mamba layer."""
+    from repro.kernels.selective_scan import selective_scan_pallas
+    from repro.nn.ssm import _selective_scan_fused
+    b, t, di, n = 2, 50, 16, 8
+    decay = jax.nn.sigmoid(jax.random.normal(key, (b, t, di, n)))
+    inp = jax.random.normal(jax.random.PRNGKey(1), (b, t, di, n))
+    c = jax.random.normal(jax.random.PRNGKey(2), (b, t, n))
+    h0 = jnp.zeros((b, di, n))
+    yk, hk = selective_scan_pallas(decay, inp, c, h0, interpret=True)
+    yj, hj = _selective_scan_fused(decay, inp, c, h0, chunk=16)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yj),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hj),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,38 @@
+"""Launcher smoke tests: train.py / serve.py / examples run end-to-end as
+subprocesses (tiny settings)."""
+import subprocess
+import sys
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+
+
+def _run(args, timeout=600):
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, env=ENV, cwd="/root/repo",
+                          timeout=timeout)
+
+
+def test_train_cli_smoke():
+    r = _run(["-m", "repro.launch.train", "--arch", "qwen3-0.6b", "--smoke",
+              "--steps", "6", "--batch", "2", "--seq", "32",
+              "--log-every", "5"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "loss" in r.stdout
+
+
+def test_serve_cli_smoke():
+    r = _run(["-m", "repro.launch.serve", "--arch", "xlstm-350m", "--smoke",
+              "--batch", "2", "--prompt-len", "8", "--gen", "8"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "generated" in r.stdout
+
+
+def test_train_loss_decreases():
+    r = _run(["-m", "repro.launch.train", "--arch", "starcoder2-3b",
+              "--smoke", "--steps", "30", "--batch", "4", "--seq", "64",
+              "--log-every", "29"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    lines = [l for l in r.stdout.splitlines() if l.startswith("step")]
+    first = float(lines[0].split("loss")[1].split()[0])
+    last = float(lines[-1].split("loss")[1].split()[0])
+    assert last < first, (first, last)

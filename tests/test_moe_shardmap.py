@@ -1,0 +1,53 @@
+"""shard_map MoE dispatch == flat dispatch (numerically, modulo capacity
+ordering). Runs in a subprocess with 4 forced host devices so a real
+(data=2, model=2) mesh exists."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro import hints
+from repro.configs import MoEConfig, ModelConfig
+from repro.nn import moe as MOE
+
+key = jax.random.PRNGKey(0)
+cfg_base = ModelConfig(d_model=32, moe=MoEConfig(
+    n_experts=4, n_experts_per_tok=2, d_ff_expert=64,
+    capacity_factor=8.0))            # capacity high enough: no drops
+p = MOE.init_moe(key, cfg_base)
+x = jax.random.normal(key, (4, 8, 32))
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+flat = MOE.moe_apply(p, cfg_base.replace(
+    moe=cfg_base.moe.__class__(**{**cfg_base.moe.__dict__,
+                                  "dispatch": "flat"})), x)
+
+cfg_sm = cfg_base.replace(moe=cfg_base.moe.__class__(
+    **{**cfg_base.moe.__dict__, "dispatch": "shardmap"}))
+with mesh:
+    with hints.activation_sharding(mesh, ("data",)):
+        xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
+        sm = jax.jit(lambda p, x: MOE.moe_apply(p, cfg_sm, x))(p, xs)
+
+import numpy as np
+err = float(jnp.max(jnp.abs(flat.y - sm.y)))
+print("MAXERR", err)
+assert err < 1e-4, err
+# aux losses agree approximately: shard_map computes load-balance stats
+# per dp shard then pmeans (average of products != product of averages)
+aerr = abs(float(flat.aux_loss) - float(sm.aux_loss))
+print("AUXERR", aerr)
+assert aerr < 1e-2, aerr
+print("OK")
+"""
+
+
+def test_shardmap_matches_flat():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env={"PYTHONPATH": "src",
+                                       "PATH": "/usr/bin:/bin"},
+                       cwd="/root/repo", timeout=600)
+    assert "OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-2000:]}"

@@ -1,0 +1,86 @@
+"""Privacy evaluation (Thm. 1 adversary) + §2.8 overheads accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import overheads as OH
+from repro.core import privacy as PV
+
+
+def test_adversary_learns_separable_labels(key):
+    """Features that encode the label -> high accuracy, low H(Y|Z)."""
+    n, d, C = 512, 8, 4
+    y = jax.random.randint(key, (n,), 0, C)
+    z = jax.nn.one_hot(y, d) * 3.0 + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(1), (n, d))
+    params = PV.train_adversary(key, z, y, C, steps=200)
+    m = PV.evaluate_adversary(params, z, y, C)
+    assert m.accuracy > 0.9
+    assert m.conditional_entropy_bits < 0.5
+
+
+def test_adversary_fails_on_random_features(key):
+    n, d, C = 512, 8, 4
+    y = jax.random.randint(key, (n,), 0, C)
+    z = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    params = PV.train_adversary(key, z[:400], y[:400], C, steps=200)
+    m = PV.evaluate_adversary(params, z[400:], y[400:], C)
+    assert m.accuracy < 0.5
+    assert m.conditional_entropy_bits > 1.0     # close to log2(4)=2 bits
+
+
+def test_privacy_audit_ordering(key):
+    """Audit must show: public carries less label info than private."""
+    n, d, C = 400, 8, 4
+    y = jax.random.randint(key, (n,), 0, C)
+    private = jax.nn.one_hot(y, d) * 3.0
+    public = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    pub_m, prv_m = PV.privacy_audit(key, public, private, y, C, steps=150)
+    assert prv_m.accuracy > pub_m.accuracy
+    assert prv_m.conditional_entropy_bits < pub_m.conditional_entropy_bits
+
+
+# --------------------------------------------------------------- overheads
+
+def _comm():
+    return OH.CommModel(
+        n_clients=100, model_bytes=10_000_000, n_samples=60_000,
+        n_epochs=100, code_bytes_per_sample=64,
+        smashed_bytes_per_sample=4096, client_frac_params=0.2,
+        codebook_bytes=256 * 64 * 4, codebook_sync_rounds=10,
+        downstream_model_bytes=1_000_000)
+
+
+def test_fl_formula():
+    c = _comm()
+    assert OH.federated_bytes(c) == 2 * 100 * 10_000_000 * 100
+
+
+def test_octopus_orders_of_magnitude_cheaper():
+    c = _comm()
+    table = OH.comparison_table(c)
+    assert table["octopus"] < table["federated"] / 1000
+    assert table["octopus"] < table["split_learning"] / 10
+    assert table["octopus_vs_fl_ratio"] > 1000
+
+
+def test_grad_compression_still_expensive():
+    """§2.8: compressed FL still pays the uncompressed downlink x extra
+    rounds — must stay well above OCTOPUS."""
+    c = _comm()
+    assert OH.gradient_compressed_fl_bytes(c) > OH.octopus_bytes(c) * 100
+
+
+def test_multi_task_scaling():
+    c = _comm()
+    mt = OH.multi_task_bytes(c, n_tasks=10)
+    # FL rerun 10x; octopus only re-downloads 10 small downstream models
+    assert mt["federated"] == 10 * OH.federated_bytes(c)
+    assert mt["octopus"] < OH.octopus_bytes(c) + 10 * c.downstream_model_bytes
+
+
+def test_code_bytes_packing():
+    assert OH.code_bytes(64, 256) == 64          # 8 bits/code
+    assert OH.code_bytes(64, 16) == 32           # 4 bits/code
+    assert OH.code_bytes(3, 256) == 3

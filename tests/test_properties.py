@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ema, gsvq, vq
+from repro.core.overheads import CommModel, federated_bytes, octopus_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(1, 64), k=st.integers(2, 64),
+       m=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_vq_idempotent(n, k, m, seed):
+    """Quantizing an already-quantized latent is a fixed point."""
+    kz, kc = jax.random.split(jax.random.PRNGKey(seed))
+    z = jax.random.normal(kz, (n, m))
+    cb = jax.random.normal(kc, (k, m))
+    out1 = vq.quantize(z, cb)
+    out2 = vq.quantize(out1.quantized, cb)
+    np.testing.assert_array_equal(np.asarray(out1.indices),
+                                  np.asarray(out2.indices))
+    assert float(out2.commit_loss) < 1e-9
+
+
+@given(n=st.integers(1, 64), k=st.integers(2, 64),
+       m=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_vq_indices_in_range(n, k, m, seed):
+    kz, kc = jax.random.split(jax.random.PRNGKey(seed))
+    z = jax.random.normal(kz, (n, m)) * 10
+    cb = jax.random.normal(kc, (k, m))
+    idx = vq.nearest_atom(z, cb)
+    assert int(idx.min()) >= 0 and int(idx.max()) < k
+
+
+@given(n=st.integers(1, 32), seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(0.1, 10.0), shift=st.floats(-5.0, 5.0))
+@settings(**SETTINGS)
+def test_vq_translation_of_codebook_and_data(n, seed, scale, shift):
+    """Nearest-neighbour structure is invariant to joint affine transforms
+    of data and codebook (distances scale uniformly)."""
+    kz, kc = jax.random.split(jax.random.PRNGKey(seed))
+    z = jax.random.normal(kz, (n, 8))
+    cb = jax.random.normal(kc, (16, 8))
+    i1 = vq.nearest_atom(z, cb)
+    i2 = vq.nearest_atom(z * scale + shift, cb * scale + shift)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@given(g=st.sampled_from([1, 2, 4]), s=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_gsvq_ste_value_consistency(g, s, seed):
+    """forward(quantized) == z + (q - z): STE value identity."""
+    kz, kc = jax.random.split(jax.random.PRNGKey(seed))
+    z = jax.random.normal(kz, (6, 16))
+    cb = jax.random.normal(kc, (16, 16))
+    out = gsvq.gsvq_quantize(z, cb, n_groups=g, n_slices=s)
+    assert out.quantized.shape == z.shape
+    assert bool(jnp.all(jnp.isfinite(out.quantized)))
+    assert int(out.indices.max()) < max(g, 1)
+
+
+@given(gamma=st.floats(0.5, 0.999), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_ema_mass_conservation(gamma, seed):
+    """Total EMA count mass after one update = gamma*old + (1-gamma)*N."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cb = jax.random.normal(k1, (8, 4))
+    st_ = ema.init_ema(cb)
+    z = jax.random.normal(k2, (40, 4))
+    idx = vq.nearest_atom(z, cb)
+    s2 = ema.ema_update(st_, z, idx, gamma=gamma)
+    np.testing.assert_allclose(float(jnp.sum(s2.counts)),
+                               gamma * 8 + (1 - gamma) * 40, rtol=1e-4)
+
+
+@given(nc=st.integers(1, 1000), nm=st.integers(1, 10**8),
+       nd=st.integers(1, 10**6), ne=st.integers(1, 1000),
+       nz=st.integers(1, 10**4))
+@settings(**SETTINGS)
+def test_overheads_positive_and_fl_grows_with_epochs(nc, nm, nd, ne, nz):
+    c = CommModel(n_clients=nc, model_bytes=nm, n_samples=nd, n_epochs=ne,
+                  code_bytes_per_sample=nz)
+    fl = federated_bytes(c)
+    oc = octopus_bytes(c)
+    assert fl > 0 and oc > 0
+    c2 = CommModel(n_clients=nc, model_bytes=nm, n_samples=nd,
+                   n_epochs=ne + 1, code_bytes_per_sample=nz)
+    assert federated_bytes(c2) > fl          # FL pays per round
+    assert octopus_bytes(c2) == oc           # OCTOPUS is round-free
+
+
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 4),
+       t=st.sampled_from([8, 16]), window=st.sampled_from([0, 4]))
+@settings(max_examples=10, deadline=None)
+def test_attention_causality(seed, b, t, window):
+    """Changing future tokens never changes past outputs."""
+    from repro.nn import attention as A
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (b, t, 2, 8))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (b, t, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (b, t, 2, 8))
+    out1 = A._attend_full(q, kk, v, causal=True, q_offset=0, window=window)
+    kk2 = kk.at[:, t // 2:].add(100.0)
+    v2 = v.at[:, t // 2:].add(-100.0)
+    out2 = A._attend_full(q, kk2, v2, causal=True, q_offset=0, window=window)
+    np.testing.assert_allclose(np.asarray(out1[:, :t // 2]),
+                               np.asarray(out2[:, :t // 2]), atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_moe_positions_are_dense_ranks(seed):
+    from repro.nn.moe import positions_in_expert
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, 8, size=64), jnp.int32)
+    pos = np.asarray(positions_in_expert(ids, 8))
+    for e in range(8):
+        ranks = sorted(pos[np.asarray(ids) == e])
+        assert ranks == list(range(len(ranks)))

@@ -1,0 +1,113 @@
+"""Unit tests: basic VQ (Eq. 1), codebook EMA (Eq. 7-9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ema, vq
+
+
+def test_nearest_atom_matches_bruteforce(key):
+    z = jax.random.normal(key, (50, 16))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    idx = vq.nearest_atom(z, cb)
+    d = jnp.sum((z[:, None] - cb[None]) ** 2, -1)
+    np.testing.assert_array_equal(np.asarray(idx), np.argmin(np.asarray(d), -1))
+
+
+def test_quantize_forward_equals_codebook_rows(key):
+    z = jax.random.normal(key, (4, 8, 16))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    out = vq.quantize(z, cb)
+    np.testing.assert_allclose(np.asarray(out.quantized),
+                               np.asarray(cb[out.indices]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ste_gradient_passes_through(key):
+    """d/dz of sum(quantize(z)) == ones (straight-through estimator)."""
+    z = jax.random.normal(key, (8, 16))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    g = jax.grad(lambda z: jnp.sum(vq.quantize(z, cb).quantized))(z)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g), rtol=1e-6)
+
+
+def test_commit_loss_zero_when_z_on_codebook(key):
+    cb = jax.random.normal(key, (32, 16))
+    z = cb[:8]
+    out = vq.quantize(z, cb)
+    assert float(out.commit_loss) < 1e-10
+    assert float(out.codebook_loss) < 1e-10
+
+
+def test_vq_loss_terms_weights(key):
+    z = jax.random.normal(key, (8, 16))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    out = vq.quantize(z, cb)
+    total = vq.vq_loss_terms(out, alpha=2.0, beta=0.5)
+    np.testing.assert_allclose(
+        float(total), 2.0 * float(out.codebook_loss) + 0.5 * float(out.commit_loss),
+        rtol=1e-6)
+
+
+def test_codes_nbits():
+    idx = jnp.zeros((4, 16), jnp.int32)
+    assert vq.codes_nbits(idx, 256) == 4 * 16 * 8
+    assert vq.codes_nbits(idx, 512) == 4 * 16 * 9
+
+
+def test_perplexity_uniform_vs_collapsed():
+    uniform = jnp.arange(64, dtype=jnp.int32) % 8
+    collapsed = jnp.zeros((64,), jnp.int32)
+    assert float(vq.perplexity(uniform, 8)) == pytest.approx(8.0, rel=1e-3)
+    assert float(vq.perplexity(collapsed, 8)) == pytest.approx(1.0, rel=1e-3)
+
+
+# ---------------------------------------------------------------- EMA
+
+def test_ema_fixed_point_is_cluster_mean(key):
+    """Repeated EMA updates on static data converge atoms to cluster means."""
+    cb = jax.random.normal(key, (4, 8))
+    centers = jnp.array([[5.0] * 8, [-5.0] * 8, [0.0] * 8, [9.0] * 8])
+    z = jnp.repeat(centers, 16, axis=0) + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(1), (64, 8))
+    state = ema.init_ema(centers + 0.5)   # near-correct init
+    for _ in range(200):
+        idx = jax.jit(lambda s, z: __import__("repro.core.vq", fromlist=["x"]
+                                              ).nearest_atom(z, s.codebook))(state, z)
+        state = ema.ema_update(state, z, idx, gamma=0.9)
+    per_atom_mean, counts = ema.batch_optimal_atoms(z, idx, 4)
+    live = counts > 0
+    err = jnp.abs(state.codebook - per_atom_mean)[live]
+    assert float(jnp.max(err)) < 0.1
+
+
+def test_ema_counts_accumulate(key):
+    cb = jax.random.normal(key, (8, 4))
+    state = ema.init_ema(cb)
+    z = jax.random.normal(jax.random.PRNGKey(1), (100, 4))
+    from repro.core.vq import nearest_atom
+    idx = nearest_atom(z, cb)
+    s2 = ema.ema_update(state, z, idx, gamma=0.99)
+    # total EMA mass: 0.99 * K * 1.0 + 0.01 * N
+    np.testing.assert_allclose(float(jnp.sum(s2.counts)),
+                               0.99 * 8 + 0.01 * 100, rtol=1e-5)
+
+
+def test_batch_optimal_atoms_eq8(key):
+    z = jnp.array([[1.0, 1.0], [3.0, 3.0], [10.0, 10.0]])
+    idx = jnp.array([0, 0, 1])
+    atoms, counts = ema.batch_optimal_atoms(z, idx, 3)
+    np.testing.assert_allclose(np.asarray(atoms[0]), [2.0, 2.0])
+    np.testing.assert_allclose(np.asarray(atoms[1]), [10.0, 10.0])
+    assert counts[2] == 0
+
+
+def test_codebook_init_unit_scale(key):
+    """Regression: tiny codebook init (1/K) collapses the encoder — the
+    commitment term drags z_e to ~0 and downstream accuracy falls to
+    chance. Atoms must start at the unit scale of IN'd latents."""
+    cb = __import__("repro.core.vq", fromlist=["x"]).init_codebook(key, 256, 16)
+    import jax.numpy as jnp
+    std = float(jnp.std(cb))
+    assert 0.5 < std < 2.0, std
