@@ -11,6 +11,24 @@ Paper targets:
   sec2_8   communication-overhead accounting (measured bytes)
   sec3_8   time overheads (encode latency, probe vs conv train time)
   kernels  Pallas kernel microbenchmarks vs jnp reference
+  gsvq     GSVQ (groups x slices) accuracy vs bits-per-position
+  sim      batched multi-client engine (repro.sim) throughput + uplink
+
+``sim`` CSV schema (all rows ``sim,<name>,<value>[,<extra>]``):
+  n_clients            population size advanced per jitted call
+  round_ms             mean wall ms per engine round (Steps 2-5, jitted)
+  clients_per_sec      n_clients * rounds / wall — the headline
+                       scale metric (a Python client loop is the 1x
+                       baseline; extra column reports the measured
+                       speedup over that loop)
+  bytes_per_round      MEASURED size of the round's bit-packed uplink
+                       payload (extra column: bits per code)
+  bytes_per_round_int32  same indices as unpacked int32 (the naive
+                       transmission the codec replaces)
+  pack_ratio           bytes_per_round_int32 / bytes_per_round
+  ingest_rounds        rounds accumulated in the server IngestBuffer
+  ingest_total_bytes   measured bytes across the buffered rounds
+  ingest_probe_acc     Step-6 probe accuracy trained from the buffer
 """
 from __future__ import annotations
 
@@ -217,7 +235,9 @@ def bench_sec3_8(key):
     t0 = time.time()
     for _ in range(20):
         tx = OC.client_transmit(client, pipe.cfg, x1)
-    jax.block_until_ready(tx.indices)
+    # transmit now includes bit-packing; await the packed payload too so
+    # the timed window covers everything Step 3-4 dispatches
+    jax.block_until_ready((tx.indices, tx.payload))
     _emit("sec3_8", "encode_ms_per_sample", f"{(time.time()-t0)/20*1e3:.2f}")
 
     t0 = time.time()
@@ -279,6 +299,91 @@ def bench_gsvq(key):
         _emit("gsvq", f"G{g}_S{sl}_bits_per_pos", bits)
 
 
+# ------------------------------------------------------------------- sim
+
+def bench_sim(key):
+    """Batched multi-client engine: clients/sec of one jitted population
+    round (Steps 2-5) vs a Python client loop, plus the round's measured
+    bit-packed uplink (schema in the module docstring)."""
+    from repro.core import octopus as OC
+    from repro.core.dvqae import DVQAEConfig
+    from repro.data import make_images, partition_stacked, stacked_batches
+    from repro.kernels.ops import pack_codes
+    from repro.sim import IngestBuffer, SimEngine
+
+    n_clients = 16 if C.QUICK else 64
+    local_batch = 8
+    cfg = DVQAEConfig(kind="image", in_channels=3, hidden=16, latent_dim=16,
+                      codebook_size=256, n_res_blocks=1)
+    data = make_images(key, n_clients * local_batch, size=16,
+                       n_identities=C.N_IDENTITIES)
+    stacked = partition_stacked(data, n_clients, regime="iid")
+    rounds = 3 if C.QUICK else 5
+
+    # one (C, local_batch, ...) stacked batch per round, materialized up
+    # front so the timed windows measure the round, not host-side slicing
+    round_xs = [jax.block_until_ready(b.x) for b in
+                stacked_batches(stacked, local_batch, epochs=rounds + 1)]
+
+    server = OC.server_init(key, cfg)
+    for i in range(20 if C.QUICK else 60):
+        sel = jax.random.randint(jax.random.fold_in(key, i), (32,), 0,
+                                 data.x.shape[0])
+        server, _ = OC.server_pretrain_step(server, cfg, data.x[sel])
+
+    engine = SimEngine(cfg, lr=1e-4, gamma=0.99)
+    clients = engine.init_clients(server, n_clients)
+
+    clients, packed = engine.round(clients, round_xs[0])       # compile
+    jax.block_until_ready(packed.payload)
+    t0 = time.time()
+    for xb in round_xs[1:]:
+        clients, packed = engine.round(clients, xb)
+        jax.block_until_ready(packed.payload)   # await each round's uplink,
+    dt = time.time() - t0                       # same sync as the baseline
+
+    # 1x baseline: the SAME work as a Python loop over single clients —
+    # identical per-round batches, including the per-round pack
+    step = jax.jit(lambda c, xb: OC.client_round(c, cfg, xb, lr=1e-4,
+                                                 gamma=0.99))
+    loop_clients = [OC.client_init(server) for _ in range(n_clients)]
+    step(loop_clients[0], round_xs[0][0])                      # compile
+    t0 = time.time()
+    for xb in round_xs[1:]:
+        loop_out = [step(c, xb[i]) for i, c in enumerate(loop_clients)]
+        loop_clients = [o[0] for o in loop_out]
+        loop_packed = pack_codes(jnp.stack([o[1] for o in loop_out]),
+                                 bits=engine.bits)
+        jax.block_until_ready(loop_packed)
+    loop_dt = time.time() - t0
+
+    _emit("sim", "n_clients", n_clients)
+    _emit("sim", "round_ms", f"{dt / rounds * 1e3:.1f}")
+    _emit("sim", "clients_per_sec", f"{n_clients * rounds / dt:.1f}",
+          extra=f"{loop_dt / dt:.1f}x_vs_loop")
+    naive = packed.count * 4
+    _emit("sim", "bytes_per_round", packed.nbytes,
+          extra=f"{packed.bits}bits_per_code")
+    _emit("sim", "bytes_per_round_int32", naive)
+    _emit("sim", "pack_ratio", f"{naive / packed.nbytes:.2f}")
+
+    # Step 6: accumulate rounds server-side and train from the buffer
+    from repro.core import downstream as DS
+    buf = IngestBuffer(cfg)
+    for b in stacked_batches(stacked, local_batch, epochs=3, seed=1):
+        clients, packed = engine.round(clients, b.x)
+        buf.add(packed, labels=b.content)
+    server = engine.merge_into_server(server, clients)
+    feats, labels = buf.dataset(server)               # decode ONCE
+    probe = buf.train_probe(key, server,
+                            n_classes=int(stacked.content.max()) + 1,
+                            steps=C.PROBE_STEPS, dataset=(feats, labels))
+    acc = DS.accuracy(DS.linear_probe, probe, feats, labels)
+    _emit("sim", "ingest_rounds", len(buf))
+    _emit("sim", "ingest_total_bytes", buf.total_bytes)
+    _emit("sim", "ingest_probe_acc", f"{acc:.4f}")
+
+
 SECTIONS = {
     "fig4": bench_fig4,
     "fig5": bench_fig5,
@@ -288,6 +393,7 @@ SECTIONS = {
     "sec3_8": bench_sec3_8,
     "kernels": bench_kernels,
     "gsvq": bench_gsvq,
+    "sim": bench_sim,
 }
 
 

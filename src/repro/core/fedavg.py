@@ -30,13 +30,17 @@ class FedConfig(NamedTuple):
     dp_noise: float = 0.0
 
 
-def _local_update(key, apply_fn, global_params, shard: LabeledData,
-                  label_fn, fc: FedConfig):
-    """One client's local training pass; returns the delta."""
-    params = jax.tree.map(lambda x: x, global_params)
-    opt = adamw_init(params)
-    y = label_fn(shard)
-    n = shard.x.shape[0]
+def _local_update(key, apply_fn, global_params, x, y, n_steps: int,
+                  fc: FedConfig):
+    """One client's local training pass; returns the delta.
+
+    Pure scan over local SGD steps so the same function serves the
+    sequential path AND vmaps across a stacked client population
+    (fedavg_train_batched / the repro.sim engine style of execution).
+    """
+    opt = adamw_init(global_params)
+    n = x.shape[0]
+    bsz = min(fc.local_batch, n)
 
     def loss(p, xb, yb):
         l = xent_loss(apply_fn, p, xb, yb)
@@ -46,16 +50,14 @@ def _local_update(key, apply_fn, global_params, shard: LabeledData,
             l = l + 0.5 * fc.prox_mu * jax.tree.reduce(jnp.add, sq)
         return l
 
-    @jax.jit
-    def step(params, opt, xb, yb):
-        g = jax.grad(loss)(params, xb, yb)
-        return adamw_update(params, g, opt, lr=fc.lr)
+    def body(carry, i):
+        params, opt = carry
+        sel = jax.random.randint(jax.random.fold_in(key, i), (bsz,), 0, n)
+        g = jax.grad(loss)(params, x[sel], y[sel])
+        return adamw_update(params, g, opt, lr=fc.lr), None
 
-    steps = max(1, fc.local_epochs * n // fc.local_batch)
-    for i in range(steps):
-        sel = jax.random.randint(jax.random.fold_in(key, i),
-                                 (min(fc.local_batch, n),), 0, n)
-        params, opt = step(params, opt, shard.x[sel], y[sel])
+    (params, _), _ = jax.lax.scan(body, (global_params, opt),
+                                  jnp.arange(n_steps))
     return jax.tree.map(lambda new, old: new - old, params, global_params)
 
 
@@ -93,11 +95,47 @@ def fedavg_train(key, apply_fn, init_params, shards: Sequence[LabeledData],
         deltas = []
         for ci, shard in enumerate(shards):
             k = jax.random.fold_in(jax.random.fold_in(key, r), ci)
-            d = _local_update(k, apply_fn, global_params, shard, label_fn, fc)
+            n = shard.x.shape[0]
+            steps = max(1, fc.local_epochs * n // fc.local_batch)
+            d = _local_update(k, apply_fn, global_params, shard.x,
+                              label_fn(shard), steps, fc)
             d = _privatize_delta(jax.random.fold_in(k, 999), d, fc)
             deltas.append(d)
         # weighted average of deltas (FedAvg aggregation)
         avg = jax.tree.map(
             lambda *ds: sum(w * d for w, d in zip(weights, ds)), *deltas)
         global_params = jax.tree.map(jnp.add, global_params, avg)
+    return global_params
+
+
+def fedavg_train_batched(key, apply_fn, init_params, xs, ys,
+                         fc: FedConfig = FedConfig()):
+    """Batched FedAvg: the whole client population's local passes run in
+    ONE jitted vmap per round (repro.sim-engine-style execution).
+
+    xs: (C, n, ...) / ys: (C, n) — equal-size client shards stacked on a
+    leading client axis (see repro.data.federated.partition_stacked).
+    Bit-for-bit the same per-client RNG stream as the sequential
+    ``fedavg_train`` on equal-size shards, so the two paths agree.
+    """
+    C, n = xs.shape[0], xs.shape[1]
+    steps = max(1, fc.local_epochs * n // fc.local_batch)
+
+    @jax.jit
+    def one_round(global_params, r):
+        kr = jax.random.fold_in(key, r)
+        keys = jax.vmap(lambda ci: jax.random.fold_in(kr, ci))(
+            jnp.arange(C))
+        local = lambda k, x, y: _local_update(k, apply_fn, global_params,
+                                              x, y, steps, fc)
+        deltas = jax.vmap(local)(keys, xs, ys)           # leaves (C, ...)
+        noise_keys = jax.vmap(lambda k: jax.random.fold_in(k, 999))(keys)
+        deltas = jax.vmap(lambda k, d: _privatize_delta(k, d, fc))(
+            noise_keys, deltas)
+        avg = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        return jax.tree.map(jnp.add, global_params, avg)
+
+    global_params = init_params
+    for r in range(fc.rounds):
+        global_params = one_round(global_params, r)
     return global_params

@@ -37,10 +37,30 @@ class ServerState(NamedTuple):
 
 
 class Transmission(NamedTuple):
-    """What actually crosses the network, with its §2.8 byte accounting."""
+    """What actually crosses the network, with its §2.8 byte accounting.
+
+    ``payload`` is the dense ceil(log2 K)-bit packed word stream (see
+    repro.kernels.pack_bits) — the bytes that would actually hit the
+    uplink; ``nbytes`` is MEASURED from it, not computed from a formula.
+    ``indices`` keeps the unpacked int32 view for local convenience.
+    """
     indices: jax.Array        # int32 code matrix (B, T[, n_c])
-    nbytes: int               # ceil(log2 K)/8-packed size
+    nbytes: int               # measured size of the packed payload
     labels: Optional[jax.Array] = None
+    payload: Optional[jax.Array] = None   # (n_groups, W) uint32 bit-stream
+    bits: int = 0             # bits per transmitted code
+
+
+def transmit_bits(cfg: DVQAEConfig) -> int:
+    """Bits per transmitted code index (§2.8: 5-10 bits in the paper).
+
+    With GSVQ, clients transmit *group* indices, so the alphabet is
+    n_groups, not K.
+    """
+    from repro.kernels.pack_bits import code_bits
+    if cfg.n_groups > 1:
+        return code_bits(cfg.n_groups)
+    return code_bits(cfg.codebook_size)
 
 
 # --------------------------------------------------------------- Step 1
@@ -100,15 +120,26 @@ def client_finetune_step(client: ClientState, cfg: DVQAEConfig, batch,
 
 def client_transmit(client: ClientState, cfg: DVQAEConfig, batch,
                     labels=None) -> Transmission:
-    """Encode a local batch, release ONLY the public code indices."""
-    import math
+    """Encode a local batch, release ONLY the public code indices,
+    bit-packed to ceil(log2 K) bits per code (§2.8)."""
+    from repro.kernels.ops import pack_codes
     out = forward(client.params, cfg, batch)
     idx = out.latent.indices
-    bits = max(1, math.ceil(math.log2(max(cfg.codebook_size, 2))))
-    if cfg.n_groups > 1:
-        bits = max(1, math.ceil(math.log2(max(cfg.n_groups, 2))))
-    nbytes = (int(idx.size) * bits + 7) // 8
-    return Transmission(indices=idx, nbytes=nbytes, labels=labels)
+    bits = transmit_bits(cfg)
+    payload = pack_codes(idx, bits=bits)
+    nbytes = int(payload.size) * payload.dtype.itemsize    # measured
+    return Transmission(indices=idx, nbytes=nbytes, labels=labels,
+                        payload=payload, bits=bits)
+
+
+def unpack_transmission(tx: Transmission) -> jax.Array:
+    """Server side of Step 4: packed payload -> int32 code matrix."""
+    from repro.kernels.ops import unpack_codes
+    if tx.payload is None:
+        return tx.indices
+    flat = unpack_codes(tx.payload, bits=tx.bits,
+                        count=int(jnp.size(tx.indices)))
+    return flat.reshape(tx.indices.shape)
 
 
 # --------------------------------------------------------------- Step 5
@@ -143,17 +174,52 @@ def _encode_only(params, cfg, x):
 
 
 def server_merge_codebooks(server: ServerState,
-                           client_codebooks: Sequence[jax.Array],
-                           client_counts: Sequence[jax.Array]) -> ServerState:
+                           client_codebooks,
+                           client_counts) -> ServerState:
     """Count-weighted average of synced client codebooks (global dictionary
-    update, Step 5 tail). counts: per-atom EMA N_i of each client."""
-    cbs = jnp.stack(list(client_codebooks))          # (M_clients, K, M)
-    cts = jnp.stack(list(client_counts))             # (M_clients, K)
+    update, Step 5 tail). counts: per-atom EMA N_i of each client.
+
+    Accepts either sequences of per-client (K, M) / (K,) arrays or the
+    already-stacked (M_clients, K, M) / (M_clients, K) arrays the batched
+    sim engine carries.
+    """
+    cbs = jnp.asarray(client_codebooks) if isinstance(
+        client_codebooks, jax.Array) else jnp.stack(list(client_codebooks))
+    cts = jnp.asarray(client_counts) if isinstance(
+        client_counts, jax.Array) else jnp.stack(list(client_counts))
     w = cts / jnp.maximum(jnp.sum(cts, axis=0, keepdims=True), 1e-9)
     merged = jnp.einsum("ck,ckm->km", w, cbs)
     params = {**server.params, "codebook": merged.astype(
         server.params["codebook"].dtype)}
     return ServerState(params=params, opt=server.opt, step=server.step)
+
+
+# ------------------------------------------------------- Steps 2-5 (round)
+
+def client_round(client: ClientState, cfg: DVQAEConfig, batch, *,
+                 lr: float = 1e-4, gamma: float = 0.99,
+                 n_local_steps: int = 1
+                 ) -> Tuple[ClientState, jax.Array]:
+    """One full client round: Steps 2-5 for a single client, as a pure
+    jittable function of (state, batch).
+
+    Runs ``n_local_steps`` of frozen-codebook fine-tuning (Step 2),
+    encodes the batch and takes the releasable code indices (Steps 3-4),
+    then EMA-refreshes the local codebook (Step 5). This is the unit the
+    sim engine vmaps over the client axis — see repro.sim.engine.
+
+    Returns (new_client, int32 indices); packing the indices across the
+    whole population at once is the engine's job (one big packed buffer
+    beats per-client slivers).
+    """
+    opt = None
+    for _ in range(n_local_steps):
+        client, opt, _ = client_finetune_step(client, cfg, batch, lr=lr,
+                                              opt=opt)
+    out = forward(client.params, cfg, batch)
+    idx = out.latent.indices
+    client = client_codebook_refresh(client, cfg, batch, gamma=gamma)
+    return client, idx
 
 
 # --------------------------------------------------------------- Step 6

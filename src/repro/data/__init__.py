@@ -1,2 +1,3 @@
-from .federated import batches, holdout_atd, partition, train_test_split
+from .federated import (batches, holdout_atd, partition, partition_stacked,
+                        stacked_batches, train_test_split)
 from .synthetic import LabeledData, make_images, make_speech, make_tokens

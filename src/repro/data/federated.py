@@ -47,6 +47,45 @@ def partition(data: LabeledData, n_clients: int, *, regime: str = "iid",
     return [_take(data, jnp.asarray(s)) for s in shards]
 
 
+def partition_stacked(data: LabeledData, n_clients: int, *,
+                      regime: str = "iid", skew: float = 0.2,
+                      seed: int = 0) -> LabeledData:
+    """Equal-size client shards stacked on a leading client axis.
+
+    Returns a LabeledData whose fields are (n_clients, n_per, ...) — the
+    layout the batched sim engine (repro.sim) and fedavg_train_batched
+    vmap over. Shards are truncated to the smallest shard size so they
+    stack; with array_split that drops at most n_clients-1 samples.
+    """
+    shards = partition(data, n_clients, regime=regime, skew=skew, seed=seed)
+    n_per = min(int(s.x.shape[0]) for s in shards)
+    return LabeledData(
+        x=jnp.stack([s.x[:n_per] for s in shards]),
+        content=jnp.stack([s.content[:n_per] for s in shards]),
+        style=jnp.stack([s.style[:n_per] for s in shards]))
+
+
+def stacked_batches(stacked: LabeledData, batch_size: int, *, seed: int = 0,
+                    epochs: int = 1):
+    """Per-client shuffled minibatches over a partition_stacked layout.
+
+    Yields LabeledData with (n_clients, batch_size, ...) fields — one
+    round's worth of local data for every client at once.
+    """
+    C, n = stacked.x.shape[0], stacked.x.shape[1]
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        perms = np.stack([rng.permutation(n) for _ in range(C)])  # (C, n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            sel = jnp.asarray(perms[:, i:i + batch_size])          # (C, B)
+            yield LabeledData(
+                x=jnp.take_along_axis(
+                    stacked.x, sel.reshape(sel.shape + (1,) * (
+                        stacked.x.ndim - 2)), axis=1),
+                content=jnp.take_along_axis(stacked.content, sel, axis=1),
+                style=jnp.take_along_axis(stacked.style, sel, axis=1))
+
+
 def train_test_split(data: LabeledData, test_frac: float = 0.2, seed: int = 0):
     n = int(data.content.shape[0])
     rng = np.random.default_rng(seed)

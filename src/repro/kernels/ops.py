@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_pallas
+from .pack_bits import code_bits, pack_codes_pallas, unpack_codes_pallas
 from .rmsnorm import rmsnorm_pallas
 from .selective_scan import selective_scan_pallas
 from .vq_nn import vq_nearest_pallas
@@ -20,6 +21,19 @@ def vq_nearest(z, codebook, **kw):
     """(N, M), (K, M) -> (N,) int32 nearest codebook atom per row."""
     kw.setdefault("interpret", INTERPRET)
     return vq_nearest_pallas(z, codebook, **kw)
+
+
+def pack_codes(codes, *, bits, **kw):
+    """Flat/any-shape int codes -> (n_groups, W) uint32 dense bit-stream
+    at ceil(log2 K) bits per code (see kernels/pack_bits.py layout)."""
+    kw.setdefault("interpret", INTERPRET)
+    return pack_codes_pallas(codes, bits=bits, **kw)
+
+
+def unpack_codes(words, *, bits, count, **kw):
+    """(n_groups, W) uint32 words -> (count,) int32 codes, bit-exact."""
+    kw.setdefault("interpret", INTERPRET)
+    return unpack_codes_pallas(words, bits=bits, count=count, **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):

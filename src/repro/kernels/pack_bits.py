@@ -1,0 +1,131 @@
+"""Pallas TPU kernels: dense bit-packing of VQ code indices (§2.8).
+
+OCTOPUS clients transmit int code indices; each index only needs
+``b = ceil(log2 K)`` bits (5-10 in the paper), so sending int32 wastes
+3-6x the uplink. These kernels pack a flat int32 code stream into a
+dense uint32 word stream (and back), so the transmitted byte count is
+*measured* from the packed buffer instead of computed from a formula.
+
+Layout: codes are processed in super-groups of ``G = lcm(b, 32) / b``
+codes spanning exactly ``W = lcm(b, 32) / 32`` words, so every group has
+an identical, statically-known bit layout — code ``j`` of a group lives
+at bit offset ``j*b``, possibly straddling two words. Both the pack and
+unpack kernels unroll the G-column loop with constant shifts (no
+cross-lane bit gymnastics), which keeps everything on the VPU; the grid
+tiles the group axis like ``vq_nn.py`` tiles N.
+
+The stream is padded with zero codes to a whole number of groups; the
+word-stream therefore carries ``ceil(N / G) * W`` words, i.e. exactly
+``b`` bits per code plus at most ``W*4 - 1`` trailing pad bytes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_G = 512          # groups per grid step
+
+
+def code_bits(n_atoms: int) -> int:
+    """Bits per transmitted code index: ceil(log2 K) (§2.8)."""
+    return max(1, math.ceil(math.log2(max(int(n_atoms), 2))))
+
+
+def packing_dims(bits: int):
+    """(G codes, W words) per super-group: lcm(bits, 32) bits of payload."""
+    if not 1 <= bits <= 32:
+        raise ValueError(f"bits must be in [1, 32], got {bits}")
+    lcm = bits * 32 // math.gcd(bits, 32)
+    return lcm // bits, lcm // 32
+
+
+def _group_codes(codes, bits: int):
+    """Flat int codes -> (n_groups, G) uint32, zero-padded to whole groups."""
+    G, _ = packing_dims(bits)
+    flat = codes.reshape(-1).astype(jnp.uint32)
+    pad = (-flat.shape[0]) % G
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, G) & jnp.uint32((1 << bits) - 1)
+
+
+# ------------------------------------------------------------------ kernels
+
+def _pack_kernel(codes_ref, words_ref, *, bits, G, W):
+    """One (BLOCK_G, G) -> (BLOCK_G, W) tile: OR constant-shifted columns."""
+    grp = codes_ref[...]                                  # (BG, G) uint32
+    cols = [jnp.zeros_like(grp[:, :1]) for _ in range(W)]
+    for j in range(G):
+        o = j * bits
+        w0, s = divmod(o, 32)
+        c = grp[:, j:j + 1]
+        cols[w0] = cols[w0] | (c << s)                    # low 32 bits wrap
+        if s + bits > 32:                                 # straddles a word
+            cols[w0 + 1] = cols[w0 + 1] | (c >> (32 - s))
+    words_ref[...] = jnp.concatenate(cols, axis=1)
+
+
+def _unpack_kernel(words_ref, codes_ref, *, bits, G, W):
+    """Inverse tile: rebuild each code from its (up to two) host words."""
+    words = words_ref[...]                                # (BG, W) uint32
+    mask = jnp.uint32((1 << bits) - 1)
+    cols = []
+    for j in range(G):
+        o = j * bits
+        w0, s = divmod(o, 32)
+        v = words[:, w0:w0 + 1] >> s
+        if s + bits > 32:
+            v = v | (words[:, w0 + 1:w0 + 2] << (32 - s))
+        cols.append(v & mask)
+    codes_ref[...] = jnp.concatenate(cols, axis=1).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------- wrappers
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block_g", "interpret"))
+def pack_codes_pallas(codes, *, bits: int, block_g: int = BLOCK_G,
+                      interpret: bool = False):
+    """codes: int (...,) -> (n_groups, W) uint32 dense bit-stream."""
+    G, W = packing_dims(bits)
+    grp = _group_codes(codes, bits)
+    n = grp.shape[0]
+    block_g = min(block_g, max(8, n))
+    pad = (-n) % block_g
+    if pad:
+        grp = jnp.pad(grp, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits, G=G, W=W),
+        grid=((n + pad) // block_g,),
+        in_specs=[pl.BlockSpec((block_g, G), lambda g: (g, 0))],
+        out_specs=pl.BlockSpec((block_g, W), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, W), jnp.uint32),
+        interpret=interpret,
+    )(grp)
+    return out[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "count", "block_g", "interpret"))
+def unpack_codes_pallas(words, *, bits: int, count: int,
+                        block_g: int = BLOCK_G, interpret: bool = False):
+    """(n_groups, W) uint32 -> (count,) int32 codes (pad codes dropped)."""
+    G, W = packing_dims(bits)
+    n = words.shape[0]
+    block_g = min(block_g, max(8, n))
+    pad = (-n) % block_g
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, bits=bits, G=G, W=W),
+        grid=((n + pad) // block_g,),
+        in_specs=[pl.BlockSpec((block_g, W), lambda g: (g, 0))],
+        out_specs=pl.BlockSpec((block_g, G), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, G), jnp.int32),
+        interpret=interpret,
+    )(words)
+    return out[:n].reshape(-1)[:count]

@@ -44,6 +44,40 @@ def rmsnorm_ref(x, scale, eps=1e-6):
             * scale.astype(jnp.float32)).astype(x.dtype)
 
 
+def pack_codes_ref(codes, *, bits: int):
+    """Flat int codes -> (n_groups, W) uint32 dense bit-stream.
+
+    Same super-group layout as kernels/pack_bits.py: code j of a group
+    occupies bits [j*b, (j+1)*b) of the group's lcm(b, 32)-bit payload.
+    """
+    from .pack_bits import _group_codes, packing_dims
+    G, W = packing_dims(bits)
+    grp = _group_codes(codes, bits)                       # (n_groups, G)
+    cols = [jnp.zeros_like(grp[:, 0]) for _ in range(W)]
+    for j in range(G):
+        w0, s = divmod(j * bits, 32)
+        c = grp[:, j]
+        cols[w0] = cols[w0] | (c << s)
+        if s + bits > 32:
+            cols[w0 + 1] = cols[w0 + 1] | (c >> (32 - s))
+    return jnp.stack(cols, axis=1)
+
+
+def unpack_codes_ref(words, *, bits: int, count: int):
+    """(n_groups, W) uint32 -> (count,) int32 codes."""
+    from .pack_bits import packing_dims
+    G, W = packing_dims(bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    cols = []
+    for j in range(G):
+        w0, s = divmod(j * bits, 32)
+        v = words[:, w0] >> s
+        if s + bits > 32:
+            v = v | (words[:, w0 + 1] << (32 - s))
+        cols.append(v & mask)
+    return jnp.stack(cols, axis=1).reshape(-1)[:count].astype(jnp.int32)
+
+
 def selective_scan_ref(decay, inp, c, h0):
     """Naive sequential reference: h_t = d_t h_{t-1} + i_t; y_t = <h_t, c_t>.
 

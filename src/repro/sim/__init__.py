@@ -1,0 +1,12 @@
+"""Batched multi-client OCTOPUS simulation (ROADMAP: client populations
+at scale, not one Python object per client).
+
+  engine  — stacked ClientState pytrees + one jitted vmap/shard_map round
+  ingest  — server-side buffer accumulating packed transmissions (Step 6)
+"""
+from .engine import (PackedCodes, SimEngine, client_batch_size,
+                     replicate_clients, stack_clients, unstack_clients)
+from .ingest import IngestBuffer
+
+__all__ = ["PackedCodes", "SimEngine", "IngestBuffer", "client_batch_size",
+           "replicate_clients", "stack_clients", "unstack_clients"]

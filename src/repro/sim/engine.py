@@ -1,0 +1,174 @@
+"""Batched multi-client simulation engine (OCTOPUS §2.2 at population scale).
+
+``core.octopus`` models ONE client's transition functions. Serving the
+ROADMAP's "heavy traffic from millions of users" needs the whole client
+population to advance per device call, so this engine:
+
+  * stacks ``ClientState`` pytrees along a leading client axis
+    (``replicate_clients`` / ``stack_clients``),
+  * runs Steps 2-5 (``octopus.client_round``) for every client in ONE
+    jitted ``jax.vmap`` call — hundreds of clients per dispatch instead
+    of a Python loop,
+  * optionally wraps the vmap in ``shard_map`` over the mesh 'data' axis
+    so client shards advance on separate devices (the same mesh contract
+    as repro.distributed.sharding),
+  * bit-packs the population's code indices into one dense uint32 stream
+    (repro.kernels.pack_bits) so the per-round uplink bytes are MEASURED
+    from the buffer that would actually cross the network (§2.8).
+
+Typical use::
+
+    eng = SimEngine(cfg, lr=1e-4, gamma=0.99)
+    clients = eng.init_clients(server, n_clients=256)
+    clients, packed = eng.round(clients, data)     # data: (C, B, ...)
+    server = eng.merge_into_server(server, clients)   # Step 5 tail
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.kernels.pack_bits import packing_dims
+
+
+class PackedCodes(NamedTuple):
+    """One round's packed uplink: the population's code indices as a
+    dense ceil(log2 K)-bit word stream."""
+    payload: jax.Array           # (n_groups, W) uint32
+    bits: int                    # bits per code
+    shape: Tuple[int, ...]       # original indices shape (C, B, T[, n_c])
+
+    @property
+    def nbytes(self) -> int:
+        """Measured size of the buffer that crosses the network."""
+        return int(self.payload.size) * self.payload.dtype.itemsize
+
+    @property
+    def count(self) -> int:
+        return int(math.prod(self.shape))
+
+    def unpack(self) -> jax.Array:
+        """Bit-exact inverse: -> int32 indices of the original shape."""
+        from repro.kernels.ops import unpack_codes
+        flat = unpack_codes(self.payload, bits=self.bits, count=self.count)
+        return flat.reshape(self.shape)
+
+
+# ----------------------------------------------------------- client batches
+
+def replicate_clients(server: OC.ServerState, n_clients: int
+                      ) -> OC.ClientState:
+    """Step 2 deployment for a population: one ClientState pytree whose
+    leaves carry a leading (n_clients, ...) axis."""
+    client = OC.client_init(server)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), client)
+
+
+def stack_clients(clients) -> OC.ClientState:
+    """List of per-client states -> one stacked ClientState pytree."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+
+
+def unstack_clients(batch: OC.ClientState):
+    """Stacked ClientState -> list of per-client states (debug/interop)."""
+    n = client_batch_size(batch)
+    return [jax.tree.map(lambda x: x[i], batch) for i in range(n)]
+
+
+def client_batch_size(batch: OC.ClientState) -> int:
+    return int(jax.tree.leaves(batch)[0].shape[0])
+
+
+# ------------------------------------------------------------------ engine
+
+class SimEngine:
+    """Compiles one population round (Steps 2-5) and reuses it.
+
+    mesh=None        — single host: plain jitted vmap.
+    mesh=Mesh(...)   — shard_map over the mesh 'data' axis: the client
+                       axis is sharded, each device group advances its
+                       slice of the population (n_clients must divide by
+                       the data-axis size).
+    """
+
+    def __init__(self, cfg: DVQAEConfig, *, lr: float = 1e-4,
+                 gamma: float = 0.99, n_local_steps: int = 1,
+                 mesh=None):
+        self.cfg = cfg
+        self.bits = OC.transmit_bits(cfg)
+        self.mesh = mesh
+
+        def one_client(client, batch):
+            return OC.client_round(client, cfg, batch, lr=lr, gamma=gamma,
+                                   n_local_steps=n_local_steps)
+
+        step = jax.vmap(one_client)
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            spec = P("data")
+            step = shard_map(step, mesh, in_specs=(spec, spec),
+                             out_specs=(spec, spec), check_rep=False)
+
+        bits = self.bits
+
+        def _round(clients, data):
+            clients, idx = step(clients, data)
+            from repro.kernels.ops import pack_codes
+            payload = pack_codes(idx, bits=bits)
+            return clients, payload
+
+        self._step = step
+        self._round = jax.jit(_round)
+        self._shape_cache = {}
+
+    # ------------------------------------------------------------- rounds
+
+    def init_clients(self, server: OC.ServerState, n_clients: int
+                     ) -> OC.ClientState:
+        return replicate_clients(server, n_clients)
+
+    def round(self, clients: OC.ClientState, data
+              ) -> Tuple[OC.ClientState, PackedCodes]:
+        """Advance every client one full round (Steps 2-5).
+
+        data: (C, B, ...) — one local batch per client, client axis
+        matching the stacked state. Returns the new population state and
+        the round's packed uplink.
+        """
+        c = client_batch_size(clients)
+        assert data.shape[0] == c, (data.shape, c)
+        idx_shape = self._index_shape(clients, data)
+        clients, payload = self._round(clients, data)
+        return clients, PackedCodes(payload=payload, bits=self.bits,
+                                    shape=idx_shape)
+
+    def _index_shape(self, clients, data) -> Tuple[int, ...]:
+        cache_key = tuple(data.shape)
+        if cache_key not in self._shape_cache:
+            out = jax.eval_shape(lambda c, d: self._step(c, d)[1],
+                                 clients, data)
+            self._shape_cache[cache_key] = tuple(out.shape)
+        return self._shape_cache[cache_key]
+
+    # ------------------------------------------------------- server side
+
+    def merge_into_server(self, server: OC.ServerState,
+                          clients: OC.ClientState) -> OC.ServerState:
+        """Step 5 tail: count-weighted merge of the population's synced
+        codebooks into the global dictionary — one einsum, no loop."""
+        return OC.server_merge_codebooks(server, clients.params["codebook"],
+                                         clients.ema.counts)
+
+    def dequantize(self, server: OC.ServerState, packed: PackedCodes):
+        """Step 6 entry: unpack a round's payload and look up features
+        against the CURRENT global codebook."""
+        idx = packed.unpack()
+        flat = idx.reshape((-1,) + idx.shape[2:])       # merge client axis
+        return OC.codes_to_features(server, self.cfg, flat)

@@ -1,0 +1,99 @@
+"""Server-side ingestion of packed client transmissions (Steps 4 -> 6).
+
+Clients stream bit-packed code indices at high frequency; the server
+does NOT train on every packet as it lands. ``IngestBuffer`` is the
+middle tier: it accumulates the packed payloads (cheap — they stay
+packed until needed), tracks the measured uplink byte count, and
+materializes decoded features in bulk when downstream training
+(core.downstream) wants a dataset or minibatches.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from .engine import PackedCodes
+
+
+class IngestBuffer:
+    """Accumulates rounds of packed transmissions for Step 6 training."""
+
+    def __init__(self, cfg: DVQAEConfig):
+        self.cfg = cfg
+        self._rounds: List[PackedCodes] = []
+        self._labels: List[Optional[jax.Array]] = []
+
+    def __len__(self) -> int:
+        return len(self._rounds)
+
+    def add(self, packed: PackedCodes, labels=None) -> None:
+        """Ingest one round's uplink. ``labels``: (C, B) or (C*B,) task
+        labels riding alongside the codes (benchmark harness only — the
+        real protocol ships codes)."""
+        self._rounds.append(packed)
+        self._labels.append(None if labels is None
+                            else jnp.reshape(labels, (-1,)))
+
+    @property
+    def total_bytes(self) -> int:
+        """Measured uplink bytes accumulated so far (§2.8 accounting)."""
+        return sum(p.nbytes for p in self._rounds)
+
+    @property
+    def n_samples(self) -> int:
+        return sum(p.shape[0] * p.shape[1] for p in self._rounds)
+
+    # ------------------------------------------------------------- decode
+
+    def codes(self) -> jax.Array:
+        """Unpack every buffered round -> (sum_r C_r*B_r, T[, n_c]) int32."""
+        if not self._rounds:
+            raise ValueError("empty ingest buffer")
+        parts = []
+        for p in self._rounds:
+            idx = p.unpack()
+            parts.append(idx.reshape((-1,) + idx.shape[2:]))
+        return jnp.concatenate(parts, axis=0)
+
+    def labels(self) -> Optional[jax.Array]:
+        if any(l is None for l in self._labels):
+            return None
+        return jnp.concatenate(self._labels, axis=0)
+
+    def dataset(self, server: OC.ServerState
+                ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """Decode the whole buffer against the CURRENT global codebook:
+        -> (features, labels) ready for core.downstream training."""
+        feats = OC.codes_to_features(server, self.cfg, self.codes())
+        return feats, self.labels()
+
+    def batches(self, server: OC.ServerState, batch_size: int, *,
+                key, steps: int):
+        """Minibatch stream over the decoded buffer (Step 6 training)."""
+        feats, labels = self.dataset(server)
+        n = feats.shape[0]
+        for i in range(steps):
+            sel = jax.random.randint(jax.random.fold_in(key, i),
+                                     (min(batch_size, n),), 0, n)
+            yield feats[sel], None if labels is None else labels[sel]
+
+    def train_probe(self, key, server: OC.ServerState, *, n_classes: int,
+                    steps: int = 200, lr: float = 1e-3, batch: int = 64,
+                    dataset=None):
+        """Step 6: fit the paper's 3-linear-layer probe on the buffer.
+
+        Pass ``dataset=(feats, labels)`` from a prior ``self.dataset``
+        call to skip re-decoding the buffer.
+        """
+        from repro.core import downstream as DS
+        feats, labels = dataset if dataset is not None \
+            else self.dataset(server)
+        if labels is None:
+            raise ValueError("buffer has no labels to train on")
+        probe = DS.init_linear_probe(key, int(feats[0].size), n_classes)
+        return DS.sgd_train(key, DS.linear_probe, probe, feats, labels,
+                            steps=steps, lr=lr, batch=batch)

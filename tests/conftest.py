@@ -5,6 +5,15 @@ import pytest
 jax.config.update("jax_platform_name", "cpu")
 
 
+def abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: new (sizes, names) signature vs
+    the 0.4.x ((name, size), ...) pair tuple."""
+    try:
+        return jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
+
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)

@@ -15,7 +15,8 @@ from repro.models import transformer as T
 
 def _fake_mesh_shape():
     """AbstractMesh lets us build specs without 256 devices."""
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from conftest import abstract_mesh
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

@@ -17,7 +17,8 @@ def test_no_context_is_identity(key):
 
 
 def _mesh22():
-    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    from conftest import abstract_mesh
+    return abstract_mesh((2, 2), ("data", "model"))
 
 
 def test_dp_divisibility_gate():

@@ -1,7 +1,14 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+hypothesis is a dev-only dependency (requirements-dev.txt); without it
+the module skips instead of failing collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ema, gsvq, vq

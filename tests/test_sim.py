@@ -1,0 +1,200 @@
+"""Batched multi-client sim engine (repro.sim) + bit-packing codec.
+
+The two contracts that let the engine replace the Python client loop:
+  * one jitted vmap round over N stacked clients == N single-client
+    ``octopus.client_round`` calls (allclose; indices exactly equal),
+  * pack -> unpack of code indices is bit-exact, with Pallas/jnp parity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.kernels import ops, ref
+from repro.kernels.pack_bits import code_bits, packing_dims
+from repro.sim import IngestBuffer, SimEngine, stack_clients
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=16, n_res_blocks=1)
+
+
+@pytest.fixture(scope="module")
+def server(tiny_cfg):
+    return OC.server_init(jax.random.PRNGKey(0), tiny_cfg)
+
+
+def _assert_trees_close(a, b, **kw):
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), **kw), a, b)
+
+
+# ------------------------------------------------------------------- codec
+
+@pytest.mark.parametrize("n_atoms", [16, 256, 1024])
+def test_pack_roundtrip_bitexact(n_atoms):
+    bits = code_bits(n_atoms)
+    rng = np.random.default_rng(n_atoms)
+    for count in (1, 5, 257):
+        codes = jnp.asarray(rng.integers(0, n_atoms, size=count), jnp.int32)
+        packed_ref = ref.pack_codes_ref(codes, bits=bits)
+        back = ref.unpack_codes_ref(packed_ref, bits=bits, count=count)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+        # Pallas kernels produce the identical word stream and codes
+        packed = ops.pack_codes(codes, bits=bits)
+        np.testing.assert_array_equal(np.asarray(packed),
+                                      np.asarray(packed_ref))
+        back2 = ops.unpack_codes(packed, bits=bits, count=count)
+        np.testing.assert_array_equal(np.asarray(back2), np.asarray(codes))
+
+
+@pytest.mark.parametrize("n_atoms", [16, 256, 1024])
+def test_packed_size_is_dense(n_atoms):
+    """ceil(log2 K) bits per code, plus at most one group of padding."""
+    bits = code_bits(n_atoms)
+    G, W = packing_dims(bits)
+    codes = jnp.zeros((1000,), jnp.int32)
+    packed = ops.pack_codes(codes, bits=bits)
+    nbytes = packed.size * packed.dtype.itemsize
+    assert nbytes >= (1000 * bits + 7) // 8
+    assert nbytes <= ((1000 + G - 1) // G) * W * 4
+
+
+def test_transmission_measures_packed_bytes(tiny_cfg, server, key):
+    """client_transmit carries the packed payload; nbytes is measured
+    from it and the payload unpacks bit-exactly to the indices."""
+    client = OC.client_init(server)
+    x = jax.random.normal(key, (4, 8, 8, 3))
+    tx = OC.client_transmit(client, tiny_cfg, x, labels=jnp.arange(4))
+    assert tx.payload is not None
+    assert tx.bits == code_bits(tiny_cfg.codebook_size)
+    assert tx.nbytes == tx.payload.size * tx.payload.dtype.itemsize
+    np.testing.assert_array_equal(np.asarray(OC.unpack_transmission(tx)),
+                                  np.asarray(tx.indices))
+
+
+# ------------------------------------------------------------------ engine
+
+def test_engine_round_matches_client_loop(tiny_cfg, server, key):
+    """N=64 clients in one jitted vmap == 64 single-client rounds."""
+    n_clients = 64
+    data = jax.random.normal(key, (n_clients, 2, 8, 8, 3))
+    engine = SimEngine(tiny_cfg, lr=1e-4, gamma=0.9)
+    clients = engine.init_clients(server, n_clients)
+    clients, packed = engine.round(clients, data)
+
+    singles, idxs = [], []
+    for i in range(n_clients):
+        c = OC.client_init(server)
+        c, idx = OC.client_round(c, tiny_cfg, data[i], lr=1e-4, gamma=0.9)
+        singles.append(c)
+        idxs.append(idx)
+
+    np.testing.assert_array_equal(np.asarray(packed.unpack()),
+                                  np.asarray(jnp.stack(idxs)))
+    # atol covers AdamW's lr-sized (1e-4) normalized first-step updates,
+    # whose direction is reduction-order-sensitive where gradients ~ 0
+    _assert_trees_close(clients, stack_clients(singles),
+                        rtol=1e-4, atol=3e-4)
+
+
+def test_engine_sharded_matches_unsharded(tiny_cfg, server, key):
+    """shard_map over the mesh 'data' axis == plain vmap."""
+    from repro.launch.mesh import make_host_mesh
+    n_clients = 8
+    data = jax.random.normal(key, (n_clients, 2, 8, 8, 3))
+    plain = SimEngine(tiny_cfg, gamma=0.9)
+    sharded = SimEngine(tiny_cfg, gamma=0.9, mesh=make_host_mesh())
+    c1, p1 = plain.round(plain.init_clients(server, n_clients), data)
+    c2, p2 = sharded.round(sharded.init_clients(server, n_clients), data)
+    np.testing.assert_array_equal(np.asarray(p1.unpack()),
+                                  np.asarray(p2.unpack()))
+    _assert_trees_close(c1, c2, rtol=1e-4, atol=5e-5)
+
+
+def test_engine_merge_matches_sequence_merge(tiny_cfg, server, key):
+    n_clients = 4
+    data = jax.random.normal(key, (n_clients, 2, 8, 8, 3))
+    engine = SimEngine(tiny_cfg, gamma=0.9)
+    clients, _ = engine.round(engine.init_clients(server, n_clients), data)
+    merged = engine.merge_into_server(server, clients)
+    ref_merged = OC.server_merge_codebooks(
+        server, [clients.params["codebook"][i] for i in range(n_clients)],
+        [clients.ema.counts[i] for i in range(n_clients)])
+    np.testing.assert_allclose(np.asarray(merged.params["codebook"]),
+                               np.asarray(ref_merged.params["codebook"]),
+                               rtol=1e-6)
+
+
+# ------------------------------------------------------------------ ingest
+
+def test_ingest_buffer_accumulates_and_feeds_downstream(tiny_cfg, server,
+                                                        key):
+    n_clients, b = 4, 2
+    data = jax.random.normal(key, (n_clients, b, 8, 8, 3))
+    engine = SimEngine(tiny_cfg, gamma=0.9)
+    clients = engine.init_clients(server, n_clients)
+    buf = IngestBuffer(tiny_cfg)
+    for r in range(3):
+        clients, packed = engine.round(clients, data)
+        buf.add(packed, labels=jnp.full((n_clients, b), r % 2, jnp.int32))
+    assert len(buf) == 3
+    assert buf.total_bytes == sum(p.nbytes for p in buf._rounds)
+    assert buf.n_samples == 3 * n_clients * b
+    codes = buf.codes()
+    assert codes.shape[0] == buf.n_samples
+    assert codes.dtype == jnp.int32
+    feats, labels = buf.dataset(server)
+    assert feats.shape[0] == labels.shape[0] == buf.n_samples
+    probe = buf.train_probe(key, server, n_classes=2, steps=3)
+    assert jax.tree.leaves(probe)
+
+
+# -------------------------------------------------------------------- data
+
+def test_stacked_batches_shapes_and_pool(key):
+    """stacked_batches yields (C, B, ...) rounds drawn without
+    replacement from each client's own shard."""
+    from repro.data import make_images, partition_stacked, stacked_batches
+    data = make_images(key, 48, size=8, n_identities=4)
+    stacked = partition_stacked(data, 4, regime="iid")
+    n_per = stacked.x.shape[1]
+    seen = [[] for _ in range(4)]
+    got = 0
+    for b in stacked_batches(stacked, 4, epochs=2):
+        assert b.x.shape == (4, 4, 8, 8, 3)
+        assert b.content.shape == (4, 4)
+        got += 1
+        for c in range(4):
+            seen[c].extend(np.asarray(b.content[c]).tolist())
+    assert got == 2 * (n_per // 4)
+    for c in range(4):
+        own = np.asarray(stacked.content[c])
+        # each epoch is a permutation of the client's shard labels
+        assert sorted(seen[c][:n_per]) == sorted(own.tolist())
+
+
+# ------------------------------------------------------------------ fedavg
+
+def test_fedavg_batched_matches_sequential(key):
+    from repro.core.downstream import conv_classifier, init_conv_classifier
+    from repro.core.fedavg import (FedConfig, fedavg_train,
+                                   fedavg_train_batched)
+    from repro.data import make_images, partition_stacked
+
+    data = make_images(key, 64, size=8, n_identities=4)
+    stacked = partition_stacked(data, 4, regime="iid")
+    shards = [type(data)(x=stacked.x[i], content=stacked.content[i],
+                         style=stacked.style[i]) for i in range(4)]
+    clf = init_conv_classifier(key, in_channels=3, n_classes=4)
+    fc = FedConfig(rounds=2, local_epochs=1, local_batch=8,
+                   dp_clip=0.5, dp_noise=0.01)
+    p_seq = fedavg_train(key, conv_classifier, clf, shards,
+                         lambda d: d.content, fc)
+    p_bat = fedavg_train_batched(key, conv_classifier, clf, stacked.x,
+                                 stacked.content, fc)
+    _assert_trees_close(p_seq, p_bat, rtol=1e-4, atol=1e-5)
