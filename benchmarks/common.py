@@ -31,6 +31,16 @@ PROBE_STEPS = 80 if QUICK else 250
 FED_ROUNDS = 3 if QUICK else 8
 
 
+def set_quick():
+    """Flip every size knob to the CI smoke scale after import — what
+    OCTOPUS_BENCH_QUICK=1 does at import time, for ``run.py --smoke``."""
+    global QUICK, N_DATA, IMG, N_CLIENTS, PRETRAIN_STEPS, PROBE_STEPS, \
+        FED_ROUNDS
+    QUICK = True
+    N_DATA, IMG, N_CLIENTS = 400, 16, 4
+    PRETRAIN_STEPS, PROBE_STEPS, FED_ROUNDS = 60, 80, 3
+
+
 @dataclass
 class Pipeline:
     cfg: DVQAEConfig

@@ -1,6 +1,7 @@
 """Benchmark harness — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
+    PYTHONPATH=src python -m benchmarks.run --section server --smoke
 
 Emits ``section,name,value[,extra]`` CSV lines plus wall-time per section.
 Paper targets:
@@ -13,6 +14,20 @@ Paper targets:
   kernels  Pallas kernel microbenchmarks vs jnp reference
   gsvq     GSVQ (groups x slices) accuracy vs bits-per-position
   sim      batched multi-client engine (repro.sim) throughput + uplink
+  server   async code-server runtime (repro.server): rounds/sec, decode
+           amortization, bytes-per-accuracy across traffic scenarios
+
+``server`` CSV schema (rows ``server,<scenario>_<name>,<value>[,extra]``):
+  rounds_per_sec       scheduler-driven rounds/sec through the runtime
+                       (post-compile; extra: participants per round)
+  bytes_delivered      MEASURED packed bytes landed in the CodeStore
+                       (extra: bytes sent incl. dropped/in-flight)
+  store_records        records buffered (extra: codebook versions held)
+  acc_<task>           multi-task head accuracy from ONE store decode
+  bytes_per_point      delivered bytes per content-accuracy point
+  decode_amortization  measured end-to-end: per-task pipeline time
+                       (re-decode store + fit each head) / shared
+                       pipeline time (one decode, one multi-head fit)
 
 ``sim`` CSV schema (all rows ``sim,<name>,<value>[,<extra>]``):
   n_clients            population size advanced per jitted call
@@ -26,9 +41,9 @@ Paper targets:
   bytes_per_round_int32  same indices as unpacked int32 (the naive
                        transmission the codec replaces)
   pack_ratio           bytes_per_round_int32 / bytes_per_round
-  ingest_rounds        rounds accumulated in the server IngestBuffer
+  ingest_rounds        rounds accumulated in the server CodeStore
   ingest_total_bytes   measured bytes across the buffered rounds
-  ingest_probe_acc     Step-6 probe accuracy trained from the buffer
+  ingest_probe_acc     Step-6 probe accuracy trained from the store
 """
 from __future__ import annotations
 
@@ -309,7 +324,8 @@ def bench_sim(key):
     from repro.core.dvqae import DVQAEConfig
     from repro.data import make_images, partition_stacked, stacked_batches
     from repro.kernels.ops import pack_codes
-    from repro.sim import IngestBuffer, SimEngine
+    from repro.server import CodeStore
+    from repro.sim import SimEngine
 
     n_clients = 16 if C.QUICK else 64
     local_batch = 8
@@ -367,21 +383,93 @@ def bench_sim(key):
     _emit("sim", "bytes_per_round_int32", naive)
     _emit("sim", "pack_ratio", f"{naive / packed.nbytes:.2f}")
 
-    # Step 6: accumulate rounds server-side and train from the buffer
+    # Step 6: accumulate rounds server-side and train from the store
     from repro.core import downstream as DS
-    buf = IngestBuffer(cfg)
-    for b in stacked_batches(stacked, local_batch, epochs=3, seed=1):
+    store = CodeStore(cfg)
+    for r, b in enumerate(stacked_batches(stacked, local_batch, epochs=3,
+                                          seed=1)):
         clients, packed = engine.round(clients, b.x)
-        buf.add(packed, labels=b.content)
+        store.add(packed, round=r, labels=b.content)
     server = engine.merge_into_server(server, clients)
-    feats, labels = buf.dataset(server)               # decode ONCE
-    probe = buf.train_probe(key, server,
-                            n_classes=int(stacked.content.max()) + 1,
-                            steps=C.PROBE_STEPS, dataset=(feats, labels))
+    feats, label_dict = store.dataset(server)         # decode ONCE
+    labels = label_dict["label"]
+    probe = DS.init_linear_probe(key, int(feats[0].size),
+                                 int(stacked.content.max()) + 1)
+    probe = DS.sgd_train(key, DS.linear_probe, probe, feats, labels,
+                         steps=C.PROBE_STEPS)
     acc = DS.accuracy(DS.linear_probe, probe, feats, labels)
-    _emit("sim", "ingest_rounds", len(buf))
-    _emit("sim", "ingest_total_bytes", buf.total_bytes)
+    _emit("sim", "ingest_rounds", len(store))
+    _emit("sim", "ingest_total_bytes", store.total_bytes)
     _emit("sim", "ingest_probe_acc", f"{acc:.4f}")
+
+
+# ---------------------------------------------------------------- server
+
+def bench_server(key):
+    """Async code-server runtime across STANDARD_SCENARIOS: rounds/sec,
+    measured uplink bytes, multi-task accuracy from one decode, and the
+    decode amortization factor (schema in the module docstring)."""
+    from repro.core import octopus as OC
+    from repro.core.dvqae import DVQAEConfig
+    from repro.data import make_images, partition_stacked
+    from repro.launch.octopus_server import run_scenario
+    from repro.server import STANDARD_SCENARIOS, MultiTaskTrainer, TaskSpec
+    from repro.sim import SimEngine
+
+    n_slots = 8 if C.QUICK else 16
+    local_b, rounds = 8, (4 if C.QUICK else 8)
+    cfg = DVQAEConfig(kind="image", in_channels=3, hidden=16, latent_dim=16,
+                      codebook_size=64, n_res_blocks=1)
+    data = make_images(key, n_slots * local_b * 4, size=16,
+                       n_identities=C.N_IDENTITIES)
+    server, _ = OC.server_pretrain(key, OC.server_init(key, cfg), cfg,
+                                   data.x, steps=20 if C.QUICK else 60)
+    stacked = partition_stacked(data, n_slots, regime="skewed", skew=0.2)
+    engine = SimEngine(cfg, lr=1e-4, gamma=0.95)
+    tasks = [TaskSpec("content", int(stacked.content.max()) + 1),
+             TaskSpec("style", int(stacked.style.max()) + 1)]
+
+    last_srv = None
+    for i, (name, sc) in enumerate(STANDARD_SCENARIOS.items()):
+        srv, acc, rps = run_scenario(
+            name, sc, engine=engine, server=server, stacked=stacked,
+            slots=n_slots, rounds=rounds, local_batch=local_b,
+            probe_steps=C.PROBE_STEPS, key=key, index=i, verbose=False)
+        _emit("server", f"{name}_rounds_per_sec", f"{rps:.2f}",
+              extra=f"{srv.scheduler.k}participants")
+        _emit("server", f"{name}_bytes_delivered", srv.bytes_delivered,
+              extra=f"sent={srv.bytes_sent}")
+        _emit("server", f"{name}_store_records", len(srv.store),
+              extra="v" + "+".join(map(str, srv.store.versions)))
+        for t, a in acc.items():
+            _emit("server", f"{name}_acc_{t}", f"{a:.4f}")
+        _emit("server", f"{name}_bytes_per_point",
+              f"{srv.bytes_delivered / max(acc['content'], 1e-3):.0f}")
+        last_srv = srv
+
+    # decode amortization, measured end-to-end: training every head from
+    # ONE shared decode vs a per-task pipeline that re-decodes the store
+    # for each head (what Step 6 without the shared store would do).
+    # Every trainer's jitted step is warmed first so the ratio measures
+    # decode + train work, not compile-count asymmetry.
+    steps = max(C.PROBE_STEPS // 4, 10)
+    feats, labels = last_srv.dataset()
+    in_dim = int(feats[0].size)
+    shared = MultiTaskTrainer(key, tasks, in_dim)
+    singles = [MultiTaskTrainer(key, [t], in_dim) for t in tasks]
+    for tr in [shared] + singles:
+        tr.fit(key, feats, labels, steps=1, batch=64)      # compile warmup
+    t0 = time.time()
+    feats, labels = last_srv.dataset()
+    shared.fit(key, feats, labels, steps=steps, batch=64)
+    t_shared = max(time.time() - t0, 1e-9)
+    t0 = time.time()
+    for tr in singles:
+        feats, labels = last_srv.dataset()                 # per-task decode
+        tr.fit(key, feats, labels, steps=steps, batch=64)
+    t_per_task = time.time() - t0
+    _emit("server", "decode_amortization", f"{t_per_task / t_shared:.2f}",
+          extra=f"{t_shared * 1e3:.0f}ms_shared_pipeline")
 
 
 SECTIONS = {
@@ -394,14 +482,19 @@ SECTIONS = {
     "kernels": bench_kernels,
     "gsvq": bench_gsvq,
     "sim": bench_sim,
+    "server": bench_server,
 }
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="",
+    ap.add_argument("--only", "--section", dest="only", default="",
                     help="comma-separated subset of sections")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke scale (same as OCTOPUS_BENCH_QUICK=1)")
     args = ap.parse_args()
+    if args.smoke:
+        C.set_quick()
     run = [s.strip() for s in args.only.split(",") if s.strip()] or \
         list(SECTIONS)
     key = jax.random.PRNGKey(0)

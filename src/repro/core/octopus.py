@@ -84,6 +84,22 @@ def server_pretrain_step(state: ServerState, cfg: DVQAEConfig, batch,
     return ServerState(params=params, opt=opt, step=state.step + 1), out
 
 
+def server_pretrain(key, server: ServerState, cfg: DVQAEConfig, x, *,
+                    steps: int, batch: int = 32, lr: float = 1e-3
+                    ) -> Tuple[ServerState, Optional[DVQAEOut]]:
+    """Step 1 driver: ``steps`` ATD pretraining steps over random
+    minibatches of ``x``. Returns (server, last step's DVQAEOut — None
+    when steps == 0). Shared by the launch entries and benchmarks so the
+    fold_in/randint minibatch idiom lives in one place.
+    """
+    out = None
+    for i in range(steps):
+        sel = jax.random.randint(jax.random.fold_in(key, i), (batch,), 0,
+                                 x.shape[0])
+        server, out = server_pretrain_step(server, cfg, x[sel], lr=lr)
+    return server, out
+
+
 # --------------------------------------------------------------- Step 2
 
 def client_init(server: ServerState) -> ClientState:
@@ -175,20 +191,39 @@ def _encode_only(params, cfg, x):
 
 def server_merge_codebooks(server: ServerState,
                            client_codebooks,
-                           client_counts) -> ServerState:
+                           client_counts,
+                           *, staleness=None,
+                           staleness_decay: float = 1.0) -> ServerState:
     """Count-weighted average of synced client codebooks (global dictionary
     update, Step 5 tail). counts: per-atom EMA N_i of each client.
 
     Accepts either sequences of per-client (K, M) / (K,) arrays or the
     already-stacked (M_clients, K, M) / (M_clients, K) arrays the batched
     sim engine carries.
+
+    ``staleness`` (optional, (M_clients,) int): how many codebook versions
+    behind the global dictionary each client's sync is — the async server
+    runtime (repro.server) discounts stale contributions by
+    ``staleness_decay ** staleness`` on top of the count weights, so a
+    client that slept through two merges pulls the dictionary less than
+    one that synced last round.
     """
     cbs = jnp.asarray(client_codebooks) if isinstance(
         client_codebooks, jax.Array) else jnp.stack(list(client_codebooks))
     cts = jnp.asarray(client_counts) if isinstance(
         client_counts, jax.Array) else jnp.stack(list(client_counts))
-    w = cts / jnp.maximum(jnp.sum(cts, axis=0, keepdims=True), 1e-9)
-    merged = jnp.einsum("ck,ckm->km", w, cbs)
+    w = cts
+    if staleness is not None:
+        decay = staleness_decay ** jnp.asarray(staleness, jnp.float32)
+        w = w * decay[:, None]
+    tot = jnp.sum(w, axis=0)                                  # (K,)
+    merged = jnp.einsum("ck,ckm->km",
+                        w / jnp.maximum(tot[None], 1e-9), cbs)
+    # atoms with no effective contribution (e.g. every client fully
+    # staleness-decayed) keep the current dictionary instead of
+    # collapsing to zero
+    cur = server.params["codebook"].astype(merged.dtype)
+    merged = jnp.where(tot[:, None] > 1e-9, merged, cur)
     params = {**server.params, "codebook": merged.astype(
         server.params["codebook"].dtype)}
     return ServerState(params=params, opt=server.opt, step=server.step)
@@ -234,11 +269,22 @@ def gather_codes(transmissions: Sequence[Transmission]):
     return idx, labels, total_bytes
 
 
-def codes_to_features(server: ServerState, cfg: DVQAEConfig, indices):
-    """Dequantize gathered codes into downstream-task features."""
+def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
+                      indices, *, codebook=None):
+    """Dequantize gathered codes into downstream-task features.
+
+    ``codebook`` overrides the server's current dictionary — the versioned
+    code store (repro.server) passes the registry snapshot the codes were
+    packed under, so Step 5 lag never decodes against the wrong table.
+    """
     from .gsvq import gsvq_dequantize_indices
     from .vq import dequantize
-    cb = server.params["codebook"]
+    if codebook is None:
+        if server is None:
+            raise ValueError("codes_to_features needs a ServerState or an "
+                             "explicit codebook= to decode against")
+        codebook = server.params["codebook"]
+    cb = codebook
     if cfg.n_groups > 1 or cfg.n_slices > 1:
         return gsvq_dequantize_indices(indices, cb, n_groups=cfg.n_groups,
                                        n_slices=cfg.n_slices)

@@ -1,0 +1,108 @@
+"""Async code-server launch entry: scheduler scenarios over the runtime.
+
+Drives the repro.server subsystem end-to-end — pretrain a global DVQ-AE,
+replay one (or every) STANDARD_SCENARIOS traffic profile through
+``AsyncCodeServer``, then train the multi-task heads from one decode of
+the versioned CodeStore. Prints per-scenario rounds/sec, measured uplink
+bytes, store/version state and task accuracies.
+
+    PYTHONPATH=src python -m repro.launch.octopus_server \
+        [--scenario full|partial|churn|all] [--slots 8] [--rounds 8] \
+        [--smoke]
+
+``--smoke`` shrinks every knob to CI scale (a few seconds on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.data import make_images, partition_stacked, stacked_batches
+from repro.server import (STANDARD_SCENARIOS, AsyncCodeServer,
+                          MultiTaskTrainer, RoundScheduler, TaskSpec)
+from repro.sim import SimEngine
+
+
+def run_scenario(name, scenario, *, engine, server, stacked, slots, rounds,
+                 local_batch, probe_steps, key, index: int = 0,
+                 verbose: bool = True):
+    """Drive one traffic scenario through the runtime, then train the
+    two standard heads from one store decode. Shared by this CLI and
+    ``benchmarks.run::bench_server`` — returns (srv, acc, rounds_per_sec).
+    """
+    if rounds < 2:
+        raise ValueError("need rounds >= 2: round 0 is the compile warmup, "
+                         "rounds/sec is timed over the rest")
+    sched = RoundScheduler(slots, scenario.sched,
+                           key=jax.random.fold_in(key, index))
+    srv = AsyncCodeServer(engine, server, sched,
+                          merge_every=scenario.merge_every,
+                          staleness_decay=0.5)
+    t0 = time.time()
+    for r, b in zip(range(rounds),
+                    stacked_batches(stacked, local_batch, epochs=rounds)):
+        if r == 1:
+            t0 = time.time()                    # round 0 pays compilation
+        srv.run_round(b.x, labels={"content": b.content, "style": b.style})
+    rps = (rounds - 1) / max(time.time() - t0, 1e-9)
+
+    feats, labels = srv.dataset()
+    tasks = [TaskSpec("content", int(stacked.content.max()) + 1),
+             TaskSpec("style", int(stacked.style.max()) + 1)]
+    trainer = MultiTaskTrainer(key, tasks, int(feats[0].size))
+    trainer.fit(key, feats, labels, steps=probe_steps, batch=64)
+    acc = trainer.accuracy(feats, labels)
+    if verbose:
+        print(f"[{name}] {rps:.2f} rounds/sec | bytes sent={srv.bytes_sent} "
+              f"delivered={srv.bytes_delivered} "
+              f"dropped={srv.bytes_dropped} | "
+              f"store {len(srv.store)} recs v{list(srv.store.versions)} "
+              f"({srv.n_merges} merges) | "
+              + " ".join(f"{t}={a:.3f}" for t, a in acc.items()))
+    return srv, acc, rps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="all",
+                    choices=sorted(STANDARD_SCENARIOS) + ["all"])
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--local-batch", type=int, default=8)
+    ap.add_argument("--codebook", type=int, default=64)
+    ap.add_argument("--probe-steps", type=int, default=150)
+    ap.add_argument("--pretrain-steps", type=int, default=80)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.smoke:
+        args.slots, args.rounds, args.local_batch = 4, 4, 4
+        args.probe_steps, args.pretrain_steps = 20, 20
+
+    key = jax.random.PRNGKey(args.seed)
+    cfg = DVQAEConfig(kind="image", in_channels=3, hidden=16, latent_dim=16,
+                      codebook_size=args.codebook, n_res_blocks=1)
+    data = make_images(key, max(args.slots * args.local_batch * args.rounds,
+                                args.slots * 16), size=16, n_identities=4)
+    server, out = OC.server_pretrain(key, OC.server_init(key, cfg), cfg,
+                                     data.x, steps=args.pretrain_steps)
+    if out is not None:
+        print(f"pretrain recon loss: {float(out.recon_loss):.4f}")
+
+    stacked = partition_stacked(data, args.slots, regime="skewed", skew=0.2)
+    engine = SimEngine(cfg, lr=1e-4, gamma=0.95)
+    names = sorted(STANDARD_SCENARIOS) if args.scenario == "all" \
+        else [args.scenario]
+    for i, name in enumerate(names):
+        run_scenario(name, STANDARD_SCENARIOS[name], engine=engine,
+                     server=server, stacked=stacked, slots=args.slots,
+                     rounds=args.rounds, local_batch=args.local_batch,
+                     probe_steps=args.probe_steps, key=key, index=i)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Asynchronous code-server runtime (OCTOPUS Step 6 at production scale).
+
+  store      — CodeStore: capacity-bounded, versioned, lazily-decoded
+               store of packed transmissions (supersedes sim.IngestBuffer)
+  registry   — CodebookRegistry: immutable per-merge dictionary snapshots
+               + staleness-weighted Step 5 merge
+  scheduler  — RoundScheduler: partial participation, stragglers, drops,
+               client churn — deterministic under one PRNG key
+  multitask  — MultiTaskTrainer: N downstream heads from ONE bulk decode
+  runtime    — AsyncCodeServer: ties it all to sim.SimEngine per round
+"""
+from .multitask import MultiTaskTrainer, TaskSpec
+from .registry import CodebookRegistry
+from .runtime import AsyncCodeServer, RoundStats
+from .scheduler import (STANDARD_SCENARIOS, RoundEvent, RoundScheduler,
+                        Scenario, SchedulerConfig)
+from .store import CodeStore, StoreRecord
+
+__all__ = ["AsyncCodeServer", "CodeStore", "CodebookRegistry",
+           "MultiTaskTrainer", "RoundEvent", "RoundScheduler", "RoundStats",
+           "STANDARD_SCENARIOS", "Scenario", "SchedulerConfig",
+           "StoreRecord", "TaskSpec"]

@@ -1,0 +1,75 @@
+"""Codebook version registry (Step 5 bookkeeping for an async server).
+
+The paper's Step 5 is low-frequency: clients refresh codebooks locally
+and sync to the server, which merges them into the global dictionary.
+In an asynchronous deployment the merge happens *while* code uplinks
+packed under older dictionaries are still in flight (stragglers, churned
+clients that never re-deployed). Decoding those codes against the
+post-merge dictionary is silently wrong — the atom an index named at
+pack time has moved.
+
+``CodebookRegistry`` pins every merged dictionary as an immutable
+snapshot keyed by a monotonically increasing version, so the code store
+can decode each transmission against exactly the table it was packed
+under, bit-for-bit, no matter how many merges happened since.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import octopus as OC
+
+
+class CodebookRegistry:
+    """Immutable (K, M) codebook snapshots, one per merge."""
+
+    def __init__(self, codebook: jax.Array):
+        self._versions: Dict[int, jax.Array] = {0: jnp.asarray(codebook)}
+        self.latest = 0
+
+    def __len__(self) -> int:
+        return len(self._versions)
+
+    def __contains__(self, version: int) -> bool:
+        return int(version) in self._versions
+
+    def get(self, version: int) -> jax.Array:
+        """Snapshot for ``version``; KeyError if it was never registered."""
+        return self._versions[int(version)]
+
+    @property
+    def current(self) -> jax.Array:
+        return self._versions[self.latest]
+
+    def register(self, codebook: jax.Array) -> int:
+        """Pin a new global dictionary; returns its version number."""
+        self.latest += 1
+        self._versions[self.latest] = jnp.asarray(codebook)
+        return self.latest
+
+    # ----------------------------------------------------------- merging
+
+    def merge(self, server: OC.ServerState, client_codebooks, client_counts,
+              *, client_versions=None, staleness_decay: float = 1.0
+              ) -> tuple[OC.ServerState, int]:
+        """Staleness-weighted Step 5 merge + snapshot registration.
+
+        ``client_versions`` (per-client int, same leading axis as the
+        codebooks): the registry version each client last deployed from.
+        Staleness is ``latest - version`` and discounts the client's
+        count weight by ``staleness_decay ** staleness`` (see
+        ``octopus.server_merge_codebooks``). Returns the merged server
+        state and the freshly registered version.
+        """
+        staleness = None
+        if client_versions is not None and staleness_decay != 1.0:
+            staleness = jnp.maximum(
+                self.latest - jnp.asarray(client_versions, jnp.int32), 0)
+        merged = OC.server_merge_codebooks(
+            server, client_codebooks, client_counts,
+            staleness=staleness, staleness_decay=staleness_decay)
+        version = self.register(merged.params["codebook"])
+        return merged, version

@@ -1,0 +1,224 @@
+"""Asynchronous code-server runtime (Step 6 as a first-class subsystem).
+
+``AsyncCodeServer`` owns the server side of the protocol under realistic
+traffic: a fixed slot array of clients (stacked ``ClientState``), a
+``RoundScheduler`` deciding who participates / straggles / churns, a
+``CodebookRegistry`` pinning every merged dictionary, and a ``CodeStore``
+absorbing the uplinks. Per round it
+
+  1. applies churn — (re-)joining slots deploy fresh from the CURRENT
+     server and adopt the latest codebook version; leavers go dark with
+     whatever stale state they had,
+  2. advances the participant subset through ONE jitted engine call
+     (``SimEngine.round_indices``) and scatters the states back,
+  3. splits the participants into delivery groups by (codebook version,
+     straggler delay, dropped) and bit-packs each group's codes into its
+     own measured uplink buffer — stragglers' packets stay tagged with
+     the version they were packed under,
+  4. delivers every in-flight packet whose arrival round has come into
+     the CodeStore (dropped packets burn uplink bytes but never land),
+  5. every ``merge_every`` rounds runs the staleness-weighted Step 5
+     merge over the ACTIVE population — slots that never got sampled
+     since their last deploy still sit on an older dictionary version,
+     so their contribution is discounted by ``staleness_decay ** lag`` —
+     registers the new dictionary version, and (optionally) re-deploys
+     the slots that actually participated since the last merge (only
+     they synced; everyone else keeps lagging until sampled or churned).
+
+Downstream, ``MultiTaskTrainer`` trains any number of heads from one
+bulk decode of the store — see repro.server.multitask.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import octopus as OC
+from repro.kernels.ops import pack_codes
+from repro.sim.engine import PackedCodes, SimEngine
+
+from .registry import CodebookRegistry
+from .scheduler import RoundEvent, RoundScheduler
+from .store import CodeStore
+
+
+class PendingUplink(NamedTuple):
+    """A packed delivery group still in flight (straggler delay)."""
+    arrival_round: int
+    packed: PackedCodes
+    client_ids: np.ndarray
+    sent_round: int
+    version: int
+    labels: Optional[Dict[str, jax.Array]]
+
+
+class RoundStats(NamedTuple):
+    round: int
+    n_participants: int
+    n_joined: int
+    n_left: int
+    bytes_sent: int          # measured, incl. packets that will drop
+    bytes_delivered: int     # measured, landed in the store this round
+    n_delivered: int         # delivery groups landed this round
+    merged_version: Optional[int]   # registry version if this round merged
+
+
+class AsyncCodeServer:
+    """Server runtime: scheduler-driven rounds over a versioned store."""
+
+    def __init__(self, engine: SimEngine, server: OC.ServerState,
+                 scheduler: RoundScheduler, *,
+                 store: Optional[CodeStore] = None,
+                 registry: Optional[CodebookRegistry] = None,
+                 merge_every: int = 0, staleness_decay: float = 0.5,
+                 redeploy_on_merge: bool = True):
+        self.engine = engine
+        self.server = server
+        self.scheduler = scheduler
+        self.n_slots = scheduler.n_slots
+        self.registry = registry or CodebookRegistry(
+            server.params["codebook"])
+        self.store = store if store is not None else CodeStore(engine.cfg)
+        self.merge_every = merge_every
+        self.staleness_decay = staleness_decay
+        self.redeploy_on_merge = redeploy_on_merge
+
+        self.clients = engine.init_clients(server, self.n_slots)
+        self.slot_versions = np.full(self.n_slots, self.registry.latest,
+                                     dtype=int)
+        self._participated = np.zeros(self.n_slots, dtype=bool)
+        self._pending: List[PendingUplink] = []
+        self.round = 0
+        self.bytes_sent = 0
+        self.bytes_delivered = 0
+        self.bytes_dropped = 0
+        self.n_merges = 0
+
+    # ------------------------------------------------------------ helpers
+
+    def _set_slots(self, ids: np.ndarray, sub: OC.ClientState) -> None:
+        self.clients = jax.tree.map(
+            lambda full, part: full.at[jnp.asarray(ids)].set(part),
+            self.clients, sub)
+
+    def _deploy_fresh(self, ids: np.ndarray) -> None:
+        """(Re-)deploy slots from the CURRENT server (Step 2 for joiners)."""
+        if ids.size == 0:
+            return
+        fresh = OC.client_init(self.server)
+        self.clients = jax.tree.map(
+            lambda full, leaf: full.at[jnp.asarray(ids)].set(leaf),
+            self.clients, fresh)
+        self.slot_versions[ids] = self.registry.latest
+
+    # -------------------------------------------------------------- round
+
+    def run_round(self, data, labels=None) -> RoundStats:
+        """One scheduler-driven round.
+
+        data: (n_slots, B, ...) — every slot's would-be local batch (only
+        participants' rows are touched). labels: optional per-task dict
+        (or bare array) of (n_slots, B) arrays riding with the uplink.
+        """
+        assert data.shape[0] == self.n_slots, (data.shape, self.n_slots)
+        ev: RoundEvent = self.scheduler.step()
+        self._deploy_fresh(ev.joined)
+
+        ids = ev.participants
+        jids = jnp.asarray(ids)
+        sub = jax.tree.map(lambda x: x[jids], self.clients)
+        sub, idx = self.engine.round_indices(sub, data[jids])
+        self._set_slots(ids, sub)
+        self._participated[ids] = True
+
+        label_dict = None
+        if labels is not None:
+            label_dict = labels if isinstance(labels, dict) \
+                else {"label": labels}
+
+        # ---- split into delivery groups: (version, delay, dropped)
+        sent = 0
+        versions = self.slot_versions[ids]
+        groups: Dict[tuple, list] = {}
+        for j in range(ids.size):
+            k = (int(versions[j]), int(ev.delays[j]), bool(ev.dropped[j]))
+            groups.setdefault(k, []).append(j)
+        for (version, delay, dropped), pos in groups.items():
+            pos = np.asarray(pos)
+            gidx = idx[jnp.asarray(pos)]
+            payload = pack_codes(gidx, bits=self.engine.bits)
+            packed = PackedCodes(payload=payload, bits=self.engine.bits,
+                                 shape=tuple(gidx.shape))
+            sent += packed.nbytes
+            if dropped:
+                self.bytes_dropped += packed.nbytes
+                continue
+            glabels = None
+            if label_dict is not None:
+                grows = jnp.asarray(ids[pos])
+                glabels = {t: y[grows].reshape(-1)
+                           for t, y in label_dict.items()}
+            self._pending.append(PendingUplink(
+                arrival_round=self.round + delay, packed=packed,
+                client_ids=ids[pos], sent_round=self.round,
+                version=version, labels=glabels))
+        self.bytes_sent += sent
+
+        # ---- deliver everything whose arrival round has come
+        delivered, n_del = 0, 0
+        still: List[PendingUplink] = []
+        for p in self._pending:
+            if p.arrival_round <= self.round:
+                self.store.add(p.packed, client_ids=p.client_ids,
+                               round=p.sent_round, version=p.version,
+                               labels=p.labels)
+                delivered += p.packed.nbytes
+                n_del += 1
+            else:
+                still.append(p)
+        self._pending = still
+        self.bytes_delivered += delivered
+
+        # ---- low-frequency Step 5 merge over the ACTIVE population
+        merged_version = None
+        if self.merge_every and (self.round + 1) % self.merge_every == 0:
+            merged_version = self._merge()
+
+        stats = RoundStats(round=self.round, n_participants=ids.size,
+                           n_joined=ev.joined.size, n_left=ev.left.size,
+                           bytes_sent=sent, bytes_delivered=delivered,
+                           n_delivered=n_del, merged_version=merged_version)
+        self.round += 1
+        return stats
+
+    def _merge(self) -> int:
+        act = np.nonzero(self.scheduler.active)[0]
+        jact = jnp.asarray(act)
+        self.server, version = self.registry.merge(
+            self.server,
+            self.clients.params["codebook"][jact],
+            self.clients.ema.counts[jact],
+            client_versions=self.slot_versions[act],
+            staleness_decay=self.staleness_decay)
+        self.n_merges += 1
+        if self.redeploy_on_merge:
+            # only slots that participated since the last merge synced;
+            # everyone else keeps their stale deployment (and version),
+            # so the NEXT merge discounts them by staleness_decay ** lag
+            self._deploy_fresh(np.nonzero(self._participated
+                                          & self.scheduler.active)[0])
+        self._participated[:] = False
+        return version
+
+    # ---------------------------------------------------------- downstream
+
+    def dataset(self):
+        """Version-correct bulk decode of everything delivered so far."""
+        return self.store.dataset(self.server, registry=self.registry)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._pending)

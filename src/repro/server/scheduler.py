@@ -1,0 +1,137 @@
+"""Production-traffic round scheduler: participation, stragglers, churn.
+
+The batched sim engine advances whichever clients you hand it; real
+deployments decide that set adversarially — a fraction of the population
+participates per round, some uplinks arrive rounds late (stragglers),
+some never arrive (radio loss), and the population itself churns as
+devices enroll and disappear. ``RoundScheduler`` turns those knobs into
+a deterministic per-round event stream that the async code server
+replays through ``SimEngine``, so every scenario — full participation,
+25 % + stragglers, churn with codebook-version lag — runs through the
+SAME jitted population round.
+
+Determinism: the whole schedule is a pure function of the constructor
+PRNG key (per-round streams via ``jax.random.fold_in``); two schedulers
+built from equal keys emit identical event sequences.
+
+Shapes stay static: exactly ``k = max(1, round(participation *
+n_slots))`` participants are drawn per round (from the ACTIVE slots), so
+the engine compiles one (k, B, ...) round and reuses it for the run.
+Leaves are capped to keep at least ``k`` slots active.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    participation: float = 1.0   # fraction of slots drawn per round
+    straggler_prob: float = 0.0  # P(an uplink is delayed >= 1 round)
+    max_delay: int = 3           # truncated-geometric delay support
+    delay_p: float = 0.5         # geometric continue-probability
+    drop_prob: float = 0.0       # P(an uplink never arrives)
+    leave_prob: float = 0.0      # per-active-slot P(depart) per round
+    join_prob: float = 0.0       # per-inactive-slot P(enroll) per round
+
+
+class RoundEvent(NamedTuple):
+    """Everything that happens to the population in one round."""
+    round: int
+    participants: np.ndarray     # (k,) slot ids drawn this round
+    delays: np.ndarray           # (k,) rounds until the uplink lands
+    dropped: np.ndarray          # (k,) bool — uplink lost entirely
+    joined: np.ndarray           # slot ids that (re-)enrolled this round
+    left: np.ndarray             # slot ids that departed this round
+
+
+def _rng_from_key(key) -> np.random.Generator:
+    """Host-side Generator seeded from a jax PRNG key (old or new style)."""
+    try:
+        data = jax.random.key_data(key)
+    except (TypeError, AttributeError):
+        data = key
+    return np.random.default_rng(np.asarray(data).astype(np.uint32))
+
+
+class RoundScheduler:
+    """Deterministic event stream over a fixed slot array."""
+
+    def __init__(self, n_slots: int, cfg: SchedulerConfig = SchedulerConfig(),
+                 *, key):
+        self.n_slots = int(n_slots)
+        self.cfg = cfg
+        self._key = key
+        self.round = 0
+        self.active = np.ones(self.n_slots, dtype=bool)
+        self.k = max(1, int(round(cfg.participation * self.n_slots)))
+        if self.k > self.n_slots:
+            raise ValueError(f"participation {cfg.participation} needs "
+                             f"{self.k} > {self.n_slots} slots")
+
+    def step(self) -> RoundEvent:
+        cfg = self.cfg
+        rng = _rng_from_key(jax.random.fold_in(self._key, self.round))
+
+        # ---- churn first: the participant draw sees this round's roster
+        joined = np.array([], dtype=int)
+        left = np.array([], dtype=int)
+        if cfg.join_prob > 0.0:
+            idle = np.nonzero(~self.active)[0]
+            joined = idle[rng.random(idle.size) < cfg.join_prob]
+            self.active[joined] = True
+        if cfg.leave_prob > 0.0:
+            act = np.nonzero(self.active)[0]
+            cand = act[rng.random(act.size) < cfg.leave_prob]
+            # keep at least k slots active so the compiled shape holds;
+            # the cap drops a RANDOM subset of the would-be leavers so
+            # churn stays unbiased across slot ids
+            n_spare = int(self.active.sum()) - self.k
+            left = rng.permutation(cand)[:max(0, min(cand.size, n_spare))]
+            self.active[left] = False
+
+        act = np.nonzero(self.active)[0]
+        participants = rng.choice(act, size=self.k, replace=False)
+        participants.sort()
+
+        delays = np.zeros(self.k, dtype=int)
+        if cfg.straggler_prob > 0.0:
+            slow = rng.random(self.k) < cfg.straggler_prob
+            # truncated geometric on {1..max_delay}
+            d = rng.geometric(1.0 - cfg.delay_p, size=self.k)
+            delays = np.where(slow, np.minimum(d, cfg.max_delay), 0)
+        dropped = (rng.random(self.k) < cfg.drop_prob
+                   if cfg.drop_prob > 0.0 else np.zeros(self.k, dtype=bool))
+
+        ev = RoundEvent(round=self.round, participants=participants,
+                        delays=delays, dropped=dropped,
+                        joined=np.sort(joined), left=np.sort(left))
+        self.round += 1
+        return ev
+
+
+class Scenario(NamedTuple):
+    """A named traffic profile: scheduler knobs + merge cadence."""
+    sched: SchedulerConfig
+    merge_every: int
+
+
+STANDARD_SCENARIOS: Dict[str, Scenario] = {
+    # every slot reports every round, no failures — the sync baseline
+    "full": Scenario(SchedulerConfig(), merge_every=4),
+    # the paper-realistic regime: 25 % participation, half the uplinks
+    # straggle 1-2 rounds, 1-in-8 drops on the radio
+    "partial": Scenario(SchedulerConfig(participation=0.25,
+                                        straggler_prob=0.5, max_delay=2,
+                                        drop_prob=0.125), merge_every=4),
+    # device churn with frequent merges: stragglers and re-joiners carry
+    # codebook-version lag into the store
+    "churn": Scenario(SchedulerConfig(participation=0.5,
+                                      straggler_prob=0.5, max_delay=3,
+                                      leave_prob=0.2, join_prob=0.5),
+                      merge_every=2),
+}

@@ -1,0 +1,258 @@
+"""Versioned, capacity-bounded store of packed client transmissions.
+
+This is Step 6's front door. Clients stream bit-packed code indices at
+high frequency; the server must absorb them under churn without either
+unbounded memory or eager decoding. ``CodeStore`` supersedes the passive
+``sim.IngestBuffer``:
+
+  * entries stay PACKED until a trainer asks for features — storage cost
+    is the measured uplink bytes, not the decoded float tensors;
+  * every entry is keyed by ``(client_ids, round, codebook_version)`` so
+    transmissions that raced a Step 5 merge decode against the registry
+    snapshot they were packed under (bit-exact), never the current table;
+  * a sample-count capacity with FIFO or reservoir eviction bounds the
+    store under "millions of users" traffic — FIFO keeps the freshest
+    window, reservoir keeps an (approximately) uniform sample of history;
+  * decoding is BULK: records are grouped by version and each group is
+    dequantized in one call, so a multi-task trainer pays one decode for
+    the whole store regardless of how many heads consume it.
+
+Labels ride along per task: ``add(..., labels={"content": y1, "style":
+y2})`` — shape-validated against the packed payload at add() time, not
+at decode time three rounds later.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.sim.engine import PackedCodes
+
+LabelsLike = Union[None, jax.Array, np.ndarray, Dict[str, jax.Array]]
+
+DEFAULT_TASK = "label"
+
+
+class StoreRecord(NamedTuple):
+    """One buffered uplink: a packed payload plus its provenance."""
+    packed: PackedCodes
+    client_ids: np.ndarray              # (C,) who sent these codes
+    round: int                          # scheduler round it was SENT
+    version: int                        # codebook version it was packed under
+    labels: Optional[Dict[str, jax.Array]]   # task -> (C*B,) labels
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.packed.shape[0]) * int(self.packed.shape[1])
+
+
+def _normalize_labels(labels: LabelsLike, n: int) -> Optional[Dict]:
+    """dict/array/None -> {task: (n,) array} with add()-time validation."""
+    if labels is None:
+        return None
+    if not isinstance(labels, dict):
+        labels = {DEFAULT_TASK: labels}
+    out = {}
+    for task, arr in labels.items():
+        arr = jnp.asarray(arr)
+        if arr.size != n:
+            raise ValueError(
+                f"labels[{task!r}] has {arr.size} entries but the packed "
+                f"payload carries {n} samples (shape mismatch caught at "
+                f"add(), not decode)")
+        out[task] = arr.reshape(-1)
+    return out
+
+
+class CodeStore:
+    """Capacity-bounded, lazily-decoded store of packed transmissions."""
+
+    def __init__(self, cfg: DVQAEConfig, *,
+                 capacity_samples: Optional[int] = None,
+                 policy: str = "fifo", seed: int = 0):
+        if policy not in ("fifo", "reservoir"):
+            raise ValueError(f"policy must be fifo|reservoir, got {policy!r}")
+        self.cfg = cfg
+        self.capacity_samples = capacity_samples
+        self.policy = policy
+        self._rng = np.random.default_rng(seed)
+        self._records: List[StoreRecord] = []
+        self._seen_records = 0            # total ever added (reservoir stats)
+        self.evicted_samples = 0
+        self.evicted_records = 0
+
+    # ----------------------------------------------------------- metadata
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    @property
+    def records(self) -> Tuple[StoreRecord, ...]:
+        return tuple(self._records)
+
+    @property
+    def n_samples(self) -> int:
+        return sum(r.n_samples for r in self._records)
+
+    @property
+    def total_bytes(self) -> int:
+        """Measured packed bytes currently held (§2.8 accounting)."""
+        return sum(r.packed.nbytes for r in self._records)
+
+    @property
+    def versions(self) -> Tuple[int, ...]:
+        return tuple(sorted({r.version for r in self._records}))
+
+    @property
+    def tasks(self) -> Tuple[str, ...]:
+        names: Dict[str, None] = {}
+        for r in self._records:
+            if r.labels:
+                for t in r.labels:
+                    names[t] = None
+        return tuple(names)
+
+    # ---------------------------------------------------------------- add
+
+    def add(self, packed: PackedCodes, *, client_ids=None, round: int = 0,
+            version: int = 0, labels: LabelsLike = None) -> StoreRecord:
+        """Ingest one packed uplink.
+
+        packed.shape is (C, B, T[, n_c]); ``client_ids`` (C,) defaults to
+        0..C-1. ``labels``: per-task (C, B)/(C*B,) arrays (or one bare
+        array, stored under task name ``"label"``) — validated HERE.
+        """
+        if len(packed.shape) < 2:
+            raise ValueError(f"packed payload must carry a (clients, batch) "
+                             f"leading layout, got shape {packed.shape}")
+        C, B = int(packed.shape[0]), int(packed.shape[1])
+        if client_ids is None:
+            client_ids = np.arange(C)
+        client_ids = np.asarray(client_ids).reshape(-1)
+        if client_ids.shape[0] != C:
+            raise ValueError(f"client_ids has {client_ids.shape[0]} entries "
+                             f"for {C} client rows in the payload")
+        rec = StoreRecord(packed=packed, client_ids=client_ids,
+                          round=int(round), version=int(version),
+                          labels=_normalize_labels(labels, C * B))
+        self._records.append(rec)
+        self._seen_records += 1
+        self._evict()
+        return rec
+
+    def _evict(self) -> None:
+        if self.capacity_samples is None:
+            return
+        while self.n_samples > self.capacity_samples and len(self._records) > 1:
+            if self.policy == "fifo":
+                victim = 0
+            else:
+                # Algorithm-R reservoir over records: the INCOMING record
+                # is kept with prob slots/seen (replacing a uniform old
+                # record), else rejected — survivors stay an approximately
+                # uniform sample of everything ever added
+                slots = len(self._records) - 1
+                if self._rng.random() < slots / self._seen_records:
+                    victim = int(self._rng.integers(0, slots))
+                else:
+                    victim = len(self._records) - 1
+            rec = self._records.pop(victim)
+            self.evicted_samples += rec.n_samples
+            self.evicted_records += 1
+
+    # ------------------------------------------------------------- lookup
+
+    def get(self, client_id: int, round: int) -> Tuple[jax.Array, int]:
+        """Decode ONE client's codes from the (client_id, round) key:
+        -> ((B, T[, n_c]) int32 indices, codebook version)."""
+        for rec in self._records:
+            if rec.round != round:
+                continue
+            pos = np.nonzero(rec.client_ids == client_id)[0]
+            if pos.size:
+                idx = rec.packed.unpack()
+                return idx[int(pos[0])], rec.version
+        raise KeyError((client_id, round))
+
+    # ------------------------------------------------------------- decode
+
+    def codes(self, version: Optional[int] = None) -> jax.Array:
+        """Unpack buffered records -> (N, T[, n_c]) int32, record order.
+        ``version`` filters to codes packed under that codebook version."""
+        recs = [r for r in self._records
+                if version is None or r.version == version]
+        if not recs:
+            raise ValueError("empty code store"
+                             + (f" for version {version}" if version
+                                is not None else ""))
+        parts = []
+        for r in recs:
+            idx = r.packed.unpack()
+            parts.append(idx.reshape((-1,) + idx.shape[2:]))
+        return jnp.concatenate(parts, axis=0)
+
+    def labels(self, task: Optional[str] = None) -> Optional[jax.Array]:
+        """Concatenated labels for ``task`` (record order), or None if any
+        record lacks them."""
+        if task is None:
+            task = DEFAULT_TASK
+        parts = []
+        for r in self._records:
+            if not r.labels or task not in r.labels:
+                return None
+            parts.append(r.labels[task])
+        return jnp.concatenate(parts, axis=0) if parts else None
+
+    def label_dict(self) -> Dict[str, jax.Array]:
+        """All tasks that every record carries -> {task: (N,) labels}."""
+        out = {}
+        for t in self.tasks:
+            v = self.labels(t)
+            if v is not None:
+                out[t] = v
+        return out
+
+    def dataset(self, server: Optional[OC.ServerState], *, registry=None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Bulk decode: ONE dequantize per codebook version.
+
+        With a ``registry`` (repro.server.CodebookRegistry) each version
+        group decodes against its own snapshot; without one, everything
+        decodes against the server's current table (the old IngestBuffer
+        behaviour). Returns (features (N, ...), {task: (N,) labels}) in
+        record order.
+        """
+        if not self._records:
+            raise ValueError("empty code store")
+        by_version: Dict[int, List[int]] = {}
+        for i, r in enumerate(self._records):
+            by_version.setdefault(r.version, []).append(i)
+        feats_parts: List[Optional[jax.Array]] = [None] * len(self._records)
+        for version, idxs in by_version.items():
+            codes = jnp.concatenate(
+                [self._records[i].packed.unpack().reshape(
+                    (-1,) + self._records[i].packed.shape[2:])
+                 for i in idxs], axis=0)
+            cb = registry.get(version) if registry is not None else None
+            feats = OC.codes_to_features(server, self.cfg, codes, codebook=cb)
+            off = 0
+            for i in idxs:
+                n = self._records[i].n_samples
+                feats_parts[i] = feats[off:off + n]
+                off += n
+        return jnp.concatenate(feats_parts, axis=0), self.label_dict()
+
+    def batches(self, server, batch_size: int, *, key, steps: int,
+                registry=None):
+        """Minibatch stream over the decoded store (decoded ONCE)."""
+        feats, labels = self.dataset(server, registry=registry)
+        n = feats.shape[0]
+        for i in range(steps):
+            sel = jax.random.randint(jax.random.fold_in(key, i),
+                                     (min(batch_size, n),), 0, n)
+            yield feats[sel], {t: y[sel] for t, y in labels.items()}

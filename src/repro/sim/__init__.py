@@ -2,7 +2,8 @@
 at scale, not one Python object per client).
 
   engine  — stacked ClientState pytrees + one jitted vmap/shard_map round
-  ingest  — server-side buffer accumulating packed transmissions (Step 6)
+  ingest  — DEPRECATED server-side buffer; superseded by the async
+            code-server runtime (repro.server.CodeStore)
 """
 from .engine import (PackedCodes, SimEngine, client_batch_size,
                      replicate_clients, stack_clients, unstack_clients)

@@ -125,6 +125,7 @@ class SimEngine:
             return clients, payload
 
         self._step = step
+        self._step_jit = jax.jit(step)
         self._round = jax.jit(_round)
         self._shape_cache = {}
 
@@ -148,6 +149,21 @@ class SimEngine:
         clients, payload = self._round(clients, data)
         return clients, PackedCodes(payload=payload, bits=self.bits,
                                     shape=idx_shape)
+
+    def round_indices(self, clients: OC.ClientState, data
+                      ) -> Tuple[OC.ClientState, jax.Array]:
+        """Steps 2-5 for the (sub)population, returning the UNPACKED int32
+        code indices (C, B, T[, n_c]).
+
+        The async code server (repro.server) uses this instead of
+        ``round`` because participants split into delivery groups —
+        stragglers, drops, per-version lanes — and each group packs its
+        own uplink buffer; one population-wide payload would glue them
+        together.
+        """
+        c = client_batch_size(clients)
+        assert data.shape[0] == c, (data.shape, c)
+        return self._step_jit(clients, data)
 
     def _index_shape(self, clients, data) -> Tuple[int, ...]:
         cache_key = tuple(data.shape)

@@ -1,18 +1,22 @@
-"""Server-side ingestion of packed client transmissions (Steps 4 -> 6).
+"""DEPRECATED: server-side ingestion buffer (Steps 4 -> 6).
 
-Clients stream bit-packed code indices at high frequency; the server
-does NOT train on every packet as it lands. ``IngestBuffer`` is the
-middle tier: it accumulates the packed payloads (cheap — they stay
-packed until needed), tracks the measured uplink byte count, and
-materializes decoded features in bulk when downstream training
-(core.downstream) wants a dataset or minibatches.
+``IngestBuffer`` was the passive PR-1 middle tier between packed client
+uplinks and downstream training. It is superseded by the asynchronous
+code-server runtime's ``repro.server.CodeStore`` — versioned,
+capacity-bounded, bulk-decoding — and now lives on only as a thin
+compatibility alias over it. New code should use::
+
+    from repro.server import CodeStore
+
+which adds (client, round, codebook-version) keying, FIFO/reservoir
+eviction, registry-snapshot decoding, and per-task label channels.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import warnings
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
@@ -20,55 +24,54 @@ from .engine import PackedCodes
 
 
 class IngestBuffer:
-    """Accumulates rounds of packed transmissions for Step 6 training."""
+    """Deprecated alias: single-label, unbounded view over a CodeStore.
+
+    Shapes are validated at ``add()`` (a mismatched ``labels`` used to
+    surface only rounds later, at decode time).
+    """
 
     def __init__(self, cfg: DVQAEConfig):
+        warnings.warn(
+            "IngestBuffer is deprecated; use repro.server.CodeStore "
+            "(versioned, capacity-bounded, multi-task)",
+            DeprecationWarning, stacklevel=2)
+        from repro.server.store import CodeStore
         self.cfg = cfg
-        self._rounds: List[PackedCodes] = []
-        self._labels: List[Optional[jax.Array]] = []
+        self._store = CodeStore(cfg)
 
     def __len__(self) -> int:
-        return len(self._rounds)
+        return len(self._store)
 
     def add(self, packed: PackedCodes, labels=None) -> None:
         """Ingest one round's uplink. ``labels``: (C, B) or (C*B,) task
-        labels riding alongside the codes (benchmark harness only — the
-        real protocol ships codes)."""
-        self._rounds.append(packed)
-        self._labels.append(None if labels is None
-                            else jnp.reshape(labels, (-1,)))
+        labels riding alongside the codes — shape-checked here."""
+        self._store.add(packed, round=len(self._store), labels=labels)
 
     @property
     def total_bytes(self) -> int:
         """Measured uplink bytes accumulated so far (§2.8 accounting)."""
-        return sum(p.nbytes for p in self._rounds)
+        return self._store.total_bytes
 
     @property
     def n_samples(self) -> int:
-        return sum(p.shape[0] * p.shape[1] for p in self._rounds)
+        return self._store.n_samples
 
     # ------------------------------------------------------------- decode
 
     def codes(self) -> jax.Array:
         """Unpack every buffered round -> (sum_r C_r*B_r, T[, n_c]) int32."""
-        if not self._rounds:
+        if not len(self._store):
             raise ValueError("empty ingest buffer")
-        parts = []
-        for p in self._rounds:
-            idx = p.unpack()
-            parts.append(idx.reshape((-1,) + idx.shape[2:]))
-        return jnp.concatenate(parts, axis=0)
+        return self._store.codes()
 
     def labels(self) -> Optional[jax.Array]:
-        if any(l is None for l in self._labels):
-            return None
-        return jnp.concatenate(self._labels, axis=0)
+        return self._store.labels()
 
     def dataset(self, server: OC.ServerState
                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
         """Decode the whole buffer against the CURRENT global codebook:
         -> (features, labels) ready for core.downstream training."""
-        feats = OC.codes_to_features(server, self.cfg, self.codes())
+        feats, _ = self._store.dataset(server)
         return feats, self.labels()
 
     def batches(self, server: OC.ServerState, batch_size: int, *,

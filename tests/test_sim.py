@@ -138,12 +138,15 @@ def test_ingest_buffer_accumulates_and_feeds_downstream(tiny_cfg, server,
     data = jax.random.normal(key, (n_clients, b, 8, 8, 3))
     engine = SimEngine(tiny_cfg, gamma=0.9)
     clients = engine.init_clients(server, n_clients)
-    buf = IngestBuffer(tiny_cfg)
+    with pytest.warns(DeprecationWarning):
+        buf = IngestBuffer(tiny_cfg)     # thin alias over server.CodeStore
+    packeds = []
     for r in range(3):
         clients, packed = engine.round(clients, data)
         buf.add(packed, labels=jnp.full((n_clients, b), r % 2, jnp.int32))
+        packeds.append(packed)
     assert len(buf) == 3
-    assert buf.total_bytes == sum(p.nbytes for p in buf._rounds)
+    assert buf.total_bytes == sum(p.nbytes for p in packeds)
     assert buf.n_samples == 3 * n_clients * b
     codes = buf.codes()
     assert codes.shape[0] == buf.n_samples
