@@ -3,7 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
     PYTHONPATH=src python -m benchmarks.run --section server --smoke
 
-Emits ``section,name,value[,extra]`` CSV lines plus wall-time per section.
+Emits ``section,name,value[,extra]`` CSV lines plus wall-time per section,
+and writes each section's rows as a machine-readable ``BENCH_<section>.json``
+artifact (``{"section", "rows": [{name, value, extra}], "wall_s"}``) in the
+working directory so benchmark trajectories can be tracked across commits.
 Paper targets:
   fig4     downstream accuracy: centralized vs FL variants vs OCTOPUS
   fig5     privatization: private-attribute accuracy + conditional entropy
@@ -16,6 +19,16 @@ Paper targets:
   sim      batched multi-client engine (repro.sim) throughput + uplink
   server   async code-server runtime (repro.server): rounds/sec, decode
            amortization, bytes-per-accuracy across traffic scenarios
+  decode   fused packed-code->feature decode (kernels/decode_codes.py)
+           vs the unpack-then-dequantize baseline
+
+``decode`` CSV schema (rows ``decode,<cfg>_<name>,<value>[,extra]``):
+  fused_samples_per_sec     decoded samples/s straight from the packed
+                            word stream (ops.decode_codes)
+  baseline_samples_per_sec  same decode as unpack_codes -> dequantize
+                            (two materialized hops)
+  fused_gbps / baseline_gbps   measured packed-payload GB/s of each path
+  speedup                   baseline time / fused time (same jit regime)
 
 ``server`` CSV schema (rows ``server,<scenario>_<name>,<value>[,extra]``):
   rounds_per_sec       scheduler-driven rounds/sec through the runtime
@@ -48,6 +61,7 @@ Paper targets:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -55,10 +69,23 @@ import jax.numpy as jnp
 
 from benchmarks import common as C
 
+_ROWS = []      # every _emit row, grouped into BENCH_<section>.json by main()
+
 
 def _emit(section, name, value, extra=""):
+    _ROWS.append({"section": section, "name": name, "value": value,
+                  "extra": extra})
     print(f"{section},{name},{value}{',' + str(extra) if extra else ''}",
           flush=True)
+
+
+def _write_artifact(section, wall_s):
+    """Dump one section's rows as machine-readable BENCH_<section>.json."""
+    rows = [{k: r[k] for k in ("name", "value", "extra")}
+            for r in _ROWS if r["section"] == section]
+    with open(f"BENCH_{section}.json", "w") as f:
+        json.dump({"section": section, "wall_s": round(wall_s, 1),
+                   "rows": rows}, f, indent=1)
 
 
 # ------------------------------------------------------------------- fig 4
@@ -472,6 +499,70 @@ def bench_server(key):
           extra=f"{t_shared * 1e3:.0f}ms_shared_pipeline")
 
 
+# ---------------------------------------------------------------- decode
+
+def bench_decode(key):
+    """Step 6 ingest hot path: fused packed->feature decode
+    (ops.decode_codes, one pass, no index/atom tensors in HBM) vs the
+    unpack-then-dequantize baseline, both jitted (schema in the module
+    docstring)."""
+    import numpy as np
+    from repro.core import octopus as OC
+    from repro.core.dvqae import DVQAEConfig
+    from repro.kernels import ops
+    from repro.sim.engine import PackedCodes
+
+    n_samples = 2_000 if C.QUICK else 20_000
+    T = 64                                    # codes per sample
+    cases = [
+        ("vq_k256", DVQAEConfig(kind="image", latent_dim=16,
+                                codebook_size=256)),
+        ("gsvq_g16s4", DVQAEConfig(kind="image", latent_dim=16,
+                                   codebook_size=64, n_groups=16,
+                                   n_slices=4)),
+    ]
+    rng = np.random.default_rng(0)
+    for name, cfg in cases:
+        cb = jax.random.normal(key, (cfg.codebook_size, cfg.latent_dim))
+        bits = OC.transmit_bits(cfg)
+        gsvq = cfg.n_groups > 1 or cfg.n_slices > 1
+        shape = (n_samples, T, cfg.n_slices) if gsvq else (n_samples, T)
+        hi = cfg.n_groups if gsvq else cfg.codebook_size
+        idx = jnp.asarray(rng.integers(0, hi, size=shape), jnp.int32)
+        payload = jax.block_until_ready(ops.pack_codes(idx, bits=bits))
+        packed = PackedCodes(payload=payload, bits=bits, shape=shape)
+
+        fused_fn = jax.jit(lambda w: OC.codes_to_features(
+            None, cfg, PackedCodes(payload=w, bits=bits, shape=shape),
+            codebook=cb))
+        base_fn = jax.jit(lambda w: OC.codes_to_features(
+            None, cfg, ops.unpack_codes(w, bits=bits,
+                                        count=packed.count).reshape(shape),
+            codebook=cb))
+        jax.block_until_ready(fused_fn(payload))          # compile
+        jax.block_until_ready(base_fn(payload))
+
+        def timeit(fn, n=3 if C.QUICK else 10):
+            t0 = time.time()
+            for _ in range(n):
+                out = fn(payload)
+            jax.block_until_ready(out)
+            return (time.time() - t0) / n
+
+        t_fused, t_base = timeit(fused_fn), timeit(base_fn)
+        gb = packed.nbytes / 1e9
+        _emit("decode", f"{name}_fused_samples_per_sec",
+              f"{n_samples / t_fused:.0f}", extra=f"{bits}bits_per_code")
+        _emit("decode", f"{name}_baseline_samples_per_sec",
+              f"{n_samples / t_base:.0f}")
+        _emit("decode", f"{name}_fused_gbps", f"{gb / t_fused:.4f}")
+        _emit("decode", f"{name}_baseline_gbps", f"{gb / t_base:.4f}")
+        _emit("decode", f"{name}_speedup", f"{t_base / t_fused:.2f}",
+              extra=f"{t_fused * 1e3:.1f}ms_fused")
+    _emit("decode", "note", "fused path timed in Pallas interpret mode on "
+          "CPU; TPU timings require hardware (cf. kernels section)")
+
+
 SECTIONS = {
     "fig4": bench_fig4,
     "fig5": bench_fig5,
@@ -483,6 +574,7 @@ SECTIONS = {
     "gsvq": bench_gsvq,
     "sim": bench_sim,
     "server": bench_server,
+    "decode": bench_decode,
 }
 
 
@@ -502,7 +594,9 @@ def main():
     for name in run:
         t0 = time.time()
         SECTIONS[name](key)
-        _emit(name, "_section_wall_s", f"{time.time()-t0:.1f}")
+        wall = time.time() - t0
+        _emit(name, "_section_wall_s", f"{wall:.1f}")
+        _write_artifact(name, wall)
 
 
 if __name__ == "__main__":

@@ -115,6 +115,25 @@ def gsvq_dequantize_indices(indices, codebook, z_hint=None, *, n_groups: int,
     return out.reshape(*lead, M)
 
 
+def gsvq_group_mean_table(codebook, *, n_groups: int, n_slices: int):
+    """Precomputed uniform group means: (n_slices, n_groups, m).
+
+    Row ``(s, g)`` is the mean of group ``g``'s atoms restricted to slice
+    ``s`` — exactly what :func:`gsvq_dequantize_indices` computes per
+    index, hoisted out so the server's fused decode kernel
+    (kernels/decode_codes.py) can gather one m-dim row per code instead
+    of materialising the (N, N_g, m) atom tensor.
+    """
+    K, M = codebook.shape
+    m = M // n_slices
+    ng = K // n_groups
+    cb = codebook.reshape(K, n_slices, m).transpose(1, 0, 2)     # (n_c, K, m)
+    return jnp.mean(cb.reshape(n_slices, n_groups, ng, m), axis=2)
+
+
 def gsvq_bits_per_position(n_groups: int, n_slices: int) -> int:
+    """Uplink bits per latent position (§2.8): ``n_slices`` group indices
+    of ``ceil(log2 n_groups)`` bits each (1-bit floor; the alphabet is
+    the group id even when n_groups == 1)."""
     import math
     return n_slices * max(1, math.ceil(math.log2(max(n_groups, 2))))

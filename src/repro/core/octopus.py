@@ -54,11 +54,15 @@ class Transmission(NamedTuple):
 def transmit_bits(cfg: DVQAEConfig) -> int:
     """Bits per transmitted code index (§2.8: 5-10 bits in the paper).
 
-    With GSVQ, clients transmit *group* indices, so the alphabet is
-    n_groups, not K.
+    With GSVQ (any ``n_groups``/``n_slices`` > 1) clients transmit one
+    *group* index per slice per position, so the per-code alphabet is
+    n_groups — including sliced configs with n_groups == 1, whose codes
+    are a single-symbol alphabet (1-bit floor), NOT K. Per position this
+    is ``n_slices * transmit_bits == gsvq_bits_per_position``; measured
+    payload sizes (Transmission.nbytes / PackedCodes.nbytes) follow.
     """
     from repro.kernels.pack_bits import code_bits
-    if cfg.n_groups > 1:
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
         return code_bits(cfg.n_groups)
     return code_bits(cfg.codebook_size)
 
@@ -172,13 +176,20 @@ def client_codebook_refresh(client: ClientState, cfg: DVQAEConfig, batch,
     from .disentangle import instance_norm_latent
     out = forward(client.params, cfg, batch)
     idx = out.latent.indices
-    if cfg.n_groups > 1:
-        # group indices -> representative atom index (group centre)
-        ng = cfg.codebook_size // cfg.n_groups
-        idx = idx[..., 0] * ng + ng // 2
     z_e, _ = _encode_only(client.params, cfg, batch)
     if cfg.apply_in:
         z_e = instance_norm_latent(z_e)
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
+        # GSVQ: idx is a (..., n_c) per-slice GROUP-index matrix, not flat
+        # atom ids — map every slice's group index to its representative
+        # atom (group centre) and let each slice match vote its position's
+        # latent into that atom's EMA mass. (Feeding the raw matrix to
+        # ema_update scattered onto wrong atoms; n_groups == 1 sliced
+        # configs used to skip the mapping entirely.)
+        ng = cfg.codebook_size // cfg.n_groups
+        idx = idx * ng + ng // 2                       # (..., n_c) atom ids
+        z_e = jnp.broadcast_to(z_e[..., None, :],
+                               idx.shape + z_e.shape[-1:])
     ema = ema_update(client.ema, z_e, idx, gamma=gamma)
     params = {**client.params, "codebook": ema.codebook}
     return ClientState(params=params, ema=ema, step=client.step)
@@ -259,19 +270,77 @@ def client_round(client: ClientState, cfg: DVQAEConfig, batch, *,
 
 # --------------------------------------------------------------- Step 6
 
-def gather_codes(transmissions: Sequence[Transmission]):
-    """Server-side dataset assembly from client uploads."""
+def gather_codes(transmissions: Sequence[Transmission], *,
+                 fill_label: int = -1):
+    """Server-side dataset assembly from client uploads.
+
+    Labels: if every upload carries them they concatenate; if none do,
+    ``labels`` is None. MIXED labeled/unlabeled uploads keep sample
+    alignment with the gathered codes by filling the unlabeled uploads'
+    slots with ``fill_label`` (default -1) — semi-supervised Step 6
+    training masks those out. (Keying off ``transmissions[0]`` used to
+    crash on [labeled, unlabeled] and silently drop [unlabeled, labeled].)
+    """
     idx = jnp.concatenate([t.indices for t in transmissions], axis=0)
-    labels = None
-    if transmissions[0].labels is not None:
-        labels = jnp.concatenate([t.labels for t in transmissions], axis=0)
+    have = [t.labels is not None for t in transmissions]
+    if not any(have):
+        labels = None
+    elif all(have):
+        labels = jnp.concatenate([jnp.asarray(t.labels)
+                                  for t in transmissions], axis=0)
+    else:
+        ref = jnp.asarray(next(t.labels for t in transmissions
+                               if t.labels is not None))
+        dtype = ref.dtype
+        if jnp.issubdtype(dtype, jnp.unsignedinteger):
+            dtype = jnp.int32           # fill_label must stay negative
+        labels = jnp.concatenate(
+            [jnp.asarray(t.labels).astype(dtype) if t.labels is not None
+             else jnp.full((int(t.indices.shape[0]),) + ref.shape[1:],
+                           fill_label, dtype)
+             for t in transmissions], axis=0)
     total_bytes = sum(t.nbytes for t in transmissions)
     return idx, labels, total_bytes
+
+
+def decode_table(cfg: DVQAEConfig, codebook):
+    """Decode-side lookup table for the fused kernel: ((rows, F), n_slices).
+
+    Plain VQ: the codebook itself ((K, M), 1) — a code gathers its atom.
+    GSVQ: the stacked per-slice group-mean table
+    ((n_slices * n_groups, m), n_slices) — gathering row ``s*n_groups+g``
+    is mathematically identical to ``gsvq_dequantize_indices``'s uniform
+    group average (kernels/decode_codes.py consumes this layout).
+    """
+    from .gsvq import gsvq_group_mean_table
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
+        t = gsvq_group_mean_table(codebook, n_groups=cfg.n_groups,
+                                  n_slices=cfg.n_slices)
+        return t.reshape(cfg.n_slices * cfg.n_groups, -1), cfg.n_slices
+    return codebook, 1
+
+
+def _packed_view(tx):
+    """(payload, bits, index shape) of a PackedCodes or packed Transmission,
+    or None when ``tx`` is a plain index array (or an unpacked Transmission)."""
+    payload = getattr(tx, "payload", None)
+    if payload is None:
+        return None
+    if isinstance(tx, Transmission):
+        return payload, tx.bits, tuple(tx.indices.shape)
+    return payload, tx.bits, tuple(tx.shape)    # sim.engine.PackedCodes
 
 
 def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
                       indices, *, codebook=None):
     """Dequantize gathered codes into downstream-task features.
+
+    ``indices`` is either an int32 code array OR a packed carrier (a
+    ``sim.engine.PackedCodes`` / packed ``Transmission``) — the latter
+    takes the fused decode path (ops.decode_codes): straight from the
+    uint32 word stream to feature rows, never materialising the index or
+    gathered-atom tensors. Both paths agree bit-exactly for VQ and to
+    fp32 tolerance for GSVQ means.
 
     ``codebook`` overrides the server's current dictionary — the versioned
     code store (repro.server) passes the registry snapshot the codes were
@@ -285,6 +354,23 @@ def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
                              "explicit codebook= to decode against")
         codebook = server.params["codebook"]
     cb = codebook
+    packed = _packed_view(indices)
+    if packed is not None:
+        from repro.kernels.ops import decode_codes
+        payload, bits, shape = packed
+        table, n_slices = decode_table(cfg, cb)
+        count = 1
+        for d in shape:
+            count *= int(d)
+        rows = decode_codes(payload, table, bits=bits, count=count,
+                            n_slices=n_slices)
+        if cfg.n_groups > 1 or cfg.n_slices > 1:
+            # shape ends with n_c; per-code rows are m-dim slice chunks
+            # whose row-major concatenation IS the (..., M) layout
+            return rows.reshape(shape[:-1] + (shape[-1] * table.shape[-1],))
+        return rows.reshape(shape + (table.shape[-1],))
+    if isinstance(indices, Transmission):       # unpacked legacy carrier
+        indices = indices.indices
     if cfg.n_groups > 1 or cfg.n_slices > 1:
         return gsvq_dequantize_indices(indices, cb, n_groups=cfg.n_groups,
                                        n_slices=cfg.n_slices)

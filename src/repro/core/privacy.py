@@ -86,18 +86,27 @@ def evaluate_adversary(params, features, labels, n_classes: int
 def privacy_audit(key, public_feats, private_feats, labels, n_classes: int,
                   steps: int = 300) -> Tuple[AdversaryMetrics, AdversaryMetrics]:
     """Paired audit: adversary on Z• (want: high H, low acc) vs on Z∘
-    (expected: low H, high acc — the style really is there)."""
+    (expected: low H, high acc — the style really is there).
+
+    Samples are permuted with the provided key before the 80/20 split:
+    OCTOPUS features typically arrive label-sorted (the non-iid
+    partitions of data.federated concatenate per-class shards), and an
+    unshuffled head/tail split would evaluate the adversary on classes it
+    never saw — degenerating the H(Y|Z) bound instead of measuring leakage.
+    """
     n = labels.shape[0]
-    split = int(0.8 * n)
-    k1, k2 = jax.random.split(key)
-    pub = train_adversary(k1, public_feats[:split], labels[:split], n_classes,
-                          steps=steps)
-    pub_m = evaluate_adversary(pub, public_feats[split:], labels[split:],
-                               n_classes)
     # private component broadcasts over positions; tile to sample count
     pf = jnp.broadcast_to(private_feats,
                           (n,) + private_feats.shape[1:]) \
         if private_feats.shape[0] != n else private_feats
+    kp, k1, k2 = jax.random.split(key, 3)
+    perm = jax.random.permutation(kp, n)
+    public_feats, pf, labels = public_feats[perm], pf[perm], labels[perm]
+    split = int(0.8 * n)
+    pub = train_adversary(k1, public_feats[:split], labels[:split], n_classes,
+                          steps=steps)
+    pub_m = evaluate_adversary(pub, public_feats[split:], labels[split:],
+                               n_classes)
     prv = train_adversary(k2, pf[:split], labels[:split], n_classes,
                           steps=steps)
     prv_m = evaluate_adversary(prv, pf[split:], labels[split:], n_classes)

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .decode_codes import decode_codes_pallas
 from .flash_attention import flash_attention_pallas
 from .pack_bits import code_bits, pack_codes_pallas, unpack_codes_pallas
 from .rmsnorm import rmsnorm_pallas
@@ -34,6 +35,23 @@ def unpack_codes(words, *, bits, count, **kw):
     """(n_groups, W) uint32 words -> (count,) int32 codes, bit-exact."""
     kw.setdefault("interpret", INTERPRET)
     return unpack_codes_pallas(words, bits=bits, count=count, **kw)
+
+
+def decode_codes(words, table, *, bits, count, n_slices=1, phases=None,
+                 use_ref=False, **kw):
+    """Fused packed-word -> feature decode: (n, W) uint32 words + a
+    (n_slices*R, F) decode table -> (count, F) rows, without the int32
+    index or gathered-atom tensors ever hitting HBM (see
+    kernels/decode_codes.py for the layout and the GSVQ mean-table
+    contract). ``use_ref=True`` falls back to the pure-jnp oracle
+    (ref.decode_codes_ref) — same result, no Pallas dispatch."""
+    if use_ref:
+        from .ref import decode_codes_ref
+        return decode_codes_ref(words, table, bits=bits, count=count,
+                                n_slices=n_slices, phases=phases)
+    kw.setdefault("interpret", INTERPRET)
+    return decode_codes_pallas(words, table, bits=bits, count=count,
+                               n_slices=n_slices, phases=phases, **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):

@@ -78,6 +78,29 @@ def unpack_codes_ref(words, *, bits: int, count: int):
     return jnp.stack(cols, axis=1).reshape(-1)[:count].astype(jnp.int32)
 
 
+def decode_codes_ref(words, table, *, bits: int, count: int,
+                     n_slices: int = 1, phases=None):
+    """(n_groups, W) uint32 + (n_slices*R, F) table -> (count, F) rows.
+
+    Unpack-then-gather oracle for kernels/decode_codes.py: code ``j`` of
+    stream group ``g`` belongs to slice ``(phases[g] + j) % n_slices``
+    and gathers table row ``slice * R + code``.
+    """
+    from .pack_bits import packing_dims
+    G, _ = packing_dims(bits)
+    n = words.shape[0]
+    codes = unpack_codes_ref(words, bits=bits, count=n * G)
+    if n_slices > 1:
+        pos = jnp.arange(n * G, dtype=jnp.int32)
+        if phases is None:
+            sl = pos % n_slices
+        else:
+            ph = jnp.asarray(phases, jnp.int32).reshape(-1)
+            sl = (ph[pos // G] + pos % G) % n_slices
+        codes = sl * (table.shape[0] // n_slices) + codes
+    return table[codes[:count]]
+
+
 def selective_scan_ref(decay, inp, c, h0):
     """Naive sequential reference: h_t = d_t h_{t-1} + i_t; y_t = <h_t, c_t>.
 

@@ -217,9 +217,53 @@ class CodeStore:
                 out[t] = v
         return out
 
+    def _decode_group(self, recs: List[StoreRecord], server, codebook
+                      ) -> List[jax.Array]:
+        """ONE fused decode dispatch for records packed under one version.
+
+        The records' packed word streams are concatenated (each is padded
+        to whole super-groups, so record boundaries sit on word rows) and
+        handed to ops.decode_codes with a per-record-restarting slice
+        phase vector; the int32 index and gathered-atom tensors never
+        materialise. Returns per-record (C*B, T..., M) feature blocks.
+        """
+        from repro.kernels.decode_codes import stream_phases
+        from repro.kernels.ops import decode_codes
+        from repro.kernels.pack_bits import packing_dims
+        if codebook is None:
+            if server is None:
+                raise ValueError("CodeStore.dataset needs a ServerState or "
+                                 "a registry to decode against")
+            codebook = server.params["codebook"]
+        table, n_slices = OC.decode_table(self.cfg, codebook)
+        bits = recs[0].packed.bits
+        G, _ = packing_dims(bits)
+        payloads, phases, spans = [], [], []
+        row_off = 0
+        for r in recs:
+            p = r.packed.payload
+            payloads.append(p)
+            phases.append(stream_phases(p.shape[0], bits, n_slices))
+            spans.append((row_off * G, r.packed.count))
+            row_off += p.shape[0]
+        rows = decode_codes(jnp.concatenate(payloads, axis=0), table,
+                            bits=bits, count=row_off * G, n_slices=n_slices,
+                            phases=jnp.concatenate(phases))
+        out = []
+        for (start, cnt), r in zip(spans, recs):
+            f = rows[start:start + cnt]
+            shp = r.packed.shape                       # (C, B, T[, n_c])
+            if self.cfg.n_groups > 1 or self.cfg.n_slices > 1:
+                f = f.reshape(tuple(shp[:-1])
+                              + (int(shp[-1]) * table.shape[-1],))
+            else:
+                f = f.reshape(tuple(shp) + (table.shape[-1],))
+            out.append(f.reshape((-1,) + f.shape[2:]))  # merge client axis
+        return out
+
     def dataset(self, server: Optional[OC.ServerState], *, registry=None
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-        """Bulk decode: ONE dequantize per codebook version.
+        """Bulk decode: ONE fused decode dispatch per codebook version.
 
         With a ``registry`` (repro.server.CodebookRegistry) each version
         group decodes against its own snapshot; without one, everything
@@ -229,22 +273,16 @@ class CodeStore:
         """
         if not self._records:
             raise ValueError("empty code store")
-        by_version: Dict[int, List[int]] = {}
+        by_version: Dict[Tuple[int, int], List[int]] = {}
         for i, r in enumerate(self._records):
-            by_version.setdefault(r.version, []).append(i)
+            by_version.setdefault((r.version, r.packed.bits), []).append(i)
         feats_parts: List[Optional[jax.Array]] = [None] * len(self._records)
-        for version, idxs in by_version.items():
-            codes = jnp.concatenate(
-                [self._records[i].packed.unpack().reshape(
-                    (-1,) + self._records[i].packed.shape[2:])
-                 for i in idxs], axis=0)
+        for (version, _), idxs in by_version.items():
             cb = registry.get(version) if registry is not None else None
-            feats = OC.codes_to_features(server, self.cfg, codes, codebook=cb)
-            off = 0
-            for i in idxs:
-                n = self._records[i].n_samples
-                feats_parts[i] = feats[off:off + n]
-                off += n
+            blocks = self._decode_group([self._records[i] for i in idxs],
+                                        server, cb)
+            for i, f in zip(idxs, blocks):
+                feats_parts[i] = f
         return jnp.concatenate(feats_parts, axis=0), self.label_dict()
 
     def batches(self, server, batch_size: int, *, key, steps: int,

@@ -33,7 +33,6 @@ import jax.numpy as jnp
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
-from repro.kernels.pack_bits import packing_dims
 
 
 class PackedCodes(NamedTuple):
@@ -183,8 +182,9 @@ class SimEngine:
                                          clients.ema.counts)
 
     def dequantize(self, server: OC.ServerState, packed: PackedCodes):
-        """Step 6 entry: unpack a round's payload and look up features
-        against the CURRENT global codebook."""
-        idx = packed.unpack()
-        flat = idx.reshape((-1,) + idx.shape[2:])       # merge client axis
-        return OC.codes_to_features(server, self.cfg, flat)
+        """Step 6 entry: fused decode of a round's payload against the
+        CURRENT global codebook — the packed word stream goes straight to
+        feature rows (ops.decode_codes); the int32 index tensor is never
+        materialised."""
+        feats = OC.codes_to_features(server, self.cfg, packed)
+        return feats.reshape((-1,) + feats.shape[2:])   # merge client axis

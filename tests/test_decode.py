@@ -1,0 +1,227 @@
+"""Fused packed-code -> feature decode pipeline (kernels/decode_codes.py).
+
+The contracts that let the fused path replace unpack-then-dequantize:
+  * kernel parity — ops.decode_codes == table[unpack_codes(...)] bit-exact
+    for every packing width the codec supports, incl. sliced streams with
+    per-group phase vectors;
+  * protocol parity — codes_to_features on a packed carrier (PackedCodes /
+    Transmission) == codes_to_features on the int32 indices, for VQ and
+    GSVQ (grouped + sliced) configs;
+  * store contract — CodeStore.dataset decodes each codebook-version
+    group in exactly ONE fused dispatch, matching the per-record
+    unpack-then-dequantize reference across versions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.core.gsvq import gsvq_bits_per_position
+from repro.kernels import ops, ref
+from repro.kernels.pack_bits import code_bits, packing_dims
+from repro.server import CodebookRegistry, CodeStore
+from repro.sim.engine import PackedCodes
+
+
+def _pack(idx, bits):
+    idx = jnp.asarray(idx, jnp.int32)
+    return PackedCodes(payload=ops.pack_codes(idx, bits=bits), bits=bits,
+                       shape=tuple(idx.shape))
+
+
+# ------------------------------------------------------------------ kernel
+
+@pytest.mark.parametrize("bits", [1, 3, 5, 8, 10, 12])
+def test_decode_matches_unpack_then_gather(bits):
+    """Fused kernel == table[unpack] bit-exact at every packing width."""
+    K = 1 << bits
+    rng = np.random.default_rng(bits)
+    table = jnp.asarray(rng.normal(size=(K, 24)), jnp.float32)
+    for count in (1, 257, 1000):
+        codes = jnp.asarray(rng.integers(0, K, size=count), jnp.int32)
+        words = ops.pack_codes(codes, bits=bits)
+        fused = ops.decode_codes(words, table, bits=bits, count=count)
+        want = table[ops.unpack_codes(words, bits=bits, count=count)]
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+        np.testing.assert_array_equal(
+            np.asarray(fused),
+            np.asarray(ref.decode_codes_ref(words, table, bits=bits,
+                                            count=count)))
+        np.testing.assert_array_equal(
+            np.asarray(fused),
+            np.asarray(ops.decode_codes(words, table, bits=bits, count=count,
+                                        use_ref=True)))
+
+
+@pytest.mark.parametrize("n_slices", [2, 3, 4])
+def test_decode_sliced_stream(n_slices):
+    """Sliced streams gather row slice*R + code, slice = position % n_c."""
+    R, m, count = 8, 4, 999
+    bits = code_bits(R)
+    rng = np.random.default_rng(n_slices)
+    codes = jnp.asarray(rng.integers(0, R, size=count), jnp.int32)
+    table = jnp.asarray(rng.normal(size=(n_slices * R, m)), jnp.float32)
+    words = ops.pack_codes(codes, bits=bits)
+    fused = ops.decode_codes(words, table, bits=bits, count=count,
+                             n_slices=n_slices)
+    sl = jnp.arange(count) % n_slices
+    want = table[sl * R + ops.unpack_codes(words, bits=bits, count=count)]
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+
+def test_decode_explicit_phases_restart_per_record():
+    """A concatenated two-record stream with per-record phase vectors
+    decodes each record as if it were dispatched alone."""
+    from repro.kernels.decode_codes import stream_phases
+    R, m, n_slices, bits = 4, 3, 3, code_bits(4)
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(n_slices * R, m)), jnp.float32)
+    a = jnp.asarray(rng.integers(0, R, size=66), jnp.int32)
+    b = jnp.asarray(rng.integers(0, R, size=130), jnp.int32)
+    wa, wb = ops.pack_codes(a, bits=bits), ops.pack_codes(b, bits=bits)
+    words = jnp.concatenate([wa, wb])
+    phases = jnp.concatenate([stream_phases(wa.shape[0], bits, n_slices),
+                              stream_phases(wb.shape[0], bits, n_slices)])
+    G, _ = packing_dims(bits)
+    rows = ops.decode_codes(words, table, bits=bits,
+                            count=words.shape[0] * G, n_slices=n_slices,
+                            phases=phases)
+    for start, w, codes in ((0, wa, a), (wa.shape[0] * G, wb, b)):
+        alone = ops.decode_codes(w, table, bits=bits, count=codes.shape[0],
+                                 n_slices=n_slices)
+        np.testing.assert_array_equal(
+            np.asarray(rows[start:start + codes.shape[0]]),
+            np.asarray(alone))
+
+
+# ---------------------------------------------------------------- protocol
+
+@pytest.mark.parametrize("n_groups,n_slices,K", [
+    (1, 1, 256), (8, 1, 64), (4, 2, 64), (8, 4, 64), (1, 2, 64)])
+def test_codes_to_features_packed_parity(key, n_groups, n_slices, K):
+    """Fused packed path == index path for VQ and GSVQ configs."""
+    cfg = DVQAEConfig(kind="image", latent_dim=16, codebook_size=K,
+                      n_groups=n_groups, n_slices=n_slices)
+    cb = jax.random.normal(key, (K, 16))
+    bits = OC.transmit_bits(cfg)
+    rng = np.random.default_rng(n_groups * 10 + n_slices)
+    gsvq = n_groups > 1 or n_slices > 1
+    shape = (3, 7, n_slices) if gsvq else (3, 7)
+    hi = n_groups if gsvq else K
+    idx = jnp.asarray(rng.integers(0, hi, size=shape), jnp.int32)
+    fused = OC.codes_to_features(None, cfg, _pack(idx, bits), codebook=cb)
+    want = OC.codes_to_features(None, cfg, idx, codebook=cb)
+    assert fused.shape == want.shape
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    if not gsvq:
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+
+def test_codes_to_features_accepts_transmission(key):
+    """A packed Transmission takes the fused path and matches its own
+    unpacked indices decoded the classic way."""
+    cfg = DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                      codebook_size=16, n_res_blocks=1)
+    srv = OC.server_init(key, cfg)
+    cl = OC.client_init(srv)
+    x = jax.random.normal(key, (4, 8, 8, 3))
+    tx = OC.client_transmit(cl, cfg, x)
+    fused = OC.codes_to_features(srv, cfg, tx)
+    want = OC.codes_to_features(srv, cfg, tx.indices)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+
+def test_engine_dequantize_is_fused_and_exact(key):
+    from repro.sim import SimEngine
+    cfg = DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                      codebook_size=16, n_res_blocks=1)
+    srv = OC.server_init(key, cfg)
+    engine = SimEngine(cfg, gamma=0.9)
+    clients = engine.init_clients(srv, 4)
+    _, packed = engine.round(clients, jax.random.normal(key, (4, 2, 8, 8, 3)))
+    got = engine.dequantize(srv, packed)
+    idx = packed.unpack()
+    want = OC.codes_to_features(srv, cfg, idx.reshape((-1,) + idx.shape[2:]))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------------- store
+
+@pytest.mark.parametrize("n_groups,n_slices,K", [(1, 1, 16), (4, 2, 64)])
+def test_store_dataset_multiversion_fused_roundtrip(key, n_groups, n_slices,
+                                                    K):
+    """Multi-version stores decode per-version snapshots bit-exactly
+    through the fused bulk path."""
+    cfg = DVQAEConfig(kind="image", latent_dim=16, codebook_size=K,
+                      n_groups=n_groups, n_slices=n_slices)
+    bits = OC.transmit_bits(cfg)
+    gsvq = n_groups > 1 or n_slices > 1
+    registry = CodebookRegistry(jax.random.normal(key, (K, 16)))
+    registry.register(jax.random.normal(jax.random.fold_in(key, 1), (K, 16)))
+    store = CodeStore(cfg)
+    rng = np.random.default_rng(0)
+    want = []
+    for version, rnd in ((0, 0), (1, 1), (0, 2)):
+        shape = (2, 3, 4, n_slices) if gsvq else (2, 3, 4)
+        idx = jnp.asarray(rng.integers(0, n_groups if gsvq else K,
+                                       size=shape), jnp.int32)
+        store.add(_pack(idx, bits), round=rnd, version=version)
+        want.append(np.asarray(OC.codes_to_features(
+            None, cfg, idx.reshape((6,) + idx.shape[2:]),
+            codebook=registry.get(version))))
+    feats, _ = store.dataset(None, registry=registry)
+    np.testing.assert_allclose(np.asarray(feats), np.concatenate(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_store_dataset_one_dispatch_per_version(monkeypatch, key):
+    """Acceptance: dataset() issues exactly one fused decode dispatch per
+    codebook version, no matter how many records share it."""
+    import repro.kernels.ops as ops_mod
+    cfg = DVQAEConfig(kind="image", latent_dim=16, codebook_size=16)
+    bits = OC.transmit_bits(cfg)
+    registry = CodebookRegistry(jax.random.normal(key, (16, 16)))
+    registry.register(jax.random.normal(jax.random.fold_in(key, 1),
+                                        (16, 16)))
+    store = CodeStore(cfg)
+    rng = np.random.default_rng(1)
+    for version, rnd in ((0, 0), (0, 1), (1, 2), (0, 3), (1, 4)):
+        idx = rng.integers(0, 16, size=(2, 3, 4))
+        store.add(_pack(idx, bits), round=rnd, version=version)
+
+    calls = []
+    real = ops_mod.decode_codes
+    monkeypatch.setattr(ops_mod, "decode_codes",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    feats, _ = store.dataset(None, registry=registry)
+    assert len(calls) == 2                     # versions {0, 1}
+    assert feats.shape[0] == store.n_samples
+
+
+# ------------------------------------------------- §2.8 bits accounting
+
+def test_transmit_bits_matches_transmitted_alphabet():
+    """Satellite: bits/code is the per-slice group alphabet for EVERY
+    GSVQ config (incl. n_groups == 1 sliced), aligned with
+    gsvq_bits_per_position; plain VQ keeps ceil(log2 K)."""
+    mk = lambda g, s, K=64: DVQAEConfig(latent_dim=16, codebook_size=K,
+                                        n_groups=g, n_slices=s)
+    assert OC.transmit_bits(mk(1, 1, 256)) == 8
+    assert OC.transmit_bits(mk(16, 1)) == 4
+    assert OC.transmit_bits(mk(4, 2)) == 2
+    assert OC.transmit_bits(mk(1, 2)) == 1     # was 6 (= log2 K): overstated
+    for g, s in ((16, 1), (4, 2), (1, 2), (8, 4)):
+        assert OC.transmit_bits(mk(g, s)) * s == gsvq_bits_per_position(g, s)
+
+
+def test_packed_nbytes_follow_sliced_alphabet():
+    """A sliced n_groups == 1 uplink measures ~1 bit/code, not log2 K."""
+    cfg = DVQAEConfig(latent_dim=16, codebook_size=64, n_groups=1,
+                      n_slices=2)
+    bits = OC.transmit_bits(cfg)
+    idx = jnp.zeros((4, 8, 2), jnp.int32)      # the single-group alphabet
+    packed = _pack(idx, bits)
+    assert packed.nbytes <= (packed.count * 1 + 7) // 8 + 4 * 4  # ~1 bit/code

@@ -105,6 +105,53 @@ def test_speech_pipeline(key):
     assert tx.indices.shape == (4, 8)      # 32 frames -> 8 latent steps
 
 
+@pytest.mark.parametrize("n_groups,n_slices", [(4, 2), (1, 2), (4, 1)])
+def test_codebook_refresh_gsvq_maps_groups_to_representative_atoms(
+        n_groups, n_slices):
+    """Regression (§2.4/§2.6): sliced GSVQ refresh used to scatter EMA
+    mass with raw (.., n_c) group indices as atom ids (and n_groups == 1
+    sliced configs skipped the group->atom mapping entirely). Every
+    slice's group index must land on its group's representative atom."""
+    key = jax.random.PRNGKey(0)
+    cfg = DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=16,
+                      codebook_size=64, n_res_blocks=1,
+                      n_groups=n_groups, n_slices=n_slices)
+    srv = octopus.server_init(key, cfg)
+    cl = octopus.client_init(srv)
+    x = jax.random.normal(key, (4, 16, 16, 3))
+    cl2 = octopus.client_codebook_refresh(cl, cfg, x, gamma=0.5)
+    ng = cfg.codebook_size // cfg.n_groups
+    representatives = {g * ng + ng // 2 for g in range(cfg.n_groups)}
+    counts0, counts1 = np.asarray(cl.ema.counts), np.asarray(cl2.ema.counts)
+    grew = set(np.nonzero(counts1 > 0.5 * counts0 + 1e-9)[0].tolist())
+    assert grew, "refresh scattered no EMA mass"
+    assert grew <= representatives, grew - representatives
+    assert cl2.params["codebook"].shape == cl.params["codebook"].shape
+    assert bool(jnp.all(jnp.isfinite(cl2.params["codebook"])))
+
+
+def test_gather_codes_mixed_labels():
+    """Regression: mixed labeled/unlabeled uploads keep sample alignment
+    (fill -1) instead of crashing or silently dropping labels."""
+    mk = lambda n, lab=None: octopus.Transmission(
+        indices=jnp.zeros((n, 3), jnp.int32), nbytes=4, labels=lab)
+    labeled, unlabeled = mk(2, jnp.array([5, 6])), mk(3)
+    idx, lab, _ = octopus.gather_codes([labeled, unlabeled])
+    assert idx.shape[0] == 5
+    np.testing.assert_array_equal(np.asarray(lab), [5, 6, -1, -1, -1])
+    _, lab, _ = octopus.gather_codes([unlabeled, labeled])   # used to drop
+    np.testing.assert_array_equal(np.asarray(lab), [-1, -1, -1, 5, 6])
+    _, lab, _ = octopus.gather_codes([unlabeled, unlabeled])
+    assert lab is None
+    _, lab, _ = octopus.gather_codes([labeled, labeled])
+    np.testing.assert_array_equal(np.asarray(lab), [5, 6, 5, 6])
+    # unsigned label dtypes must not wrap the -1 filler to a huge class id
+    _, lab, _ = octopus.gather_codes(
+        [mk(2, jnp.array([5, 6], jnp.uint32)), unlabeled])
+    assert jnp.issubdtype(lab.dtype, jnp.signedinteger)
+    np.testing.assert_array_equal(np.asarray(lab), [5, 6, -1, -1, -1])
+
+
 def test_codebook_refresh_updates_in_normalized_space(image_cfg):
     """Regression: EMA must move atoms in IN-space when apply_in is on —
     atoms drifting toward raw z_e (different scale) worsen quantization."""

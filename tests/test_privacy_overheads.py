@@ -41,6 +41,21 @@ def test_privacy_audit_ordering(key):
     assert prv_m.conditional_entropy_bits < pub_m.conditional_entropy_bits
 
 
+def test_privacy_audit_shuffles_label_sorted_data(key):
+    """Regression: the 80/20 split must permute first — on label-sorted
+    inputs (what non-iid partitions produce) the old head/tail split
+    evaluated the adversary on classes it never saw, so even a perfectly
+    leaky private component scored ~0 and H(Y|Z) was degenerate."""
+    n, C = 300, 5
+    y = jnp.repeat(jnp.arange(C), n // C)              # label-sorted
+    private = jax.nn.one_hot(y, 8) * 3.0               # fully leaky
+    public = jax.random.normal(jax.random.PRNGKey(1), (n, 8))
+    pub_m, prv_m = PV.privacy_audit(key, public, private, y, C, steps=150)
+    assert prv_m.accuracy > 0.9                        # was ~0 unshuffled
+    assert prv_m.accuracy > pub_m.accuracy
+    assert prv_m.conditional_entropy_bits < pub_m.conditional_entropy_bits
+
+
 # --------------------------------------------------------------- overheads
 
 def _comm():
