@@ -33,6 +33,39 @@ def init_ema(codebook) -> EMAState:
                     codebook=codebook)
 
 
+def ema_update_from_stats(state: EMAState, n, s, gamma: float = 0.99,
+                          laplace_eps: float = 1e-5) -> EMAState:
+    """One EMA step from precomputed sufficient statistics (Eq. 7-9).
+
+    n: (..., K) per-atom assignment counts; s: (..., K, M) per-atom latent
+    sums — exactly what the fused encode kernel (kernels/encode_codes.py)
+    emits, so the Step 5 refresh never re-runs the encoder. Leading batch
+    axes (e.g. a stacked client population) broadcast against an equally
+    batched ``state``.
+    """
+    K = n.shape[-1]
+    counts = gamma * state.counts + (1.0 - gamma) * n
+    sums = gamma * state.sums + (1.0 - gamma) * s
+    # Laplace smoothing keeps dead atoms from collapsing to 0/0
+    total = jnp.sum(counts, axis=-1, keepdims=True)
+    smoothed = ((counts + laplace_eps) / (total + K * laplace_eps)) * total
+    codebook = (sums / smoothed[..., None]).astype(state.codebook.dtype)
+    return EMAState(counts=counts, sums=sums, codebook=codebook)
+
+
+def assignment_stats(z_e, indices, n_atoms: int):
+    """Batch sufficient statistics: (counts (K,), sums (K, M)).
+
+    z_e: (..., M); indices: z_e.shape[:-1] int codes.
+    """
+    M = z_e.shape[-1]
+    zf = z_e.reshape(-1, M).astype(jnp.float32)
+    idx = indices.reshape(-1)
+    n = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32), idx, n_atoms)
+    s = jax.ops.segment_sum(zf, idx, n_atoms)
+    return n, s
+
+
 def ema_update(state: EMAState, z_e, indices, gamma: float = 0.99,
                laplace_eps: float = 1e-5) -> EMAState:
     """One EMA step from a batch of encoder outputs and their codes.
@@ -40,17 +73,9 @@ def ema_update(state: EMAState, z_e, indices, gamma: float = 0.99,
     z_e: (..., M); indices: z_e.shape[:-1] int codes.
     """
     K, M = state.codebook.shape
-    zf = z_e.reshape(-1, M).astype(jnp.float32)
-    idx = indices.reshape(-1)
-    n = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32), idx, K)
-    s = jax.ops.segment_sum(zf, idx, K)
-    counts = gamma * state.counts + (1.0 - gamma) * n
-    sums = gamma * state.sums + (1.0 - gamma) * s
-    # Laplace smoothing keeps dead atoms from collapsing to 0/0
-    total = jnp.sum(counts)
-    smoothed = ((counts + laplace_eps) / (total + K * laplace_eps)) * total
-    codebook = (sums / smoothed[:, None]).astype(state.codebook.dtype)
-    return EMAState(counts=counts, sums=sums, codebook=codebook)
+    n, s = assignment_stats(z_e, indices, K)
+    return ema_update_from_stats(state, n, s, gamma=gamma,
+                                 laplace_eps=laplace_eps)
 
 
 def ema_update_distributed(state: EMAState, z_e, indices, gamma: float = 0.99,
@@ -60,26 +85,14 @@ def ema_update_distributed(state: EMAState, z_e, indices, gamma: float = 0.99,
     The paper's client-side weekly accumulation maps to per-shard sums; the
     monthly server sync is the psum.
     """
-    K, M = state.codebook.shape
-    zf = z_e.reshape(-1, M).astype(jnp.float32)
-    idx = indices.reshape(-1)
-    n = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32), idx, K)
-    s = jax.ops.segment_sum(zf, idx, K)
+    K, _ = state.codebook.shape
+    n, s = assignment_stats(z_e, indices, K)
     n = jax.lax.psum(n, axis_name)
     s = jax.lax.psum(s, axis_name)
-    counts = gamma * state.counts + (1.0 - gamma) * n
-    sums = gamma * state.sums + (1.0 - gamma) * s
-    total = jnp.sum(counts)
-    smoothed = ((counts + 1e-5) / (total + K * 1e-5)) * total
-    codebook = (sums / smoothed[:, None]).astype(state.codebook.dtype)
-    return EMAState(counts=counts, sums=sums, codebook=codebook)
+    return ema_update_from_stats(state, n, s, gamma=gamma)
 
 
 def batch_optimal_atoms(z_e, indices, n_atoms: int):
     """Eq. 8: per-atom mean of assigned outputs (the EMA fixed point)."""
-    M = z_e.shape[-1]
-    zf = z_e.reshape(-1, M).astype(jnp.float32)
-    idx = indices.reshape(-1)
-    n = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32), idx, n_atoms)
-    s = jax.ops.segment_sum(zf, idx, n_atoms)
+    n, s = assignment_stats(z_e, indices, n_atoms)
     return s / jnp.maximum(n, 1.0)[:, None], n

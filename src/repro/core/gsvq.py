@@ -90,6 +90,26 @@ def gsvq_quantize(z_e, codebook, *, n_groups: int = 1, n_slices: int = 1) -> GSV
                    codebook_loss=codebook_loss, commit_loss=commit_loss)
 
 
+def gsvq_indices(z_e, codebook, *, n_groups: int = 1, n_slices: int = 1):
+    """Index-only GSVQ match: (..., M) latents -> (..., n_c) int32 group
+    indices per slice, identical to ``gsvq_quantize(...).indices`` (same
+    Eq. 2 argmin) without building the Eq. 3 weighted average — the
+    transmit/refresh path needs only the codes.
+    """
+    *lead, M = z_e.shape
+    K = codebook.shape[0]
+    m = M // n_slices
+    zf = z_e.reshape(-1, n_slices, m)
+    cb = codebook.reshape(K, n_slices, m).transpose(1, 0, 2)
+
+    def per_slice(z_s, cb_s):
+        gd = _group_distances(z_s, cb_s, n_groups)
+        return jnp.argmin(gd, axis=-1).astype(jnp.int32)
+
+    gidx = jax.vmap(per_slice, in_axes=(1, 0), out_axes=1)(zf, cb)
+    return gidx.reshape(*lead, n_slices)
+
+
 def gsvq_dequantize_indices(indices, codebook, z_hint=None, *, n_groups: int,
                             n_slices: int):
     """Server-side reconstruction from group indices.

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from .dvqae import DVQAEConfig, DVQAEOut, forward, init_dvqae
-from .ema import EMAState, ema_update, init_ema
+from .ema import (EMAState, assignment_stats, ema_update_from_stats,
+                  init_ema)
 
 
 class ClientState(NamedTuple):
@@ -164,40 +165,72 @@ def unpack_transmission(tx: Transmission) -> jax.Array:
 
 # --------------------------------------------------------------- Step 5
 
-def client_codebook_refresh(client: ClientState, cfg: DVQAEConfig, batch,
-                            gamma: float = 0.99) -> ClientState:
-    """Low-frequency EMA refresh of the local codebook (Eq. 9).
+def client_encode(params, cfg: DVQAEConfig, batch):
+    """ONE encoder pass into quantizer space: (z, spatial).
 
-    Atoms must be updated in the SAME space the quantizer matches in:
-    when the IN disentanglement layer is on, that is IN(z_e), not raw z_e
-    (EMA toward raw latents drags atoms out of the normalized manifold
-    and makes reconstruction worse under drift).
+    z is IN(z_e) when the disentanglement layer is on — the space the
+    quantizer matches in and the space EMA atoms must move in (EMA toward
+    raw latents drags atoms off the normalized manifold). Every Step 3-5
+    consumer (quantize, pack, refresh statistics) feeds off this single
+    pass; see :func:`client_round`.
     """
     from .disentangle import instance_norm_latent
-    out = forward(client.params, cfg, batch)
-    idx = out.latent.indices
-    z_e, _ = _encode_only(client.params, cfg, batch)
+    from .dvqae import encode
+    z_e, spatial = encode(params, cfg, batch)
     if cfg.apply_in:
         z_e = instance_norm_latent(z_e)
+    return z_e, spatial
+
+
+def quantize_indices(cfg: DVQAEConfig, z, codebook):
+    """Transmitted codes of quantizer-space latents z (..., M):
+    (...,) atom ids for plain VQ, (..., n_c) per-slice group indices for
+    GSVQ — identical to ``forward(...).latent.indices`` without the
+    decoder/loss work."""
+    from .gsvq import gsvq_indices
+    from .vq import kernel_nearest_atom
     if cfg.n_groups > 1 or cfg.n_slices > 1:
-        # GSVQ: idx is a (..., n_c) per-slice GROUP-index matrix, not flat
-        # atom ids — map every slice's group index to its representative
-        # atom (group centre) and let each slice match vote its position's
-        # latent into that atom's EMA mass. (Feeding the raw matrix to
-        # ema_update scattered onto wrong atoms; n_groups == 1 sliced
-        # configs used to skip the mapping entirely.)
+        return gsvq_indices(z, codebook, n_groups=cfg.n_groups,
+                            n_slices=cfg.n_slices)
+    return kernel_nearest_atom(z, codebook)
+
+
+def refresh_stats(cfg: DVQAEConfig, z, indices):
+    """Eq. 7-8 sufficient statistics (counts (K,), sums (K, M)) of one
+    batch — the jnp twin of the fused encode kernel's stats outputs.
+
+    GSVQ: indices is a (..., n_c) per-slice GROUP-index matrix, not flat
+    atom ids — every slice's group index lands on its group's
+    representative atom (group centre) and votes its position's FULL
+    latent into that atom's EMA mass. (Feeding the raw matrix to the
+    segment sum scattered onto wrong atoms; n_groups == 1 sliced configs
+    used to skip the mapping entirely.)
+    """
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
         ng = cfg.codebook_size // cfg.n_groups
-        idx = idx * ng + ng // 2                       # (..., n_c) atom ids
-        z_e = jnp.broadcast_to(z_e[..., None, :],
-                               idx.shape + z_e.shape[-1:])
-    ema = ema_update(client.ema, z_e, idx, gamma=gamma)
+        indices = indices * ng + ng // 2               # (..., n_c) atom ids
+        z = jnp.broadcast_to(z[..., None, :], indices.shape + z.shape[-1:])
+    return assignment_stats(z, indices, cfg.codebook_size)
+
+
+def client_codebook_refresh(client: ClientState, cfg: DVQAEConfig, batch,
+                            gamma: float = 0.99, *, stats=None
+                            ) -> ClientState:
+    """Low-frequency EMA refresh of the local codebook (Eq. 9).
+
+    ``stats``: precomputed (counts, sums) — e.g. straight from the fused
+    encode kernel (kernels/encode_codes.py) or :func:`refresh_stats` —
+    in which case ``batch`` is ignored and NO network pass runs. Without
+    it, one encoder pass derives the statistics (this entry used to run
+    the full ``forward`` AND a second encode for the same refresh).
+    """
+    if stats is None:
+        z, _ = client_encode(client.params, cfg, batch)
+        idx = quantize_indices(cfg, z, client.params["codebook"])
+        stats = refresh_stats(cfg, z, idx)
+    ema = ema_update_from_stats(client.ema, *stats, gamma=gamma)
     params = {**client.params, "codebook": ema.codebook}
     return ClientState(params=params, ema=ema, step=client.step)
-
-
-def _encode_only(params, cfg, x):
-    from .dvqae import encode
-    return encode(params, cfg, x)
 
 
 def server_merge_codebooks(server: ServerState,
@@ -242,6 +275,22 @@ def server_merge_codebooks(server: ServerState,
 
 # ------------------------------------------------------- Steps 2-5 (round)
 
+def client_finetune_encode(client: ClientState, cfg: DVQAEConfig, batch, *,
+                           lr: float = 1e-4, n_local_steps: int = 1
+                           ) -> Tuple[ClientState, jax.Array]:
+    """The round's Steps 2-3 front half, shared by every round variant
+    (and the engine's vmapped body — bit-parity between the population
+    round and the single-client loop rests on this being ONE code path):
+    ``n_local_steps`` of frozen-codebook fine-tuning, then the round's
+    SINGLE encoder pass into quantizer space."""
+    opt = None
+    for _ in range(n_local_steps):
+        client, opt, _ = client_finetune_step(client, cfg, batch, lr=lr,
+                                              opt=opt)
+    z, _ = client_encode(client.params, cfg, batch)
+    return client, z
+
+
 def client_round(client: ClientState, cfg: DVQAEConfig, batch, *,
                  lr: float = 1e-4, gamma: float = 0.99,
                  n_local_steps: int = 1
@@ -249,23 +298,47 @@ def client_round(client: ClientState, cfg: DVQAEConfig, batch, *,
     """One full client round: Steps 2-5 for a single client, as a pure
     jittable function of (state, batch).
 
-    Runs ``n_local_steps`` of frozen-codebook fine-tuning (Step 2),
-    encodes the batch and takes the releasable code indices (Steps 3-4),
-    then EMA-refreshes the local codebook (Step 5). This is the unit the
-    sim engine vmaps over the client axis — see repro.sim.engine.
+    Runs ``n_local_steps`` of frozen-codebook fine-tuning (Step 2), then
+    ONE encoder pass feeds everything downstream: the releasable code
+    indices (Steps 3-4) and the Eq. 7-8 statistics behind the EMA
+    codebook refresh (Step 5). (This used to re-run the network three
+    times — forward for the indices, then forward AND encode again
+    inside the refresh — for the same latents.)
 
     Returns (new_client, int32 indices); packing the indices across the
     whole population at once is the engine's job (one big packed buffer
-    beats per-client slivers).
+    beats per-client slivers). :func:`client_round_fused` is the variant
+    whose uplink never materializes the index tensor at all.
     """
-    opt = None
-    for _ in range(n_local_steps):
-        client, opt, _ = client_finetune_step(client, cfg, batch, lr=lr,
-                                              opt=opt)
-    out = forward(client.params, cfg, batch)
-    idx = out.latent.indices
-    client = client_codebook_refresh(client, cfg, batch, gamma=gamma)
+    client, z = client_finetune_encode(client, cfg, batch, lr=lr,
+                                       n_local_steps=n_local_steps)
+    idx = quantize_indices(cfg, z, client.params["codebook"])
+    client = client_codebook_refresh(client, cfg, batch, gamma=gamma,
+                                     stats=refresh_stats(cfg, z, idx))
     return client, idx
+
+
+def client_round_fused(client: ClientState, cfg: DVQAEConfig, batch, *,
+                       lr: float = 1e-4, gamma: float = 0.99,
+                       n_local_steps: int = 1):
+    """Steps 2-5 with the fused uplink tail: fine-tune, ONE encoder pass,
+    then one ``ops.encode_codes`` dispatch that quantizes, bit-packs and
+    accumulates the EMA statistics on-chip — neither the (N, K) distance
+    matrix nor the int32 index tensor ever hits HBM.
+
+    Returns (new_client, (nW, W) uint32 packed words) — the words are
+    exactly ``pack_codes(indices, bits=transmit_bits(cfg))``.
+    """
+    from repro.kernels.ops import encode_codes
+    client, z = client_finetune_encode(client, cfg, batch, lr=lr,
+                                       n_local_steps=n_local_steps)
+    zf = z.reshape(1, -1, z.shape[-1])
+    words, counts, sums = encode_codes(
+        zf, client.params["codebook"][None], bits=transmit_bits(cfg),
+        n_groups=cfg.n_groups, n_slices=cfg.n_slices)
+    client = client_codebook_refresh(client, cfg, batch, gamma=gamma,
+                                     stats=(counts[0], sums[0]))
+    return client, words
 
 
 # --------------------------------------------------------------- Step 6
@@ -321,14 +394,36 @@ def decode_table(cfg: DVQAEConfig, codebook):
 
 
 def _packed_view(tx):
-    """(payload, bits, index shape) of a PackedCodes or packed Transmission,
-    or None when ``tx`` is a plain index array (or an unpacked Transmission)."""
+    """(payload, bits, index shape, n_records) of a PackedCodes or packed
+    Transmission, or None when ``tx`` is a plain index array (or an
+    unpacked Transmission). ``n_records`` > 1 means the payload rows are
+    that many concatenated per-record (per-client) word streams, each
+    zero-padded to whole super-groups — the layout the fused encode
+    kernel emits for a population."""
     payload = getattr(tx, "payload", None)
     if payload is None:
         return None
     if isinstance(tx, Transmission):
-        return payload, tx.bits, tuple(tx.indices.shape)
-    return payload, tx.bits, tuple(tx.shape)    # sim.engine.PackedCodes
+        return payload, tx.bits, tuple(tx.indices.shape), 1
+    return (payload, tx.bits, tuple(tx.shape),   # sim.engine.PackedCodes
+            getattr(tx, "n_records", 1))
+
+
+def packed_record_rows(payload_rows, bits: int, count: int, n_records: int,
+                       rows, table_dim: int):
+    """Per-record gather of fused-decoded rows.
+
+    ``rows``: (payload_rows * G, F) decode of the FULL word stream (pad
+    codes included). Each of the ``n_records`` record streams owns
+    ``payload_rows / n_records`` word rows; its first ``count/n_records``
+    decoded rows are real, the rest decode trailing zero-padding. Returns
+    the (count, F) real rows in stream order.
+    """
+    rpr = payload_rows // n_records
+    from repro.kernels.pack_bits import packing_dims
+    G, _ = packing_dims(bits)
+    per = rows.reshape(n_records, rpr * G, table_dim)
+    return per[:, :count // n_records].reshape(count, table_dim)
 
 
 def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
@@ -357,13 +452,29 @@ def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
     packed = _packed_view(indices)
     if packed is not None:
         from repro.kernels.ops import decode_codes
-        payload, bits, shape = packed
+        payload, bits, shape, n_records = packed
         table, n_slices = decode_table(cfg, cb)
         count = 1
         for d in shape:
             count *= int(d)
-        rows = decode_codes(payload, table, bits=bits, count=count,
-                            n_slices=n_slices)
+        if n_records == 1:
+            rows = decode_codes(payload, table, bits=bits, count=count,
+                                n_slices=n_slices)
+        else:
+            # per-record streams: decode everything (pads included) with
+            # per-record-restarting slice phases, then drop each record's
+            # trailing pad rows
+            from repro.kernels.decode_codes import stream_phases
+            from repro.kernels.pack_bits import packing_dims
+            G, _ = packing_dims(bits)
+            n_rows = int(payload.shape[0])
+            phases = jnp.tile(stream_phases(n_rows // n_records, bits,
+                                            n_slices), n_records)
+            rows = decode_codes(payload, table, bits=bits,
+                                count=n_rows * G, n_slices=n_slices,
+                                phases=phases)
+            rows = packed_record_rows(n_rows, bits, count, n_records, rows,
+                                      int(table.shape[-1]))
         if cfg.n_groups > 1 or cfg.n_slices > 1:
             # shape ends with n_c; per-code rows are m-dim slice chunks
             # whose row-major concatenation IS the (..., M) layout

@@ -7,8 +7,10 @@ codebook atom, transmit only the int index. Loss terms:
 
 The nearest-neighbour search is the per-sample hot spot; the Pallas kernel
 ``repro.kernels.vq_nn`` implements the MXU-tiled version of
-:func:`nearest_atom`. This module is the pure-jnp reference and the training
-entry point (the kernel is opt-in via ``use_kernel``).
+:func:`nearest_atom` and is the DEFAULT :func:`quantize` path (same
+interpret-on-CPU fallback convention as the pack/decode kernels, picked
+by ``repro.kernels.ops``). ``use_kernel=False`` forces the pure-jnp
+reference; both tie-break to the first minimal atom.
 """
 from __future__ import annotations
 
@@ -43,16 +45,28 @@ def nearest_atom(z, codebook):
     return idx.reshape(z.shape[:-1]).astype(jnp.int32)
 
 
-def quantize(z_e, codebook, *, use_kernel: bool = False) -> VQOut:
+def kernel_nearest_atom(z, codebook):
+    """:func:`nearest_atom` via the MXU-tiled Pallas kernel (streaming
+    argmin, no (N, K) matrix in HBM). Inputs are stop-gradiented — the
+    argmin is non-differentiable, and severing the tangents lets the
+    kernel sit inside ``jax.grad``-traced training steps."""
+    from repro.kernels.ops import vq_nearest
+    idx = vq_nearest(jax.lax.stop_gradient(z.reshape(-1, z.shape[-1])),
+                     jax.lax.stop_gradient(codebook))
+    return idx.reshape(z.shape[:-1])
+
+
+def quantize(z_e, codebook, *, use_kernel: Optional[bool] = None) -> VQOut:
     """Quantize latents against the codebook with STE.
 
     z_e: (..., M) continuous encoder output.
     codebook: (K, M).
+    use_kernel: None (default) picks the Pallas nearest-neighbour kernel
+    via ``repro.kernels.ops`` (interpret fallback off-TPU); False forces
+    the pure-jnp :func:`nearest_atom` reference.
     """
-    if use_kernel:
-        from repro.kernels.ops import vq_nearest
-        idx = vq_nearest(z_e.reshape(-1, z_e.shape[-1]), codebook)
-        idx = idx.reshape(z_e.shape[:-1])
+    if use_kernel or use_kernel is None:
+        idx = kernel_nearest_atom(z_e, codebook)
     else:
         idx = nearest_atom(z_e, codebook)
     z_q = codebook[idx]                                           # (..., M)
@@ -95,8 +109,11 @@ def perplexity(indices, n_atoms: int):
     """Codebook usage perplexity — exp(H(code distribution)).
 
     Low perplexity = codebook collapse; useful training diagnostic.
+    Histogrammed with ``bincount`` — the (N, K) one-hot this used to
+    materialize was K times the memory for the same counts.
     """
-    onehot = jax.nn.one_hot(indices.reshape(-1), n_atoms, dtype=jnp.float32)
-    probs = jnp.mean(onehot, axis=0)
+    flat = indices.reshape(-1)
+    counts = jnp.bincount(flat, length=n_atoms).astype(jnp.float32)
+    probs = counts / jnp.maximum(flat.size, 1)
     ent = -jnp.sum(jnp.where(probs > 0, probs * jnp.log(probs), 0.0))
     return jnp.exp(ent)

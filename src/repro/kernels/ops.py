@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from .decode_codes import decode_codes_pallas
+from .encode_codes import encode_codes_pallas
 from .flash_attention import flash_attention_pallas
 from .pack_bits import code_bits, pack_codes_pallas, unpack_codes_pallas
 from .rmsnorm import rmsnorm_pallas
@@ -21,6 +22,10 @@ INTERPRET = jax.default_backend() != "tpu"
 def vq_nearest(z, codebook, **kw):
     """(N, M), (K, M) -> (N,) int32 nearest codebook atom per row."""
     kw.setdefault("interpret", INTERPRET)
+    if kw["interpret"]:
+        # off-TPU there is no VMEM budget: fatter N blocks mean fewer
+        # (traced) grid steps, which dominates interpret-mode runtime
+        kw.setdefault("block_n", 4096)
     return vq_nearest_pallas(z, codebook, **kw)
 
 
@@ -52,6 +57,33 @@ def decode_codes(words, table, *, bits, count, n_slices=1, phases=None,
     kw.setdefault("interpret", INTERPRET)
     return decode_codes_pallas(words, table, bits=bits, count=count,
                                n_slices=n_slices, phases=phases, **kw)
+
+
+def encode_codes(z, codebooks, *, bits, n_groups=1, n_slices=1,
+                 use_ref=None, **kw):
+    """Fused latent -> packed-code encode with on-chip EMA statistics:
+    (R, P, M) latents + (R, K, M) per-record codebooks -> (words
+    (R*nW, W) uint32, counts (R, K), sums (R, K, M)) in ONE pass — the
+    (N, K) distance matrix and the int32 index tensor never hit HBM (see
+    kernels/encode_codes.py for modes and the record/packing layout).
+
+    ``use_ref``: None (default) runs the Pallas kernel on TPU and the
+    pure-jnp oracle (ref.encode_codes_ref) elsewhere — the oracle emits
+    bit-identical words, and unlike the other wrappers' interpret
+    fallback it keeps CPU CI fast (the XLA-fused oracle beats the
+    interpreted grid). True/False force the oracle/kernel; off-TPU the
+    forced kernel runs with interpret=True."""
+    if use_ref or (use_ref is None and INTERPRET):
+        from .ref import encode_codes_ref
+        return encode_codes_ref(z, codebooks, bits=bits, n_groups=n_groups,
+                                n_slices=n_slices)
+    kw.setdefault("interpret", INTERPRET)
+    if kw["interpret"]:
+        # off-TPU there is no VMEM budget: fatter N blocks mean fewer
+        # (traced) grid steps, which dominates interpret-mode runtime
+        kw.setdefault("block_n", 4096)
+    return encode_codes_pallas(z, codebooks, bits=bits, n_groups=n_groups,
+                               n_slices=n_slices, **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):

@@ -101,6 +101,63 @@ def decode_codes_ref(words, table, *, bits: int, count: int,
     return table[codes[:count]]
 
 
+def encode_codes_ref(z, codebooks, *, bits: int, n_groups: int = 1,
+                     n_slices: int = 1):
+    """(R, P, M) latents + (R, K, M) per-record codebooks ->
+    (words (R*nW, W) uint32, counts (R, K), sums (R, K, M)).
+
+    Unfused oracle for kernels/encode_codes.py: per record, quantize
+    against that record's codebook (plain-VQ score ``||e||^2 - 2 z.e^T``
+    or the GSVQ Eq. 2 group match), pack each record's codes into its own
+    zero-padded word stream, and segment-sum the Eq. 7-8 EMA statistics
+    onto representative atoms (``g*ng + ng//2``; plain VQ: the atom).
+    """
+    R, P, M = z.shape
+    K = codebooks.shape[1]
+    zf = z.astype(jnp.float32)
+    cb = codebooks.astype(jnp.float32)
+    if n_groups > 1 or n_slices > 1:
+        m = M // n_slices
+        ng = K // n_groups
+        zsl = zf.reshape(R, P, n_slices, m)
+        csl = cb.reshape(R, K, n_slices, m).transpose(0, 2, 1, 3)
+
+        def per_slice(z_s, cb_s):                       # (P, m), (K, m)
+            z2 = jnp.sum(z_s * z_s, -1, keepdims=True)
+            e2 = jnp.sum(cb_s * cb_s, -1)[None, :]
+            d2 = jnp.maximum(z2 - 2.0 * (z_s @ cb_s.T) + e2, 0.0)
+            d = jnp.sqrt(d2 + 1e-12)
+            gd = jnp.mean(d.reshape(-1, n_groups, ng), axis=-1)
+            return jnp.argmin(gd, axis=-1).astype(jnp.int32)
+
+        idx = jax.vmap(jax.vmap(per_slice, in_axes=(1, 0), out_axes=1))(
+            zsl, csl)                                   # (R, P, S)
+        rep = idx * ng + ng // 2
+        votes = jnp.broadcast_to(zf[:, :, None, :], idx.shape + (M,))
+    else:
+        e2 = jnp.sum(cb * cb, -1)                       # (R, K)
+        cross = jnp.einsum("rpm,rkm->rpk", zf, cb)
+        idx = jnp.argmin(e2[:, None, :] - 2.0 * cross,
+                         axis=-1).astype(jnp.int32)     # (R, P)
+        rep = idx
+        votes = zf
+    counts = jax.vmap(lambda r: jax.ops.segment_sum(
+        jnp.ones_like(r.reshape(-1), jnp.float32), r.reshape(-1), K))(rep)
+    sums = jax.vmap(lambda v, r: jax.ops.segment_sum(
+        v.reshape(-1, M), r.reshape(-1), K))(votes, rep)
+    # per-record pack, vectorized: every record zero-pads to whole
+    # super-groups, so padding each record's flat codes to nW*G and
+    # flattening IS the concatenation of the per-record streams
+    from .pack_bits import packing_dims
+    G, _ = packing_dims(bits)
+    flat = idx.reshape(R, -1)
+    pad = (-flat.shape[1]) % G
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    words = pack_codes_ref(flat, bits=bits)
+    return words, counts, sums
+
+
 def selective_scan_ref(decay, inp, c, h0):
     """Naive sequential reference: h_t = d_t h_{t-1} + i_t; y_t = <h_t, c_t>.
 

@@ -225,8 +225,14 @@ class CodeStore:
         to whole super-groups, so record boundaries sit on word rows) and
         handed to ops.decode_codes with a per-record-restarting slice
         phase vector; the int32 index and gathered-atom tensors never
-        materialise. Returns per-record (C*B, T..., M) feature blocks.
+        materialise. A stored upload may itself be a MULTI-record stream
+        (``PackedCodes.n_records`` > 1, one sub-stream per client — what
+        the fused encode kernel emits for a population round): its slice
+        phases restart per sub-stream and each sub-stream's trailing pad
+        rows are dropped. Returns per-record (C*B, T..., M) feature
+        blocks.
         """
+        from repro.core.octopus import packed_record_rows
         from repro.kernels.decode_codes import stream_phases
         from repro.kernels.ops import decode_codes
         from repro.kernels.pack_bits import packing_dims
@@ -242,16 +248,21 @@ class CodeStore:
         row_off = 0
         for r in recs:
             p = r.packed.payload
+            nr = r.packed.n_records
             payloads.append(p)
-            phases.append(stream_phases(p.shape[0], bits, n_slices))
-            spans.append((row_off * G, r.packed.count))
+            phases.append(jnp.tile(
+                stream_phases(p.shape[0] // nr, bits, n_slices), nr))
+            spans.append((row_off, int(p.shape[0])))
             row_off += p.shape[0]
         rows = decode_codes(jnp.concatenate(payloads, axis=0), table,
                             bits=bits, count=row_off * G, n_slices=n_slices,
                             phases=jnp.concatenate(phases))
         out = []
-        for (start, cnt), r in zip(spans, recs):
-            f = rows[start:start + cnt]
+        F = int(table.shape[-1])
+        for (start, n_rows), r in zip(spans, recs):
+            f = packed_record_rows(n_rows, bits, r.packed.count,
+                                   r.packed.n_records,
+                                   rows[start * G:(start + n_rows) * G], F)
             shp = r.packed.shape                       # (C, B, T[, n_c])
             if self.cfg.n_groups > 1 or self.cfg.n_slices > 1:
                 f = f.reshape(tuple(shp[:-1])

@@ -6,15 +6,20 @@ population to advance per device call, so this engine:
 
   * stacks ``ClientState`` pytrees along a leading client axis
     (``replicate_clients`` / ``stack_clients``),
-  * runs Steps 2-5 (``octopus.client_round``) for every client in ONE
-    jitted ``jax.vmap`` call — hundreds of clients per dispatch instead
-    of a Python loop,
+  * runs the Steps 2-3 front half (fine-tune + the round's SINGLE
+    encoder pass) for every client in ONE jitted ``jax.vmap`` call —
+    hundreds of clients per dispatch instead of a Python loop,
   * optionally wraps the vmap in ``shard_map`` over the mesh 'data' axis
     so client shards advance on separate devices (the same mesh contract
     as repro.distributed.sharding),
-  * bit-packs the population's code indices into one dense uint32 stream
-    (repro.kernels.pack_bits) so the per-round uplink bytes are MEASURED
-    from the buffer that would actually cross the network (§2.8).
+  * finishes Steps 3-5 in ONE fused quantize-pack-stats dispatch
+    (repro.kernels.encode_codes): every client's latents are matched
+    against that client's OWN codebook, bit-packed into a per-client
+    dense uint32 record stream, and reduced to the EMA statistics that
+    complete the Step 5 refresh — the population's (N, K) distance
+    matrix and int32 index tensor never exist, and the per-round uplink
+    bytes are MEASURED from the buffers that would actually cross the
+    network, per-client padding included (§2.8).
 
 Typical use::
 
@@ -36,11 +41,21 @@ from repro.core.dvqae import DVQAEConfig
 
 
 class PackedCodes(NamedTuple):
-    """One round's packed uplink: the population's code indices as a
-    dense ceil(log2 K)-bit word stream."""
-    payload: jax.Array           # (n_groups, W) uint32
+    """One round's packed uplink: code indices as a dense
+    ceil(log2 K)-bit word stream.
+
+    ``n_records`` > 1 means the payload rows are that many concatenated
+    per-record (per-client) streams, each zero-padded to whole
+    super-groups — what each client's radio would actually send, and
+    exactly the layout the fused encode kernel
+    (kernels/encode_codes.py) emits for a population round. ``nbytes``
+    therefore counts every record's own pad bytes. ``n_records == 1`` is
+    the single contiguous stream ``ops.pack_codes`` produces.
+    """
+    payload: jax.Array           # (rows, W) uint32
     bits: int                    # bits per code
     shape: Tuple[int, ...]       # original indices shape (C, B, T[, n_c])
+    n_records: int = 1           # per-record streams concatenated in payload
 
     @property
     def nbytes(self) -> int:
@@ -54,8 +69,16 @@ class PackedCodes(NamedTuple):
     def unpack(self) -> jax.Array:
         """Bit-exact inverse: -> int32 indices of the original shape."""
         from repro.kernels.ops import unpack_codes
-        flat = unpack_codes(self.payload, bits=self.bits, count=self.count)
-        return flat.reshape(self.shape)
+        from repro.kernels.pack_bits import packing_dims
+        if self.n_records == 1:
+            flat = unpack_codes(self.payload, bits=self.bits,
+                                count=self.count)
+            return flat.reshape(self.shape)
+        G, _ = packing_dims(self.bits)
+        rows = int(self.payload.shape[0])
+        flat = unpack_codes(self.payload, bits=self.bits, count=rows * G)
+        per = flat.reshape(self.n_records, (rows // self.n_records) * G)
+        return per[:, :self.count // self.n_records].reshape(self.shape)
 
 
 # ----------------------------------------------------------- client batches
@@ -107,25 +130,53 @@ class SimEngine:
             return OC.client_round(client, cfg, batch, lr=lr, gamma=gamma,
                                    n_local_steps=n_local_steps)
 
+        def one_client_encode(client, batch):
+            """Steps 2-3 front half (the same code path client_round
+            runs), latents flattened to (P, M) for the fused dispatch."""
+            client, z = OC.client_finetune_encode(
+                client, cfg, batch, lr=lr, n_local_steps=n_local_steps)
+            return client, z.reshape(-1, z.shape[-1])
+
         step = jax.vmap(one_client)
+        bits = self.bits
+
+        def _round(clients, data):
+            """One vmapped encode + ONE fused quantize-pack-stats dispatch
+            for the (per-shard) population: the kernel quantizes every
+            client's latents against that client's own codebook, emits
+            each client's packed uplink record, and hands back the
+            per-client EMA statistics that complete Step 5 without a
+            second network pass."""
+            from repro.core.ema import ema_update_from_stats
+            from repro.kernels.ops import encode_codes
+            clients, z = jax.vmap(one_client_encode)(clients, data)
+            payload, counts, sums = encode_codes(
+                z, clients.params["codebook"], bits=bits,
+                n_groups=cfg.n_groups, n_slices=cfg.n_slices)
+            ema = ema_update_from_stats(clients.ema, counts, sums,
+                                        gamma=gamma)
+            params = {**clients.params, "codebook": ema.codebook}
+            clients = OC.ClientState(params=params, ema=ema,
+                                     step=clients.step)
+            return clients, payload
+
+        round_fn = _round
         if mesh is not None:
             from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
             spec = P("data")
             step = shard_map(step, mesh, in_specs=(spec, spec),
                              out_specs=(spec, spec), check_rep=False)
-
-        bits = self.bits
-
-        def _round(clients, data):
-            clients, idx = step(clients, data)
-            from repro.kernels.ops import pack_codes
-            payload = pack_codes(idx, bits=bits)
-            return clients, payload
+            # the WHOLE round — encode, fused dispatch, EMA — runs inside
+            # the shard-mapped body, so the kernel sees only its shard's
+            # clients; per-shard payloads are per-client record streams,
+            # so concatenating them along rows IS the population payload
+            round_fn = shard_map(_round, mesh, in_specs=(spec, spec),
+                                 out_specs=(spec, spec), check_rep=False)
 
         self._step = step
         self._step_jit = jax.jit(step)
-        self._round = jax.jit(_round)
+        self._round = jax.jit(round_fn)
         self._shape_cache = {}
 
     # ------------------------------------------------------------- rounds
@@ -140,14 +191,16 @@ class SimEngine:
 
         data: (C, B, ...) — one local batch per client, client axis
         matching the stacked state. Returns the new population state and
-        the round's packed uplink.
+        the round's packed uplink: one per-client record stream per
+        client (``n_records == C``), straight from the fused encode
+        kernel — the population's int32 index tensor never exists.
         """
         c = client_batch_size(clients)
         assert data.shape[0] == c, (data.shape, c)
         idx_shape = self._index_shape(clients, data)
         clients, payload = self._round(clients, data)
         return clients, PackedCodes(payload=payload, bits=self.bits,
-                                    shape=idx_shape)
+                                    shape=idx_shape, n_records=c)
 
     def round_indices(self, clients: OC.ClientState, data
                       ) -> Tuple[OC.ClientState, jax.Array]:

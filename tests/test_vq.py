@@ -56,6 +56,59 @@ def test_codes_nbits():
     assert vq.codes_nbits(idx, 512) == 4 * 16 * 9
 
 
+def test_quantize_default_uses_kernel_and_matches_reference(key):
+    """Satellite: quantize's DEFAULT path is the Pallas nearest-neighbour
+    kernel (ops picks, interpret fallback off-TPU) and agrees with the
+    pure-jnp reference — indices, losses and STE output."""
+    z = jax.random.normal(key, (4, 50, 16))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    auto = vq.quantize(z, cb)
+    ref = vq.quantize(z, cb, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(auto.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_allclose(np.asarray(auto.quantized),
+                               np.asarray(ref.quantized), rtol=1e-6)
+    assert float(auto.codebook_loss) == pytest.approx(
+        float(ref.codebook_loss), rel=1e-6)
+    # and it still sits inside grad-traced training steps (STE intact)
+    g = jax.grad(lambda z: jnp.sum(vq.quantize(z, cb).quantized))(z)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g), rtol=1e-6)
+
+
+def test_kernel_argmin_tiebreak_matches_nearest_atom(key):
+    """Satellite: on exact ties (duplicated atoms) the kernel picks the
+    FIRST minimal index, like jnp.argmin in nearest_atom — including
+    duplicates that straddle the kernel's K-block boundary."""
+    from repro.kernels.ops import vq_nearest
+    cb = jax.random.normal(key, (640, 16))
+    dup_pairs = [(3, 17), (40, 41), (100, 600)]   # 100/600 cross blocks
+    for a, b in dup_pairs:
+        cb = cb.at[b].set(cb[a])
+    z = cb[jnp.array([a for a, _ in dup_pairs]
+                     + [b for _, b in dup_pairs])] + 1e-8
+    want = vq.nearest_atom(z, cb)
+    got = vq_nearest(z, cb, block_k=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    firsts = np.array([a for a, _ in dup_pairs])
+    np.testing.assert_array_equal(np.asarray(got).reshape(2, -1),
+                                  np.stack([firsts, firsts]))
+
+
+def test_perplexity_matches_onehot_reference(key):
+    """Satellite regression: bincount histogram == the (N, K) one-hot
+    mean it replaced, bit-for-bit on the resulting perplexity."""
+    idx = jax.random.randint(key, (13, 37), 0, 29)
+    onehot = jax.nn.one_hot(idx.reshape(-1), 32, dtype=jnp.float32)
+    probs = jnp.mean(onehot, axis=0)
+    ent = -jnp.sum(jnp.where(probs > 0, probs * jnp.log(probs), 0.0))
+    np.testing.assert_allclose(float(vq.perplexity(idx, 32)),
+                               float(jnp.exp(ent)), rtol=1e-6)
+    # jit-compatible (length is static) and empty-safe
+    assert float(jax.jit(vq.perplexity, static_argnums=1)(idx, 32)) > 0
+    assert float(vq.perplexity(jnp.zeros((0,), jnp.int32), 8)) == \
+        pytest.approx(1.0)
+
+
 def test_perplexity_uniform_vs_collapsed():
     uniform = jnp.arange(64, dtype=jnp.int32) % 8
     collapsed = jnp.zeros((64,), jnp.int32)
