@@ -89,21 +89,20 @@ def build_pipeline(key, *, codebook_size: int = 256, apply_in: bool = True,
     shards_worst = partition(tr, N_CLIENTS, regime="worst")
     shards_skew = partition(tr, N_CLIENTS, regime="skewed", skew=0.2)
 
-    # Steps 2-4: each (worst-case) client fine-tunes once and transmits codes
-    total_bytes = 0
-    txs = []
+    # Steps 2-4: each (worst-case) client fine-tunes once and ships ONE
+    # CodePayload through the wire facades; the server bulk-decodes
+    from repro.wire import OctopusServer
+    wire_srv = OctopusServer(server, cfg)
     for ci, shard in enumerate(shards_worst):
-        client = OC.client_init(server)
-        client, _, _ = OC.client_finetune_step(client, cfg, shard.x[:32])
-        tx = OC.client_transmit(client, cfg, shard.x, labels=shard.content)
-        total_bytes += tx.nbytes
-        txs.append(tx)
-    idx, labels, _ = OC.gather_codes(txs)
-    train_codes = OC.codes_to_features(server, cfg, idx)
+        client = wire_srv.deploy(client_id=ci)
+        client.finetune(shard.x[:32])
+        wire_srv.ingest(client.transmit(shard.x, labels=shard.content),
+                        client_ids=[ci])
+    total_bytes = wire_srv.store.total_bytes
+    train_codes, label_dict = wire_srv.features()
+    labels = label_dict["label"]
 
-    te_client = OC.client_init(server)
-    te_tx = OC.client_transmit(te_client, cfg, te.x, labels=te.content)
-    test_codes = OC.codes_to_features(server, cfg, te_tx.indices)
+    test_codes = wire_srv.decode(wire_srv.deploy().transmit(te.x))
 
     # reorder train labels to match gathered order
     gathered_train = type(tr)(x=jnp.concatenate([s.x for s in shards_worst]),

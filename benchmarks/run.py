@@ -24,6 +24,23 @@ Paper targets:
   encode   fused client uplink (kernels/encode_codes.py): single-encode
            + one quantize-pack-stats dispatch vs the seed pipeline that
            re-ran the network and materialized distances + indices
+  wire     unified wire protocol (repro/wire): OctopusClient facade
+           round vs the PR-4 fused round — bit-identical words,
+           dispatch-count-neutral, plus the CodePayload->store roundtrip
+
+``wire`` CSV schema (rows ``wire,<name>,<value>[,extra]``):
+  bit_identical_to_fused    facade words == client_round_fused words
+  facade_samples_per_sec    jitted facade round (repro.wire.round_words)
+  fused_samples_per_sec     jitted PR-4 client_round_fused (deprecated)
+  facade_overhead           facade time / fused time (target <= 1.05)
+  facade_encoder_passes     COUNTED encoder invocations of one facade
+                            round (extra: the fused path's count)
+  facade_encode_dispatches  COUNTED ops.encode_codes dispatches (extra:
+                            the fused path's count)
+  payload_bytes             measured CodePayload.nbytes of one round
+  store_bytes_match         store.total_bytes == payload.nbytes after
+                            OctopusServer.ingest
+  decoded_samples           rows decoded by OctopusServer.features()
 
 ``encode`` CSV schema (rows ``encode,<cfg>_<name>,<value>[,extra]``):
   fused_samples_per_sec     one uplink round (Steps 3-5 tail) as ONE
@@ -287,17 +304,17 @@ def bench_sec2_8(key):
 
 def bench_sec3_8(key):
     """Time overheads: per-sample encode latency; probe vs conv train."""
-    from repro.core import octopus as OC
+    from repro.wire import OctopusClient
     pipe = C.build_pipeline(key, codebook_size=256)
-    client = OC.client_init(pipe.server)
+    client = OctopusClient(pipe.server, pipe.cfg)
     x1 = pipe.test.x[:1]
-    tx = OC.client_transmit(client, pipe.cfg, x1)   # compile
+    payload = client.transmit(x1)                   # compile
     t0 = time.time()
     for _ in range(20):
-        tx = OC.client_transmit(client, pipe.cfg, x1)
-    # transmit now includes bit-packing; await the packed payload too so
-    # the timed window covers everything Step 3-4 dispatches
-    jax.block_until_ready((tx.indices, tx.payload))
+        payload = client.transmit(x1)
+    # the facade transmit IS the fused Steps 3-4 tail: quantize + bit-pack
+    # in one dispatch, the payload is what hits the uplink
+    jax.block_until_ready(payload.payload)
     _emit("sec3_8", "encode_ms_per_sample", f"{(time.time()-t0)/20*1e3:.2f}")
 
     t0 = time.time()
@@ -528,7 +545,7 @@ def bench_decode(key):
     from repro.core import octopus as OC
     from repro.core.dvqae import DVQAEConfig
     from repro.kernels import ops
-    from repro.sim.engine import PackedCodes
+    from repro.wire import CodePayload
 
     n_samples = 2_000 if C.QUICK else 20_000
     T = 64                                    # codes per sample
@@ -548,10 +565,10 @@ def bench_decode(key):
         hi = cfg.n_groups if gsvq else cfg.codebook_size
         idx = jnp.asarray(rng.integers(0, hi, size=shape), jnp.int32)
         payload = jax.block_until_ready(ops.pack_codes(idx, bits=bits))
-        packed = PackedCodes(payload=payload, bits=bits, shape=shape)
+        packed = CodePayload(payload=payload, bits=bits, shape=shape)
 
         fused_fn = jax.jit(lambda w: OC.codes_to_features(
-            None, cfg, PackedCodes(payload=w, bits=bits, shape=shape),
+            None, cfg, CodePayload(payload=w, bits=bits, shape=shape),
             codebook=cb))
         base_fn = jax.jit(lambda w: OC.codes_to_features(
             None, cfg, ops.unpack_codes(w, bits=bits,
@@ -593,6 +610,7 @@ def bench_encode(key):
     from repro.core.disentangle import instance_norm_latent
     from repro.core.dvqae import DVQAEConfig, forward
     from repro.kernels import ops
+    from repro.wire import round_words
 
     B = 32 if C.QUICK else 128
     cases = [
@@ -611,7 +629,7 @@ def bench_encode(key):
         client = OC.client_init(server)
         x = jax.random.normal(key, (B, 16, 16, 3))
 
-        fused_fn = jax.jit(lambda c, x: OC.client_round_fused(
+        fused_fn = jax.jit(lambda c, x: round_words(
             c, cfg, x, n_local_steps=0))
 
         # the seed ran Steps 3-4 and Step 5 as separate entry points,
@@ -687,6 +705,98 @@ def bench_encode(key):
           "(bit-identical words); Pallas-kernel timings require hardware")
 
 
+# ------------------------------------------------------------------ wire
+
+def bench_wire(key):
+    """Unified wire protocol: the OctopusClient/OctopusServer facade
+    round vs the PR-4 fused round it replaced — must be dispatch-count
+    neutral and bit-identical (schema in the module docstring)."""
+    import warnings
+
+    import numpy as np
+
+    from repro.core import dvqae, octopus as OC
+    from repro.core.dvqae import DVQAEConfig
+    from repro.kernels import ops as ops_mod
+    from repro.wire import OctopusServer, round_words
+
+    B = 32 if C.QUICK else 128
+    rounds = 3 if C.QUICK else 10
+    cfg = DVQAEConfig(kind="image", in_channels=3, hidden=32, latent_dim=16,
+                      codebook_size=256, n_res_blocks=1)
+    server = OC.server_init(key, cfg)
+    client0 = OC.client_init(server)
+    x = jax.random.normal(key, (B, 16, 16, 3))
+
+    facade_fn = jax.jit(lambda c, xb: round_words(c, cfg, xb,
+                                                  n_local_steps=0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy_fn = jax.jit(lambda c, xb: OC.client_round_fused(
+            c, cfg, xb, n_local_steps=0))
+        _, legacy_words = legacy_fn(client0, x)            # compile
+    _, words = facade_fn(client0, x)                       # compile
+    jax.block_until_ready((words, legacy_words))
+    assert np.array_equal(np.asarray(words), np.asarray(legacy_words))
+    _emit("wire", "bit_identical_to_fused", "True")
+
+    def timeit(fn):
+        t0 = time.time()
+        for _ in range(rounds):
+            out = fn(client0, x)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / rounds
+
+    # interleave the two paths and keep mins — the compiled computations
+    # are identical, so any gap is scheduling noise, not the facade
+    t_f, t_l = [], []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for _ in range(5):
+            t_f.append(timeit(facade_fn))
+            t_l.append(timeit(legacy_fn))
+    t_facade, t_legacy = min(t_f), min(t_l)
+    _emit("wire", "facade_samples_per_sec", f"{B / t_facade:.0f}")
+    _emit("wire", "fused_samples_per_sec", f"{B / t_legacy:.0f}")
+    _emit("wire", "facade_overhead", f"{t_facade / t_legacy:.3f}",
+          extra="target<=1.05x")
+
+    # dispatch neutrality, COUNTED (not inferred): encoder passes and
+    # fused encode dispatches of one un-jitted facade round vs PR-4
+    def count(fn):
+        enc_calls, kern_calls = [], []
+        real_enc, real_kern = dvqae.encode, ops_mod.encode_codes
+        dvqae.encode = lambda *a: (enc_calls.append(1), real_enc(*a))[1]
+        ops_mod.encode_codes = \
+            lambda *a, **k: (kern_calls.append(1), real_kern(*a, **k))[1]
+        try:
+            fn()
+        finally:
+            dvqae.encode, ops_mod.encode_codes = real_enc, real_kern
+        return len(enc_calls), len(kern_calls)
+
+    srv = OctopusServer(server, cfg)
+    cl = srv.deploy()
+    fe, fk = count(lambda: cl.round(x, finetune=0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        le, lk = count(lambda: OC.client_round_fused(client0, cfg, x,
+                                                     n_local_steps=0))
+    _emit("wire", "facade_encoder_passes", fe, extra=f"fused={le}")
+    _emit("wire", "facade_encode_dispatches", fk, extra=f"fused={lk}")
+    assert (fe, fk) == (le, lk) == (1, 1)
+
+    # wire roundtrip: payload bytes are the single accounting end to end
+    payload = cl.round(x, finetune=0)
+    srv.ingest(payload)
+    feats, _ = srv.features()
+    _emit("wire", "payload_bytes", payload.nbytes,
+          extra=f"{payload.bits}bits_per_code")
+    _emit("wire", "store_bytes_match", str(srv.store.total_bytes
+                                           == payload.nbytes))
+    _emit("wire", "decoded_samples", feats.shape[0])
+
+
 SECTIONS = {
     "fig4": bench_fig4,
     "fig5": bench_fig5,
@@ -700,6 +810,7 @@ SECTIONS = {
     "server": bench_server,
     "decode": bench_decode,
     "encode": bench_encode,
+    "wire": bench_wire,
 }
 
 

@@ -56,7 +56,8 @@ drifted = mean_recon(clients, x2)
 print(f"recon on drifted phase-2 data BEFORE codebook refresh: {drifted:.4f}")
 
 # Step 5: low-frequency EMA refresh, whole population per jitted call;
-# Steps 3-4 ride along as measured bit-packed uplink.
+# Steps 3-4 ride along as a measured bit-packed repro.wire.CodePayload
+# (one per-client record stream, the unified wire carrier).
 uplink = 0
 for r in range(20):
     clients, packed = engine.round(clients, x2)

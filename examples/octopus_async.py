@@ -3,11 +3,13 @@
 Successor to examples/federated_sync.py: instead of a hand-rolled loop
 over one engine call, the server side is the repro.server runtime — a
 RoundScheduler decides who participates, straggles, drops out or churns;
-uplinks land in a versioned CodeStore; the CodebookRegistry pins every
-Step 5 merge so late packets decode against the dictionary they were
-packed under; and a MultiTaskTrainer fits TWO downstream heads (content
-classifier + identity adversary, the paper's Fig. 5 pairing) from ONE
-bulk decode of the store.
+every uplink is a ``repro.wire.CodePayload`` carrying its OWN codebook
+version and label channels, delivered through the single wire endpoint
+(``OctopusServer.ingest``) into a versioned CodeStore; the
+CodebookRegistry pins every Step 5 merge so late payloads decode against
+the dictionary they were packed under; and a MultiTaskTrainer fits TWO
+downstream heads (content classifier + identity adversary, the paper's
+Fig. 5 pairing) from ONE bulk decode of the store.
 
 Three scheduler scenarios, same jitted population round:
   full     every slot participates, no failures
@@ -51,9 +53,9 @@ for name, sc in STANDARD_SCENARIOS.items():
                           staleness_decay=0.5)
     batches = stacked_batches(stacked, LOCAL_B, epochs=ROUNDS, seed=3)
 
-    # reference features captured the round each record LANDS, against the
-    # registry snapshot of its version — re-decoded at the end to show the
-    # store stays bit-exact across later merges
+    # reference features captured the round each payload LANDS (fused
+    # wire decode against its own version) — re-decoded at the end via
+    # the index path to show the store stays bit-exact across merges
     refs = []
     t0, timed = time.time(), 0.0
     for r, b in zip(range(ROUNDS), batches):
@@ -64,10 +66,8 @@ for name, sc in STANDARD_SCENARIOS.items():
         if r >= 1:
             timed = time.time() - t0
         for rec in srv.store.records[len(refs):]:
-            codes = rec.packed.unpack()
-            codes = codes.reshape((-1,) + codes.shape[2:])
-            refs.append((rec.version, np.asarray(OC.codes_to_features(
-                None, cfg, codes, codebook=srv.registry.get(rec.version)))))
+            refs.append((rec.version,
+                         np.asarray(srv.wire.decode(rec.packed))))
 
     rps = (ROUNDS - 1) / max(timed, 1e-9)
     print(f"\n[{name}] {ROUNDS} rounds, {rps:.2f} rounds/sec (post-compile)")

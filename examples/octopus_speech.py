@@ -14,6 +14,7 @@ from repro.core import privacy as PV
 from repro.core.disentangle import perturb_private, recombine
 from repro.core.dvqae import DVQAEConfig, decode, forward
 from repro.data import make_speech, train_test_split
+from repro.wire import OctopusClient, OctopusServer
 
 key = jax.random.PRNGKey(0)
 cfg = DVQAEConfig(kind="speech", in_channels=16, hidden=32, latent_dim=16,
@@ -30,18 +31,20 @@ for i in range(250):
     server, out = OC.server_pretrain_step(server, cfg, train.x[sel])
 print(f"recon loss {float(out.recon_loss):.4f}")
 
-client = OC.client_init(server)
-tx = OC.client_transmit(client, cfg, train.x, labels=train.content)
+# wire session: one CodePayload uplink, one server-side decode
+srv = OctopusServer(server, cfg)
+client = OctopusClient(srv)
+payload = client.transmit(train.x, labels=train.content)
+srv.ingest(payload)
 raw = train.x.size * 4
-print(f"GSVQ codes: {tx.indices.shape}, {tx.nbytes:,} bytes "
-      f"({raw/tx.nbytes:.0f}x smaller than raw)")
+print(f"GSVQ codes: {payload.shape}, {payload.nbytes:,} bytes "
+      f"({raw/payload.nbytes:.0f}x smaller than raw)")
 
-feats = OC.codes_to_features(server, cfg, tx.indices)
+feats, label_dict = srv.features()
 probe = DS.init_linear_probe(key, int(feats[0].size), 16)
-probe = DS.sgd_train(key, DS.linear_probe, probe, feats, train.content,
-                     steps=250)
-te_tx = OC.client_transmit(client, cfg, test.x)
-te_feats = OC.codes_to_features(server, cfg, te_tx.indices)
+probe = DS.sgd_train(key, DS.linear_probe, probe, feats,
+                     label_dict["label"], steps=250)
+te_feats = srv.decode(client.transmit(test.x))
 print(f"phoneme accuracy on codes: "
       f"{DS.accuracy(DS.linear_probe, probe, te_feats, test.content):.3f}")
 

@@ -8,15 +8,18 @@
 3. The server trains a downstream classifier on the gathered codes.
 4. A privacy audit shows identity (style) is filtered while content
    classification survives.
+
+Everything crossing the client→server boundary is a single carrier —
+``repro.wire.CodePayload`` — through the session facades
+``OctopusClient`` (uplink) / ``OctopusServer`` (ingest + decode).
 """
 import jax
-import jax.numpy as jnp
 
 from repro.core import downstream as DS
-from repro.core import octopus as OC
 from repro.core import privacy as PV
 from repro.core.dvqae import DVQAEConfig
 from repro.data import holdout_atd, make_images, partition, train_test_split
+from repro.wire import OctopusServer
 
 key = jax.random.PRNGKey(0)
 cfg = DVQAEConfig(kind="image", in_channels=3, hidden=32, latent_dim=16,
@@ -31,35 +34,28 @@ print(f"{len(clients)} clients, {train.x.shape[0]} train samples, "
       f"{atd.x.shape[0]} public ATD samples")
 
 # ------------------------------------------------- Step 1: server pretrain
-server = OC.server_init(key, cfg)
-for i in range(200):
-    sel = jax.random.randint(jax.random.fold_in(key, i), (32,), 0,
-                             atd.x.shape[0])
-    server, out = OC.server_pretrain_step(server, cfg, atd.x[sel])
+srv = OctopusServer.init(key, cfg)
+out = srv.pretrain(key, atd.x, steps=200)
 print(f"server DVQ-AE pretrained: recon loss {float(out.recon_loss):.4f}")
 
-# ------------------------- Steps 2-4: clients fine-tune + transmit codes
-txs = []
-total_bytes = 0
+# ---------------- Steps 2-4: clients fine-tune + transmit CodePayloads
 for ci, shard in enumerate(clients):
-    client = OC.client_init(server)
-    client, _, _ = OC.client_finetune_step(client, cfg, shard.x[:32])
-    tx = OC.client_transmit(client, cfg, shard.x, labels=shard.content)
-    txs.append(tx)
-    total_bytes += tx.nbytes
+    client = srv.deploy(client_id=ci)
+    client.finetune(shard.x[:32])
+    payload = client.transmit(shard.x, labels=shard.content)
+    srv.ingest(payload, client_ids=[ci])
+total_bytes = srv.store.total_bytes              # measured from the wire
 raw_bytes = sum(int(s.x.size) * 4 for s in clients)
 print(f"transmitted {total_bytes:,} bytes of codes "
       f"(raw would be {raw_bytes:,}: {raw_bytes/total_bytes:.0f}x saving)")
 
 # --------------------------------------- Step 6: downstream at the server
-codes, labels, _ = OC.gather_codes(txs)
-feats = OC.codes_to_features(server, cfg, codes)
+feats, label_dict = srv.features()               # ONE bulk decode
+labels = label_dict["label"]
 probe = DS.init_linear_probe(key, int(feats[0].size), 8)
 probe = DS.sgd_train(key, DS.linear_probe, probe, feats, labels, steps=200)
 
-test_client = OC.client_init(server)
-te_tx = OC.client_transmit(test_client, cfg, test.x)
-te_feats = OC.codes_to_features(server, cfg, te_tx.indices)
+te_feats = srv.decode(srv.deploy().transmit(test.x))
 acc = DS.accuracy(DS.linear_probe, probe, te_feats, test.content)
 print(f"downstream content accuracy on codes: {acc:.3f}")
 

@@ -42,11 +42,11 @@ clips = make_speech(key, 256, frames=256, channels=16)
 for i in range(100):
     sel = jax.random.randint(jax.random.fold_in(key, i), (16,), 0, 256)
     server, _ = OC.server_pretrain_step(server, dvq, clips.x[sel])
-client = OC.client_init(server)
-tx = OC.client_transmit(client, dvq, clips.x)
-codes = tx.indices                       # (256, 64) int32 in [0, K)
+from repro.wire import OctopusClient
+payload = OctopusClient(server, dvq).transmit(clips.x)   # CodePayload uplink
+codes = payload.unpack()[0]              # (256, 64) int32 in [0, K)
 print(f"gathered {codes.shape} code sequences "
-      f"({tx.nbytes:,} bytes transmitted)")
+      f"({payload.nbytes:,} bytes transmitted)")
 
 # -------------------------------------------------- backbone on the codes
 base = smoke_config("qwen3_0_6b")

@@ -14,6 +14,7 @@ group) — see repro.distributed for the sharded variant.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -38,11 +39,15 @@ class ServerState(NamedTuple):
 
 
 class Transmission(NamedTuple):
-    """What actually crosses the network, with its §2.8 byte accounting.
+    """LEGACY carrier: what crossed the network before the unified wire
+    protocol. New code speaks ``repro.wire.CodePayload`` — the single
+    versioned carrier — via the ``repro.wire`` session facades; packed
+    Transmissions are coerced with ``repro.wire.as_payload``.
 
     ``payload`` is the dense ceil(log2 K)-bit packed word stream (see
     repro.kernels.pack_bits) — the bytes that would actually hit the
-    uplink; ``nbytes`` is MEASURED from it, not computed from a formula.
+    uplink; ``nbytes`` is MEASURED from it (via ``CodePayload.nbytes``,
+    the repo's one byte accounting), not computed from a formula.
     ``indices`` keeps the unpacked int32 view for local convenience.
     """
     indices: jax.Array        # int32 code matrix (B, T[, n_c])
@@ -59,8 +64,9 @@ def transmit_bits(cfg: DVQAEConfig) -> int:
     *group* index per slice per position, so the per-code alphabet is
     n_groups — including sliced configs with n_groups == 1, whose codes
     are a single-symbol alphabet (1-bit floor), NOT K. Per position this
-    is ``n_slices * transmit_bits == gsvq_bits_per_position``; measured
-    payload sizes (Transmission.nbytes / PackedCodes.nbytes) follow.
+    is ``n_slices * transmit_bits == gsvq_bits_per_position``; the
+    measured payload size (``repro.wire.CodePayload.nbytes``, the single
+    §2.8 accounting) follows.
     """
     from repro.kernels.pack_bits import code_bits
     if cfg.n_groups > 1 or cfg.n_slices > 1:
@@ -141,26 +147,35 @@ def client_finetune_step(client: ClientState, cfg: DVQAEConfig, batch,
 
 def client_transmit(client: ClientState, cfg: DVQAEConfig, batch,
                     labels=None) -> Transmission:
-    """Encode a local batch, release ONLY the public code indices,
+    """DEPRECATED (use ``repro.wire.OctopusClient.transmit`` — same
+    uplink as a ``CodePayload``, without materializing the index tensor).
+
+    Encode a local batch, release ONLY the public code indices,
     bit-packed to ceil(log2 K) bits per code (§2.8)."""
-    from repro.kernels.ops import pack_codes
+    warnings.warn(
+        "client_transmit is deprecated; use repro.wire.OctopusClient"
+        ".transmit / .round (CodePayload uplink)",
+        DeprecationWarning, stacklevel=2)
+    from repro.wire.payload import CodePayload
     out = forward(client.params, cfg, batch)
     idx = out.latent.indices
-    bits = transmit_bits(cfg)
-    payload = pack_codes(idx, bits=bits)
-    nbytes = int(payload.size) * payload.dtype.itemsize    # measured
-    return Transmission(indices=idx, nbytes=nbytes, labels=labels,
-                        payload=payload, bits=bits)
+    p = CodePayload.pack(idx, bits=transmit_bits(cfg))
+    return Transmission(indices=idx, nbytes=p.nbytes, labels=labels,
+                        payload=p.payload, bits=p.bits)
 
 
 def unpack_transmission(tx: Transmission) -> jax.Array:
-    """Server side of Step 4: packed payload -> int32 code matrix."""
-    from repro.kernels.ops import unpack_codes
-    if tx.payload is None:
+    """DEPRECATED (use ``repro.wire.CodePayload.unpack``): server side of
+    Step 4, packed payload -> int32 code matrix."""
+    warnings.warn(
+        "unpack_transmission is deprecated; use repro.wire.CodePayload"
+        ".unpack (via repro.wire.as_payload for legacy Transmissions)",
+        DeprecationWarning, stacklevel=2)
+    from repro.wire.payload import as_payload
+    p = as_payload(tx)
+    if p is None:                      # unpacked legacy carrier
         return tx.indices
-    flat = unpack_codes(tx.payload, bits=tx.bits,
-                        count=int(jnp.size(tx.indices)))
-    return flat.reshape(tx.indices.shape)
+    return p.unpack()
 
 
 # --------------------------------------------------------------- Step 5
@@ -307,8 +322,9 @@ def client_round(client: ClientState, cfg: DVQAEConfig, batch, *,
 
     Returns (new_client, int32 indices); packing the indices across the
     whole population at once is the engine's job (one big packed buffer
-    beats per-client slivers). :func:`client_round_fused` is the variant
-    whose uplink never materializes the index tensor at all.
+    beats per-client slivers). ``repro.wire.OctopusClient.round`` is the
+    session entry whose uplink never materializes the index tensor at
+    all and ships a ``CodePayload``.
     """
     client, z = client_finetune_encode(client, cfg, batch, lr=lr,
                                        n_local_steps=n_local_steps)
@@ -321,24 +337,21 @@ def client_round(client: ClientState, cfg: DVQAEConfig, batch, *,
 def client_round_fused(client: ClientState, cfg: DVQAEConfig, batch, *,
                        lr: float = 1e-4, gamma: float = 0.99,
                        n_local_steps: int = 1):
-    """Steps 2-5 with the fused uplink tail: fine-tune, ONE encoder pass,
-    then one ``ops.encode_codes`` dispatch that quantizes, bit-packs and
-    accumulates the EMA statistics on-chip — neither the (N, K) distance
-    matrix nor the int32 index tensor ever hits HBM.
+    """DEPRECATED (use ``repro.wire.OctopusClient.round`` — the same
+    fused Steps 2-5 tail, returning a ``CodePayload``; or the pure
+    ``repro.wire.round_words`` for jit composition).
 
     Returns (new_client, (nW, W) uint32 packed words) — the words are
-    exactly ``pack_codes(indices, bits=transmit_bits(cfg))``.
+    exactly ``pack_codes(indices, bits=transmit_bits(cfg))``, identical
+    to ``OctopusClient.round(batch).payload``.
     """
-    from repro.kernels.ops import encode_codes
-    client, z = client_finetune_encode(client, cfg, batch, lr=lr,
-                                       n_local_steps=n_local_steps)
-    zf = z.reshape(1, -1, z.shape[-1])
-    words, counts, sums = encode_codes(
-        zf, client.params["codebook"][None], bits=transmit_bits(cfg),
-        n_groups=cfg.n_groups, n_slices=cfg.n_slices)
-    client = client_codebook_refresh(client, cfg, batch, gamma=gamma,
-                                     stats=(counts[0], sums[0]))
-    return client, words
+    warnings.warn(
+        "client_round_fused is deprecated; use repro.wire.OctopusClient"
+        ".round / repro.wire.round_words (CodePayload uplink)",
+        DeprecationWarning, stacklevel=2)
+    from repro.wire.session import round_words
+    return round_words(client, cfg, batch, lr=lr, gamma=gamma,
+                       n_local_steps=n_local_steps)
 
 
 # --------------------------------------------------------------- Step 6
@@ -393,49 +406,18 @@ def decode_table(cfg: DVQAEConfig, codebook):
     return codebook, 1
 
 
-def _packed_view(tx):
-    """(payload, bits, index shape, n_records) of a PackedCodes or packed
-    Transmission, or None when ``tx`` is a plain index array (or an
-    unpacked Transmission). ``n_records`` > 1 means the payload rows are
-    that many concatenated per-record (per-client) word streams, each
-    zero-padded to whole super-groups — the layout the fused encode
-    kernel emits for a population."""
-    payload = getattr(tx, "payload", None)
-    if payload is None:
-        return None
-    if isinstance(tx, Transmission):
-        return payload, tx.bits, tuple(tx.indices.shape), 1
-    return (payload, tx.bits, tuple(tx.shape),   # sim.engine.PackedCodes
-            getattr(tx, "n_records", 1))
-
-
-def packed_record_rows(payload_rows, bits: int, count: int, n_records: int,
-                       rows, table_dim: int):
-    """Per-record gather of fused-decoded rows.
-
-    ``rows``: (payload_rows * G, F) decode of the FULL word stream (pad
-    codes included). Each of the ``n_records`` record streams owns
-    ``payload_rows / n_records`` word rows; its first ``count/n_records``
-    decoded rows are real, the rest decode trailing zero-padding. Returns
-    the (count, F) real rows in stream order.
-    """
-    rpr = payload_rows // n_records
-    from repro.kernels.pack_bits import packing_dims
-    G, _ = packing_dims(bits)
-    per = rows.reshape(n_records, rpr * G, table_dim)
-    return per[:, :count // n_records].reshape(count, table_dim)
-
-
 def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
                       indices, *, codebook=None):
     """Dequantize gathered codes into downstream-task features.
 
-    ``indices`` is either an int32 code array OR a packed carrier (a
-    ``sim.engine.PackedCodes`` / packed ``Transmission``) — the latter
-    takes the fused decode path (ops.decode_codes): straight from the
-    uint32 word stream to feature rows, never materialising the index or
-    gathered-atom tensors. Both paths agree bit-exactly for VQ and to
-    fp32 tolerance for GSVQ means.
+    ``indices`` is either an int32 code array OR a packed carrier — a
+    ``repro.wire.CodePayload`` (or legacy ``sim.engine.PackedCodes`` /
+    packed ``Transmission``, coerced via ``repro.wire.as_payload``). The
+    carrier takes the fused decode path (repro.wire.codec, ONE
+    ops.decode_codes dispatch): straight from the uint32 word stream to
+    feature rows, never materialising the index or gathered-atom
+    tensors. Both paths agree bit-exactly for VQ and to fp32 tolerance
+    for GSVQ means.
 
     ``codebook`` overrides the server's current dictionary — the versioned
     code store (repro.server) passes the registry snapshot the codes were
@@ -449,37 +431,11 @@ def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
                              "explicit codebook= to decode against")
         codebook = server.params["codebook"]
     cb = codebook
-    packed = _packed_view(indices)
-    if packed is not None:
-        from repro.kernels.ops import decode_codes
-        payload, bits, shape, n_records = packed
-        table, n_slices = decode_table(cfg, cb)
-        count = 1
-        for d in shape:
-            count *= int(d)
-        if n_records == 1:
-            rows = decode_codes(payload, table, bits=bits, count=count,
-                                n_slices=n_slices)
-        else:
-            # per-record streams: decode everything (pads included) with
-            # per-record-restarting slice phases, then drop each record's
-            # trailing pad rows
-            from repro.kernels.decode_codes import stream_phases
-            from repro.kernels.pack_bits import packing_dims
-            G, _ = packing_dims(bits)
-            n_rows = int(payload.shape[0])
-            phases = jnp.tile(stream_phases(n_rows // n_records, bits,
-                                            n_slices), n_records)
-            rows = decode_codes(payload, table, bits=bits,
-                                count=n_rows * G, n_slices=n_slices,
-                                phases=phases)
-            rows = packed_record_rows(n_rows, bits, count, n_records, rows,
-                                      int(table.shape[-1]))
-        if cfg.n_groups > 1 or cfg.n_slices > 1:
-            # shape ends with n_c; per-code rows are m-dim slice chunks
-            # whose row-major concatenation IS the (..., M) layout
-            return rows.reshape(shape[:-1] + (shape[-1] * table.shape[-1],))
-        return rows.reshape(shape + (table.shape[-1],))
+    from repro.wire.codec import decode_payloads
+    from repro.wire.payload import as_payload
+    p = as_payload(indices)
+    if p is not None:
+        return decode_payloads([p], cfg, cb)[0]
     if isinstance(indices, Transmission):       # unpacked legacy carrier
         indices = indices.indices
     if cfg.n_groups > 1 or cfg.n_slices > 1:

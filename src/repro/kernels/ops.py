@@ -42,14 +42,30 @@ def unpack_codes(words, *, bits, count, **kw):
     return unpack_codes_pallas(words, bits=bits, count=count, **kw)
 
 
-def decode_codes(words, table, *, bits, count, n_slices=1, phases=None,
-                 use_ref=False, **kw):
+def decode_codes(words, table, *, bits=None, count=None, n_slices=1,
+                 phases=None, use_ref=False, **kw):
     """Fused packed-word -> feature decode: (n, W) uint32 words + a
     (n_slices*R, F) decode table -> (count, F) rows, without the int32
     index or gathered-atom tensors ever hitting HBM (see
     kernels/decode_codes.py for the layout and the GSVQ mean-table
     contract). ``use_ref=True`` falls back to the pure-jnp oracle
-    (ref.decode_codes_ref) — same result, no Pallas dispatch."""
+    (ref.decode_codes_ref) — same result, no Pallas dispatch.
+
+    ``words`` may be a ``repro.wire.CodePayload`` directly — bits/count
+    (and per-record slice phases) then come from the carrier, and the
+    result is the payload's (count, F) real rows in stream order."""
+    if hasattr(words, "unpack"):               # wire carrier
+        if bits is not None or count is not None or phases is not None:
+            raise TypeError(
+                "decode_codes got a CodePayload AND explicit bits=/count=/"
+                "phases= — the carrier's own fields are authoritative; "
+                "drop the arguments (or pass the raw word stream)")
+        from repro.wire.codec import decode_rows
+        return decode_rows(words, table, n_slices=n_slices,
+                           use_ref=use_ref, **kw)
+    if bits is None or count is None:
+        raise TypeError("decode_codes needs bits= and count= for a raw "
+                        "word stream (or pass a CodePayload)")
     if use_ref:
         from .ref import decode_codes_ref
         return decode_codes_ref(words, table, bits=bits, count=count,
@@ -84,6 +100,25 @@ def encode_codes(z, codebooks, *, bits, n_groups=1, n_slices=1,
         kw.setdefault("block_n", 4096)
     return encode_codes_pallas(z, codebooks, bits=bits, n_groups=n_groups,
                                n_slices=n_slices, **kw)
+
+
+def encode_payload(z, codebooks, *, bits, shape, n_groups=1, n_slices=1,
+                   version=0, labels=None, n_samples=None, **kw):
+    """``encode_codes`` speaking the wire natively: same fused dispatch,
+    but the words come back wrapped as a ``repro.wire.CodePayload`` —
+    one per-record stream per codebook record (``n_records ==
+    z.shape[0]``), stamped with ``version``/``labels``/``privatized``.
+    ``shape`` is the transmitted index shape (R, P[, n_c]). Returns
+    (payload, counts, sums)."""
+    from repro.wire.payload import CodePayload
+    words, counts, sums = encode_codes(z, codebooks, bits=bits,
+                                       n_groups=n_groups,
+                                       n_slices=n_slices, **kw)
+    payload = CodePayload.from_words(
+        words, bits=bits, shape=shape, n_records=int(z.shape[0]),
+        version=version, labels=labels, n_samples=n_samples,
+        privatized=True)
+    return payload, counts, sums
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):

@@ -7,8 +7,13 @@
   scheduler  — RoundScheduler: partial participation, stragglers, drops,
                client churn — deterministic under one PRNG key
   multitask  — MultiTaskTrainer: N downstream heads from ONE bulk decode
-  runtime    — AsyncCodeServer: ties it all to sim.SimEngine per round
+  runtime    — AsyncCodeServer: ties it all to sim.SimEngine per round,
+               ingesting every uplink through the unified wire endpoint
+               (repro.wire.OctopusServer / CodePayload)
 """
+from repro.wire.payload import CodePayload
+from repro.wire.session import OctopusServer
+
 from .multitask import MultiTaskTrainer, TaskSpec
 from .registry import CodebookRegistry
 from .runtime import AsyncCodeServer, RoundStats
@@ -16,7 +21,8 @@ from .scheduler import (STANDARD_SCENARIOS, RoundEvent, RoundScheduler,
                         Scenario, SchedulerConfig)
 from .store import CodeStore, StoreRecord
 
-__all__ = ["AsyncCodeServer", "CodeStore", "CodebookRegistry",
-           "MultiTaskTrainer", "RoundEvent", "RoundScheduler", "RoundStats",
+__all__ = ["AsyncCodeServer", "CodePayload", "CodeStore",
+           "CodebookRegistry", "MultiTaskTrainer", "OctopusServer",
+           "RoundEvent", "RoundScheduler", "RoundStats",
            "STANDARD_SCENARIOS", "Scenario", "SchedulerConfig",
            "StoreRecord", "TaskSpec"]

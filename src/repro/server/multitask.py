@@ -87,12 +87,19 @@ class MultiTaskTrainer:
                 {k: y[sel] for k, y in ys.items()})
         return self.params
 
-    def fit_from_store(self, key, store, server, *, registry=None,
-                       steps: int = 200, batch: int = 64):
+    def fit_from_store(self, key, store, server=None, *, registry=None,
+                       version=None, steps: int = 200, batch: int = 64):
         """Decode the store ONCE, then train all heads from the shared
-        features. Returns (params, feats, labels) so callers can evaluate
-        without re-decoding."""
-        feats, labels = store.dataset(server, registry=registry)
+        features. ``store`` may be a ``CodeStore`` (+ ``server`` /
+        ``registry``) or a ``repro.wire.OctopusServer`` wire endpoint —
+        then the version-correct decode comes from ``features()`` and
+        ``version=`` filters to one codebook version. Returns (params,
+        feats, labels) so callers can evaluate without re-decoding."""
+        if hasattr(store, "features"):          # wire endpoint
+            feats, labels = store.features(version=version)
+        else:
+            feats, labels = store.dataset(server, registry=registry,
+                                          version=version)
         self.fit(key, feats, labels, steps=steps, batch=batch)
         return self.params, feats, labels
 

@@ -50,6 +50,13 @@ class CodebookRegistry:
         self._versions[self.latest] = jnp.asarray(codebook)
         return self.latest
 
+    def pin_current(self, codebook: jax.Array) -> int:
+        """Replace the LATEST snapshot in place (no new version) — for
+        Step 1 pretraining that moves the dictionary before any client
+        deployed or any payload was packed under it."""
+        self._versions[self.latest] = jnp.asarray(codebook)
+        return self.latest
+
     # ----------------------------------------------------------- merging
 
     def merge(self, server: OC.ServerState, client_codebooks, client_counts,

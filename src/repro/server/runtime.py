@@ -13,10 +13,13 @@ absorbing the uplinks. Per round it
      (``SimEngine.round_indices``) and scatters the states back,
   3. splits the participants into delivery groups by (codebook version,
      straggler delay, dropped) and bit-packs each group's codes into its
-     own measured uplink buffer — stragglers' packets stay tagged with
-     the version they were packed under,
-  4. delivers every in-flight packet whose arrival round has come into
-     the CodeStore (dropped packets burn uplink bytes but never land),
+     own measured ``repro.wire.CodePayload`` — version and label
+     channels travel INSIDE the carrier, so stragglers' packets stay
+     tagged with the dictionary they were packed under,
+  4. delivers every in-flight payload whose arrival round has come
+     through the single wire endpoint (``OctopusServer.ingest``, keyed
+     on the payload's own version; dropped packets burn uplink bytes but
+     never land),
   5. every ``merge_every`` rounds runs the staleness-weighted Step 5
      merge over the ACTIVE population — slots that never got sampled
      since their last deploy still sit on an older dictionary version,
@@ -37,8 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import octopus as OC
-from repro.kernels.ops import pack_codes
-from repro.sim.engine import PackedCodes, SimEngine
+from repro.sim.engine import SimEngine
+from repro.wire import CodePayload, OctopusServer
 
 from .registry import CodebookRegistry
 from .scheduler import RoundEvent, RoundScheduler
@@ -46,13 +49,13 @@ from .store import CodeStore
 
 
 class PendingUplink(NamedTuple):
-    """A packed delivery group still in flight (straggler delay)."""
+    """A wire payload still in flight (straggler delay). Codebook version
+    and label channels ride INSIDE the payload — the carrier is the
+    bookkeeping."""
     arrival_round: int
-    packed: PackedCodes
+    packed: CodePayload
     client_ids: np.ndarray
     sent_round: int
-    version: int
-    labels: Optional[Dict[str, jax.Array]]
 
 
 class RoundStats(NamedTuple):
@@ -76,12 +79,12 @@ class AsyncCodeServer:
                  merge_every: int = 0, staleness_decay: float = 0.5,
                  redeploy_on_merge: bool = True):
         self.engine = engine
-        self.server = server
         self.scheduler = scheduler
         self.n_slots = scheduler.n_slots
-        self.registry = registry or CodebookRegistry(
-            server.params["codebook"])
-        self.store = store if store is not None else CodeStore(engine.cfg)
+        # ONE wire endpoint owns server state + registry + store: ingest
+        # is keyed on each payload's own codebook version
+        self.wire = OctopusServer(server, engine.cfg, store=store,
+                                  registry=registry)
         self.merge_every = merge_every
         self.staleness_decay = staleness_decay
         self.redeploy_on_merge = redeploy_on_merge
@@ -96,6 +99,20 @@ class AsyncCodeServer:
         self.bytes_delivered = 0
         self.bytes_dropped = 0
         self.n_merges = 0
+
+    # --------------------------------------------- wire endpoint delegates
+
+    @property
+    def server(self) -> OC.ServerState:
+        return self.wire.state
+
+    @property
+    def registry(self) -> CodebookRegistry:
+        return self.wire.registry
+
+    @property
+    def store(self) -> CodeStore:
+        return self.wire.store
 
     # ------------------------------------------------------------ helpers
 
@@ -139,7 +156,9 @@ class AsyncCodeServer:
             label_dict = labels if isinstance(labels, dict) \
                 else {"label": labels}
 
-        # ---- split into delivery groups: (version, delay, dropped)
+        # ---- split into delivery groups: (version, delay, dropped); each
+        # group's payload carries ITS version + label channels, so the
+        # store keys ingestion off the carrier alone
         sent = 0
         versions = self.slot_versions[ids]
         groups: Dict[tuple, list] = {}
@@ -149,32 +168,30 @@ class AsyncCodeServer:
         for (version, delay, dropped), pos in groups.items():
             pos = np.asarray(pos)
             gidx = idx[jnp.asarray(pos)]
-            payload = pack_codes(gidx, bits=self.engine.bits)
-            packed = PackedCodes(payload=payload, bits=self.engine.bits,
-                                 shape=tuple(gidx.shape))
-            sent += packed.nbytes
-            if dropped:
-                self.bytes_dropped += packed.nbytes
-                continue
             glabels = None
             if label_dict is not None:
                 grows = jnp.asarray(ids[pos])
                 glabels = {t: y[grows].reshape(-1)
                            for t, y in label_dict.items()}
+            packed = CodePayload.pack(gidx, bits=self.engine.bits,
+                                      version=version, labels=glabels)
+            sent += packed.nbytes
+            if dropped:
+                self.bytes_dropped += packed.nbytes
+                continue
             self._pending.append(PendingUplink(
                 arrival_round=self.round + delay, packed=packed,
-                client_ids=ids[pos], sent_round=self.round,
-                version=version, labels=glabels))
+                client_ids=ids[pos], sent_round=self.round))
         self.bytes_sent += sent
 
-        # ---- deliver everything whose arrival round has come
+        # ---- deliver everything whose arrival round has come through the
+        # single wire endpoint (version/labels read from the payload)
         delivered, n_del = 0, 0
         still: List[PendingUplink] = []
         for p in self._pending:
             if p.arrival_round <= self.round:
-                self.store.add(p.packed, client_ids=p.client_ids,
-                               round=p.sent_round, version=p.version,
-                               labels=p.labels)
+                self.wire.ingest(p.packed, client_ids=p.client_ids,
+                                 round=p.sent_round)
                 delivered += p.packed.nbytes
                 n_del += 1
             else:
@@ -197,8 +214,7 @@ class AsyncCodeServer:
     def _merge(self) -> int:
         act = np.nonzero(self.scheduler.active)[0]
         jact = jnp.asarray(act)
-        self.server, version = self.registry.merge(
-            self.server,
+        version = self.wire.merge(
             self.clients.params["codebook"][jact],
             self.clients.ema.counts[jact],
             client_versions=self.slot_versions[act],
@@ -215,9 +231,10 @@ class AsyncCodeServer:
 
     # ---------------------------------------------------------- downstream
 
-    def dataset(self):
-        """Version-correct bulk decode of everything delivered so far."""
-        return self.store.dataset(self.server, registry=self.registry)
+    def dataset(self, version=None):
+        """Version-correct bulk decode of everything delivered so far
+        (``OctopusServer.features``)."""
+        return self.wire.features(version=version)
 
     @property
     def in_flight(self) -> int:

@@ -1,4 +1,4 @@
-"""Versioned, capacity-bounded store of packed client transmissions.
+"""Versioned, capacity-bounded store of packed client payloads.
 
 This is Step 6's front door. Clients stream bit-packed code indices at
 high frequency; the server must absorb them under churn without either
@@ -7,23 +7,29 @@ unbounded memory or eager decoding. ``CodeStore`` supersedes the passive
 
   * entries stay PACKED until a trainer asks for features — storage cost
     is the measured uplink bytes, not the decoded float tensors;
-  * every entry is keyed by ``(client_ids, round, codebook_version)`` so
-    transmissions that raced a Step 5 merge decode against the registry
+  * every entry is a ``repro.wire.CodePayload`` keyed by the payload's
+    OWN codebook version (plus ``client_ids`` / ``round`` provenance) so
+    payloads that raced a Step 5 merge decode against the registry
     snapshot they were packed under (bit-exact), never the current table;
+  * payloads not marked ``privatized`` are REFUSED at the door — the
+    §2.5 invariant that only public Z• codes cross the wire is enforced
+    where the wire terminates;
   * a sample-count capacity with FIFO or reservoir eviction bounds the
     store under "millions of users" traffic — FIFO keeps the freshest
     window, reservoir keeps an (approximately) uniform sample of history;
   * decoding is BULK: records are grouped by version and each group is
-    dequantized in one call, so a multi-task trainer pays one decode for
-    the whole store regardless of how many heads consume it.
+    dequantized in one ``repro.wire.codec`` dispatch, so a multi-task
+    trainer pays one decode for the whole store regardless of how many
+    heads consume it.
 
-Labels ride along per task: ``add(..., labels={"content": y1, "style":
-y2})`` — shape-validated against the packed payload at add() time, not
-at decode time three rounds later.
+Labels ride along per task — either inside the payload
+(``CodePayload.labels``) or as ``add(..., labels={"content": y1})`` —
+shape-validated against the packed payload at add() time, not at decode
+time three rounds later.
 """
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple, Optional, Tuple, Union
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,16 +37,13 @@ import numpy as np
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
-from repro.sim.engine import PackedCodes
-
-LabelsLike = Union[None, jax.Array, np.ndarray, Dict[str, jax.Array]]
-
-DEFAULT_TASK = "label"
+from repro.wire.payload import (DEFAULT_TASK, CodePayload, LabelsLike,
+                                normalize_labels)
 
 
 class StoreRecord(NamedTuple):
-    """One buffered uplink: a packed payload plus its provenance."""
-    packed: PackedCodes
+    """One buffered uplink: a wire payload plus its provenance."""
+    packed: CodePayload
     client_ids: np.ndarray              # (C,) who sent these codes
     round: int                          # scheduler round it was SENT
     version: int                        # codebook version it was packed under
@@ -49,24 +52,6 @@ class StoreRecord(NamedTuple):
     @property
     def n_samples(self) -> int:
         return int(self.packed.shape[0]) * int(self.packed.shape[1])
-
-
-def _normalize_labels(labels: LabelsLike, n: int) -> Optional[Dict]:
-    """dict/array/None -> {task: (n,) array} with add()-time validation."""
-    if labels is None:
-        return None
-    if not isinstance(labels, dict):
-        labels = {DEFAULT_TASK: labels}
-    out = {}
-    for task, arr in labels.items():
-        arr = jnp.asarray(arr)
-        if arr.size != n:
-            raise ValueError(
-                f"labels[{task!r}] has {arr.size} entries but the packed "
-                f"payload carries {n} samples (shape mismatch caught at "
-                f"add(), not decode)")
-        out[task] = arr.reshape(-1)
-    return out
 
 
 class CodeStore:
@@ -119,14 +104,22 @@ class CodeStore:
 
     # ---------------------------------------------------------------- add
 
-    def add(self, packed: PackedCodes, *, client_ids=None, round: int = 0,
-            version: int = 0, labels: LabelsLike = None) -> StoreRecord:
-        """Ingest one packed uplink.
+    def add(self, packed: CodePayload, *, client_ids=None, round: int = 0,
+            version: Optional[int] = None, labels: LabelsLike = None
+            ) -> StoreRecord:
+        """Ingest one wire payload.
 
         packed.shape is (C, B, T[, n_c]); ``client_ids`` (C,) defaults to
-        0..C-1. ``labels``: per-task (C, B)/(C*B,) arrays (or one bare
-        array, stored under task name ``"label"``) — validated HERE.
+        0..C-1. ``version`` defaults to the payload's OWN codebook
+        version; ``labels`` default to the payload's own label channels
+        (per-task (C, B)/(C*B,) arrays, or one bare array stored under
+        task name ``"label"``) — validated HERE. Payloads whose producer
+        cleared the ``privatized`` flag are refused (§2.5).
         """
+        if getattr(packed, "privatized", True) is False:
+            raise ValueError(
+                "refusing a payload not marked privatized: only public Z• "
+                "code indices may enter the store (§2.5)")
         if len(packed.shape) < 2:
             raise ValueError(f"packed payload must carry a (clients, batch) "
                              f"leading layout, got shape {packed.shape}")
@@ -137,9 +130,13 @@ class CodeStore:
         if client_ids.shape[0] != C:
             raise ValueError(f"client_ids has {client_ids.shape[0]} entries "
                              f"for {C} client rows in the payload")
+        if version is None:
+            version = int(getattr(packed, "version", 0))
+        if labels is None:
+            labels = getattr(packed, "labels", None)
         rec = StoreRecord(packed=packed, client_ids=client_ids,
                           round=int(round), version=int(version),
-                          labels=_normalize_labels(labels, C * B))
+                          labels=normalize_labels(labels, C * B))
         self._records.append(rec)
         self._seen_records += 1
         self._evict()
@@ -196,23 +193,31 @@ class CodeStore:
             parts.append(idx.reshape((-1,) + idx.shape[2:]))
         return jnp.concatenate(parts, axis=0)
 
-    def labels(self, task: Optional[str] = None) -> Optional[jax.Array]:
+    def labels(self, task: Optional[str] = None, *, records=None
+               ) -> Optional[jax.Array]:
         """Concatenated labels for ``task`` (record order), or None if any
-        record lacks them."""
+        record lacks them. ``records`` restricts to a subset (e.g. one
+        codebook version's)."""
         if task is None:
             task = DEFAULT_TASK
         parts = []
-        for r in self._records:
+        for r in (self._records if records is None else records):
             if not r.labels or task not in r.labels:
                 return None
             parts.append(r.labels[task])
         return jnp.concatenate(parts, axis=0) if parts else None
 
-    def label_dict(self) -> Dict[str, jax.Array]:
+    def label_dict(self, *, records=None) -> Dict[str, jax.Array]:
         """All tasks that every record carries -> {task: (N,) labels}."""
+        recs = self._records if records is None else records
+        names: Dict[str, None] = {}
+        for r in recs:
+            if r.labels:
+                for t in r.labels:
+                    names[t] = None
         out = {}
-        for t in self.tasks:
-            v = self.labels(t)
+        for t in names:
+            v = self.labels(t, records=recs)
             if v is not None:
                 out[t] = v
         return out
@@ -221,80 +226,55 @@ class CodeStore:
                       ) -> List[jax.Array]:
         """ONE fused decode dispatch for records packed under one version.
 
-        The records' packed word streams are concatenated (each is padded
-        to whole super-groups, so record boundaries sit on word rows) and
-        handed to ops.decode_codes with a per-record-restarting slice
-        phase vector; the int32 index and gathered-atom tensors never
-        materialise. A stored upload may itself be a MULTI-record stream
-        (``PackedCodes.n_records`` > 1, one sub-stream per client — what
-        the fused encode kernel emits for a population round): its slice
-        phases restart per sub-stream and each sub-stream's trailing pad
-        rows are dropped. Returns per-record (C*B, T..., M) feature
-        blocks.
+        Delegates to ``repro.wire.codec.decode_payloads`` — the records'
+        word streams are concatenated into a single ``ops.decode_codes``
+        dispatch with per-record-restarting slice phases; the int32 index
+        and gathered-atom tensors never materialise. A stored upload may
+        itself be a MULTI-record stream (``CodePayload.n_records`` > 1,
+        one sub-stream per client — what the fused encode kernel emits
+        for a population round). Returns per-record (C*B, T..., M)
+        feature blocks.
         """
-        from repro.core.octopus import packed_record_rows
-        from repro.kernels.decode_codes import stream_phases
-        from repro.kernels.ops import decode_codes
-        from repro.kernels.pack_bits import packing_dims
+        from repro.wire.codec import decode_payloads
         if codebook is None:
             if server is None:
                 raise ValueError("CodeStore.dataset needs a ServerState or "
                                  "a registry to decode against")
             codebook = server.params["codebook"]
-        table, n_slices = OC.decode_table(self.cfg, codebook)
-        bits = recs[0].packed.bits
-        G, _ = packing_dims(bits)
-        payloads, phases, spans = [], [], []
-        row_off = 0
-        for r in recs:
-            p = r.packed.payload
-            nr = r.packed.n_records
-            payloads.append(p)
-            phases.append(jnp.tile(
-                stream_phases(p.shape[0] // nr, bits, n_slices), nr))
-            spans.append((row_off, int(p.shape[0])))
-            row_off += p.shape[0]
-        rows = decode_codes(jnp.concatenate(payloads, axis=0), table,
-                            bits=bits, count=row_off * G, n_slices=n_slices,
-                            phases=jnp.concatenate(phases))
-        out = []
-        F = int(table.shape[-1])
-        for (start, n_rows), r in zip(spans, recs):
-            f = packed_record_rows(n_rows, bits, r.packed.count,
-                                   r.packed.n_records,
-                                   rows[start * G:(start + n_rows) * G], F)
-            shp = r.packed.shape                       # (C, B, T[, n_c])
-            if self.cfg.n_groups > 1 or self.cfg.n_slices > 1:
-                f = f.reshape(tuple(shp[:-1])
-                              + (int(shp[-1]) * table.shape[-1],))
-            else:
-                f = f.reshape(tuple(shp) + (table.shape[-1],))
-            out.append(f.reshape((-1,) + f.shape[2:]))  # merge client axis
-        return out
+        blocks = decode_payloads([r.packed for r in recs], self.cfg,
+                                 codebook)
+        return [f.reshape((-1,) + f.shape[2:]) for f in blocks]
 
-    def dataset(self, server: Optional[OC.ServerState], *, registry=None
+    def dataset(self, server: Optional[OC.ServerState], *, registry=None,
+                version: Optional[int] = None
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         """Bulk decode: ONE fused decode dispatch per codebook version.
 
         With a ``registry`` (repro.server.CodebookRegistry) each version
         group decodes against its own snapshot; without one, everything
         decodes against the server's current table (the old IngestBuffer
-        behaviour). Returns (features (N, ...), {task: (N,) labels}) in
-        record order.
+        behaviour). ``version`` filters to payloads packed under that
+        codebook version. Returns (features (N, ...), {task: (N,)
+        labels}) in record order.
         """
-        if not self._records:
-            raise ValueError("empty code store")
+        recs = [(i, r) for i, r in enumerate(self._records)
+                if version is None or r.version == version]
+        if not recs:
+            raise ValueError("empty code store"
+                             + (f" for version {version}" if version
+                                is not None else ""))
         by_version: Dict[Tuple[int, int], List[int]] = {}
-        for i, r in enumerate(self._records):
+        for i, r in recs:
             by_version.setdefault((r.version, r.packed.bits), []).append(i)
-        feats_parts: List[Optional[jax.Array]] = [None] * len(self._records)
-        for (version, _), idxs in by_version.items():
-            cb = registry.get(version) if registry is not None else None
+        feats_parts: Dict[int, jax.Array] = {}
+        for (v, _), idxs in by_version.items():
+            cb = registry.get(v) if registry is not None else None
             blocks = self._decode_group([self._records[i] for i in idxs],
                                         server, cb)
             for i, f in zip(idxs, blocks):
                 feats_parts[i] = f
-        return jnp.concatenate(feats_parts, axis=0), self.label_dict()
+        feats = jnp.concatenate([feats_parts[i] for i, _ in recs], axis=0)
+        return feats, self.label_dict(records=[r for _, r in recs])
 
     def batches(self, server, batch_size: int, *, key, steps: int,
                 registry=None):

@@ -1,13 +1,18 @@
 """Batched multi-client OCTOPUS simulation (ROADMAP: client populations
 at scale, not one Python object per client).
 
-  engine  — stacked ClientState pytrees + one jitted vmap/shard_map round
+  engine  — stacked ClientState pytrees + one jitted vmap/shard_map round;
+            the round's uplink is a ``repro.wire.CodePayload`` (the
+            deprecated ``PackedCodes`` is an alias of it)
   ingest  — DEPRECATED server-side buffer; superseded by the async
             code-server runtime (repro.server.CodeStore)
 """
+from repro.wire.payload import CodePayload
+
 from .engine import (PackedCodes, SimEngine, client_batch_size,
                      replicate_clients, stack_clients, unstack_clients)
 from .ingest import IngestBuffer
 
-__all__ = ["PackedCodes", "SimEngine", "IngestBuffer", "client_batch_size",
-           "replicate_clients", "stack_clients", "unstack_clients"]
+__all__ = ["CodePayload", "PackedCodes", "SimEngine", "IngestBuffer",
+           "client_batch_size", "replicate_clients", "stack_clients",
+           "unstack_clients"]

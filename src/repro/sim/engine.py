@@ -30,55 +30,34 @@ Typical use::
 """
 from __future__ import annotations
 
-import math
-from typing import NamedTuple, Optional, Tuple
+import warnings
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
+from repro.wire.payload import CodePayload, normalize_labels
 
 
-class PackedCodes(NamedTuple):
-    """One round's packed uplink: code indices as a dense
-    ceil(log2 K)-bit word stream.
+class PackedCodes(CodePayload):
+    """DEPRECATED alias of :class:`repro.wire.CodePayload`.
 
-    ``n_records`` > 1 means the payload rows are that many concatenated
-    per-record (per-client) streams, each zero-padded to whole
-    super-groups — what each client's radio would actually send, and
-    exactly the layout the fused encode kernel
-    (kernels/encode_codes.py) emits for a population round. ``nbytes``
-    therefore counts every record's own pad bytes. ``n_records == 1`` is
-    the single contiguous stream ``ops.pack_codes`` produces.
+    The engine's packed uplink IS the unified wire carrier now — same
+    fields, same measured ``nbytes`` (per-record padding included), plus
+    the codebook ``version`` / ``labels`` / ``privatized`` provenance the
+    wire protocol adds. Constructing ``PackedCodes`` still works (it is a
+    CodePayload) but warns; new code should construct / accept
+    ``repro.wire.CodePayload``.
     """
-    payload: jax.Array           # (rows, W) uint32
-    bits: int                    # bits per code
-    shape: Tuple[int, ...]       # original indices shape (C, B, T[, n_c])
-    n_records: int = 1           # per-record streams concatenated in payload
 
-    @property
-    def nbytes(self) -> int:
-        """Measured size of the buffer that crosses the network."""
-        return int(self.payload.size) * self.payload.dtype.itemsize
-
-    @property
-    def count(self) -> int:
-        return int(math.prod(self.shape))
-
-    def unpack(self) -> jax.Array:
-        """Bit-exact inverse: -> int32 indices of the original shape."""
-        from repro.kernels.ops import unpack_codes
-        from repro.kernels.pack_bits import packing_dims
-        if self.n_records == 1:
-            flat = unpack_codes(self.payload, bits=self.bits,
-                                count=self.count)
-            return flat.reshape(self.shape)
-        G, _ = packing_dims(self.bits)
-        rows = int(self.payload.shape[0])
-        flat = unpack_codes(self.payload, bits=self.bits, count=rows * G)
-        per = flat.reshape(self.n_records, (rows // self.n_records) * G)
-        return per[:, :self.count // self.n_records].reshape(self.shape)
+    def __new__(cls, *args, **kw):
+        warnings.warn(
+            "sim.engine.PackedCodes is deprecated; use "
+            "repro.wire.CodePayload (same carrier, versioned wire format)",
+            DeprecationWarning, stacklevel=2)
+        return super().__new__(cls, *args, **kw)
 
 
 # ----------------------------------------------------------- client batches
@@ -185,22 +164,29 @@ class SimEngine:
                      ) -> OC.ClientState:
         return replicate_clients(server, n_clients)
 
-    def round(self, clients: OC.ClientState, data
-              ) -> Tuple[OC.ClientState, PackedCodes]:
+    def round(self, clients: OC.ClientState, data, *, version: int = 0,
+              labels=None) -> Tuple[OC.ClientState, CodePayload]:
         """Advance every client one full round (Steps 2-5).
 
         data: (C, B, ...) — one local batch per client, client axis
         matching the stacked state. Returns the new population state and
-        the round's packed uplink: one per-client record stream per
+        the round's wire payload: one per-client record stream per
         client (``n_records == C``), straight from the fused encode
         kernel — the population's int32 index tensor never exists.
+
+        ``version`` stamps the codebook version the codes were packed
+        under; ``labels`` (per-task dict or bare (C, B) array) ride the
+        payload into the server's CodeStore.
         """
         c = client_batch_size(clients)
         assert data.shape[0] == c, (data.shape, c)
         idx_shape = self._index_shape(clients, data)
         clients, payload = self._round(clients, data)
-        return clients, PackedCodes(payload=payload, bits=self.bits,
-                                    shape=idx_shape, n_records=c)
+        return clients, CodePayload(
+            payload=payload, bits=self.bits, shape=idx_shape, n_records=c,
+            version=int(version),
+            labels=normalize_labels(labels, c * int(data.shape[1])),
+            privatized=True)
 
     def round_indices(self, clients: OC.ClientState, data
                       ) -> Tuple[OC.ClientState, jax.Array]:
@@ -234,7 +220,7 @@ class SimEngine:
         return OC.server_merge_codebooks(server, clients.params["codebook"],
                                          clients.ema.counts)
 
-    def dequantize(self, server: OC.ServerState, packed: PackedCodes):
+    def dequantize(self, server: OC.ServerState, packed: CodePayload):
         """Step 6 entry: fused decode of a round's payload against the
         CURRENT global codebook — the packed word stream goes straight to
         feature rows (ops.decode_codes); the int32 index tensor is never

@@ -20,7 +20,7 @@ import jax
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
-from .engine import PackedCodes
+from repro.wire.payload import CodePayload
 
 
 class IngestBuffer:
@@ -42,7 +42,7 @@ class IngestBuffer:
     def __len__(self) -> int:
         return len(self._store)
 
-    def add(self, packed: PackedCodes, labels=None) -> None:
+    def add(self, packed: CodePayload, labels=None) -> None:
         """Ingest one round's uplink. ``labels``: (C, B) or (C*B,) task
         labels riding alongside the codes — shape-checked here."""
         self._store.add(packed, round=len(self._store), labels=labels)

@@ -1,0 +1,21 @@
+"""Unified OCTOPUS wire protocol (the client↔server interface).
+
+  payload  — CodePayload: THE versioned carrier crossing the network —
+             packed uint32 words, per-record streams, codebook version,
+             measured nbytes (the single §2.8 accounting), optional
+             label channels, and the §2.5 ``privatized`` invariant
+  codec    — fused CodePayload -> feature decode (one dispatch per
+             codebook-version group; record/phase bookkeeping lives here)
+  session  — OctopusClient.round(batch) / OctopusServer.ingest(payload)
+             + .features(): the session facades subsuming the PR-1..4
+             function zoo (client_transmit, client_round_fused,
+             unpack_transmission, hand-wired store/registry plumbing)
+"""
+from .codec import decode_payloads, decode_rows
+from .payload import (DEFAULT_TASK, WIRE_VERSION, CodePayload, as_payload,
+                      normalize_labels)
+from .session import OctopusClient, OctopusServer, fused_round, round_words
+
+__all__ = ["CodePayload", "OctopusClient", "OctopusServer", "WIRE_VERSION",
+           "DEFAULT_TASK", "as_payload", "decode_payloads", "decode_rows",
+           "fused_round", "normalize_labels", "round_words"]

@@ -1,0 +1,119 @@
+"""Fused decode of :class:`CodePayload` word streams — the ONE place the
+record/phase bookkeeping lives.
+
+Every server-side consumer used to carry its own copy of the packed →
+feature plumbing (``octopus.codes_to_features``'s packed branch,
+``CodeStore._decode_group``). Both now route here:
+
+  * :func:`decode_payloads` — N payloads (same bits, one codebook) in
+    exactly ONE ``ops.decode_codes`` dispatch: the word streams are
+    concatenated (every record is padded to whole super-groups, so
+    record boundaries sit on word rows) with per-record-restarting slice
+    phases, and each record's trailing pad rows are dropped afterwards.
+  * :func:`decode_rows` — one payload to its flat ``(count, F)`` real
+    feature rows (what ``ops.decode_codes`` returns when handed the
+    carrier directly).
+
+The int32 index tensor and the gathered-atom tensor never materialize on
+either path (see kernels/decode_codes.py).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .payload import CodePayload
+
+
+def packed_record_rows(payload_rows: int, bits: int, count: int,
+                       n_records: int, rows, table_dim: int):
+    """Per-record gather of fused-decoded rows.
+
+    ``rows``: (payload_rows * G, F) decode of the FULL word stream (pad
+    codes included). Each of the ``n_records`` record streams owns
+    ``payload_rows / n_records`` word rows; its first ``count/n_records``
+    decoded rows are real, the rest decode trailing zero-padding. Returns
+    the (count, F) real rows in stream order.
+    """
+    from repro.kernels.pack_bits import packing_dims
+    rpr = payload_rows // n_records
+    G, _ = packing_dims(bits)
+    per = rows.reshape(n_records, rpr * G, table_dim)
+    return per[:, :count // n_records].reshape(count, table_dim)
+
+
+def payload_phases(p: CodePayload, n_slices: int):
+    """Per-super-group slice phases for a (possibly multi-record) stream:
+    each record's slice phase restarts at 0."""
+    from repro.kernels.decode_codes import stream_phases
+    rows = int(p.payload.shape[0])
+    return jnp.tile(stream_phases(rows // p.n_records, p.bits, n_slices),
+                    p.n_records)
+
+
+def feature_shape(cfg, shape: Tuple[int, ...], feat_dim: int
+                  ) -> Tuple[int, ...]:
+    """Decoded feature shape of an index array ``shape``. GSVQ shapes end
+    with n_c; per-code rows are m-dim slice chunks whose row-major
+    concatenation IS the (..., M) layout."""
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
+        return tuple(shape[:-1]) + (int(shape[-1]) * int(feat_dim),)
+    return tuple(shape) + (int(feat_dim),)
+
+
+def decode_rows(p: CodePayload, table, *, n_slices: int = 1, **kw):
+    """One payload -> its (count, F) real decoded rows, ONE dispatch."""
+    from repro.kernels.ops import decode_codes
+    from repro.kernels.pack_bits import packing_dims
+    if p.n_records == 1:
+        return decode_codes(p.payload, table, bits=p.bits, count=p.count,
+                            n_slices=n_slices, **kw)
+    G, _ = packing_dims(p.bits)
+    n_rows = int(p.payload.shape[0])
+    rows = decode_codes(p.payload, table, bits=p.bits, count=n_rows * G,
+                        n_slices=n_slices,
+                        phases=payload_phases(p, n_slices), **kw)
+    return packed_record_rows(n_rows, p.bits, p.count, p.n_records, rows,
+                              int(table.shape[-1]))
+
+
+def decode_payloads(payloads: Sequence[CodePayload], cfg, codebook,
+                    **kw) -> List[jnp.ndarray]:
+    """Decode N same-bits payloads against ONE codebook in exactly ONE
+    fused dispatch. Returns per-payload feature blocks in the payloads'
+    own index shapes (``feature_shape``) — callers merge axes themselves.
+    """
+    from repro.core import octopus as OC
+    from repro.kernels.ops import decode_codes
+    from repro.kernels.pack_bits import packing_dims
+    if not payloads:
+        return []
+    bits = payloads[0].bits
+    if any(p.bits != bits for p in payloads):
+        raise ValueError(
+            f"one dispatch needs one packing width, got "
+            f"{sorted({p.bits for p in payloads})} bits")
+    table, n_slices = OC.decode_table(cfg, codebook)
+    F = int(table.shape[-1])
+    if len(payloads) == 1:
+        p = payloads[0]
+        return [decode_rows(p, table, n_slices=n_slices, **kw).reshape(
+            feature_shape(cfg, p.shape, F))]
+    G, _ = packing_dims(bits)
+    spans, phases, row_off = [], [], 0
+    for p in payloads:
+        n_rows = int(p.payload.shape[0])
+        phases.append(payload_phases(p, n_slices))
+        spans.append((row_off, n_rows))
+        row_off += n_rows
+    rows = decode_codes(
+        jnp.concatenate([p.payload for p in payloads], axis=0), table,
+        bits=bits, count=row_off * G, n_slices=n_slices,
+        phases=jnp.concatenate(phases), **kw)
+    out = []
+    for (start, n_rows), p in zip(spans, payloads):
+        f = packed_record_rows(n_rows, bits, p.count, p.n_records,
+                               rows[start * G:(start + n_rows) * G], F)
+        out.append(f.reshape(feature_shape(cfg, p.shape, F)))
+    return out

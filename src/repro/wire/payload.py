@@ -1,0 +1,211 @@
+"""The OCTOPUS wire format: ONE versioned carrier for the code stream.
+
+OCTOPUS's premise is that the latent code stream IS the network
+interface between clients and the server (§2.3-§2.6, §2.8). Everything
+that crosses that boundary travels as a :class:`CodePayload`:
+
+  * ``payload`` — the dense ceil(log2 K)-bit packed uint32 word stream
+    (kernels/pack_bits.py layout), the bytes that actually hit the
+    uplink. ``nbytes`` is MEASURED from it — the single §2.8 byte
+    accounting for the whole repo, per-record padding included.
+  * ``n_records`` — the payload rows may be several concatenated
+    per-record (per-client) streams, each zero-padded to whole
+    super-groups: exactly what each client's radio sends, and the layout
+    the fused encode kernel (kernels/encode_codes.py) emits for a
+    population round.
+  * ``version`` — the codebook version the codes were packed under, so
+    the server decodes against the registry snapshot, never the current
+    table (Step 5 merges move atoms while packets are in flight).
+  * ``labels`` — optional per-task label channels riding with the codes
+    (normalized to ``{task: flat array}`` at pack time).
+  * ``privatized`` — asserts only public Z• code indices are on the
+    wire. §2.5's disentangled private residual Z∘ is *structurally*
+    untransmittable: the carrier holds quantized integer codes only
+    (``pack`` rejects float inputs), and the server side refuses
+    payloads whose producer cleared the flag.
+  * ``wire`` — the wire-format version (:data:`WIRE_VERSION`), so
+    heterogeneous deployments can reject payloads from an incompatible
+    protocol revision instead of mis-decoding them.
+
+``repro.sim.engine.PackedCodes`` and the packed half of
+``repro.core.octopus.Transmission`` are deprecated views over this
+carrier; :func:`as_payload` coerces any legacy carrier to it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WIRE_VERSION = 1
+
+DEFAULT_TASK = "label"
+
+LabelsLike = Union[None, jax.Array, np.ndarray, Dict[str, Any]]
+
+
+def normalize_labels(labels: LabelsLike, n: Optional[int] = None
+                     ) -> Optional[Dict[str, jax.Array]]:
+    """dict/array/None -> ``{task: flat (n,) array}``.
+
+    A bare array lands under task name :data:`DEFAULT_TASK`. With ``n``
+    given, every channel is validated against the payload's sample count
+    HERE — at pack/add time, not at decode time three rounds later.
+    """
+    if labels is None:
+        return None
+    if not isinstance(labels, dict):
+        labels = {DEFAULT_TASK: labels}
+    out = {}
+    for task, arr in labels.items():
+        arr = jnp.asarray(arr)
+        if n is not None and arr.size != n:
+            raise ValueError(
+                f"labels[{task!r}] has {arr.size} entries but the packed "
+                f"payload carries {n} samples (shape mismatch caught at "
+                f"pack/add, not decode)")
+        out[task] = arr.reshape(-1)
+    return out
+
+
+class CodePayload(NamedTuple):
+    """One uplink on the wire: packed public code indices + provenance."""
+    payload: jax.Array           # (rows, W) uint32 packed word stream
+    bits: int                    # bits per transmitted code
+    shape: Tuple[int, ...]       # original index shape (C, B, T[, n_c])
+    n_records: int = 1           # per-record streams concatenated in payload
+    version: int = 0             # codebook version the codes were packed under
+    labels: Optional[Dict[str, jax.Array]] = None   # task -> flat labels
+    privatized: bool = True      # only public Z• indices on the wire (§2.5)
+    wire: int = WIRE_VERSION     # wire-format revision
+
+    # ------------------------------------------------------------ metadata
+
+    @property
+    def nbytes(self) -> int:
+        """MEASURED size of the buffer that crosses the network (§2.8) —
+        the repo's single byte accounting, per-record padding included."""
+        return int(self.payload.size) * self.payload.dtype.itemsize
+
+    @property
+    def count(self) -> int:
+        """Number of real (non-padding) codes across all records."""
+        return int(math.prod(self.shape))
+
+    # ------------------------------------------------------------- codecs
+
+    @classmethod
+    def pack(cls, indices, *, bits: int, version: int = 0,
+             labels: LabelsLike = None, n_samples: Optional[int] = None,
+             privatized: bool = True) -> "CodePayload":
+        """Pack an int32 code matrix into ONE contiguous word stream.
+
+        Rejects non-integer inputs: the carrier holds quantized code
+        indices only, which is what makes the private residual Z∘
+        structurally untransmittable rather than merely unused.
+        """
+        from repro.kernels.ops import pack_codes
+        idx = jnp.asarray(indices)
+        if not jnp.issubdtype(idx.dtype, jnp.integer):
+            raise TypeError(
+                f"CodePayload carries quantized code indices, got dtype "
+                f"{idx.dtype}; float latents (e.g. the private residual "
+                f"Z∘) are structurally untransmittable (§2.5)")
+        words = pack_codes(idx, bits=bits)
+        return cls(payload=words, bits=int(bits), shape=tuple(idx.shape),
+                   n_records=1, version=int(version),
+                   labels=normalize_labels(labels, n_samples),
+                   privatized=bool(privatized))
+
+    @classmethod
+    def pack_records(cls, indices, *, bits: int, version: int = 0,
+                     labels: LabelsLike = None,
+                     n_samples: Optional[int] = None,
+                     privatized: bool = True) -> "CodePayload":
+        """Pack ``indices`` (R, ...) as R per-record streams, each padded
+        to whole super-groups — what R client radios would send, and the
+        layout the fused encode kernel emits for a population round.
+
+        ONE dispatch: each record's flat codes are zero-padded to whole
+        super-groups, and row-major flattening of the (R, padded) matrix
+        IS the concatenation of the per-record streams (the same idiom
+        as ``ref.encode_codes_ref``'s per-record pack).
+        """
+        from repro.kernels.ops import pack_codes
+        from repro.kernels.pack_bits import packing_dims
+        idx = jnp.asarray(indices)
+        if not jnp.issubdtype(idx.dtype, jnp.integer):
+            raise TypeError(
+                f"CodePayload carries quantized code indices, got dtype "
+                f"{idx.dtype}")
+        G, _ = packing_dims(bits)
+        flat = idx.reshape(idx.shape[0], -1)
+        pad = (-flat.shape[1]) % G
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        words = pack_codes(flat, bits=bits)
+        return cls(payload=words, bits=int(bits), shape=tuple(idx.shape),
+                   n_records=int(idx.shape[0]), version=int(version),
+                   labels=normalize_labels(labels, n_samples),
+                   privatized=bool(privatized))
+
+    @classmethod
+    def from_words(cls, words, *, bits: int, shape, n_records: int = 1,
+                   version: int = 0, labels: LabelsLike = None,
+                   n_samples: Optional[int] = None,
+                   privatized: bool = True) -> "CodePayload":
+        """Wrap an already-packed word stream (e.g. straight from
+        ``ops.encode_codes``) without touching the bytes."""
+        return cls(payload=words, bits=int(bits), shape=tuple(shape),
+                   n_records=int(n_records), version=int(version),
+                   labels=normalize_labels(labels, n_samples),
+                   privatized=bool(privatized))
+
+    def unpack(self) -> jax.Array:
+        """Bit-exact inverse: -> int32 indices of the original shape."""
+        from repro.kernels.ops import unpack_codes
+        from repro.kernels.pack_bits import packing_dims
+        if self.n_records == 1:
+            flat = unpack_codes(self.payload, bits=self.bits,
+                                count=self.count)
+            return flat.reshape(self.shape)
+        G, _ = packing_dims(self.bits)
+        rows = int(self.payload.shape[0])
+        flat = unpack_codes(self.payload, bits=self.bits, count=rows * G)
+        per = flat.reshape(self.n_records, (rows // self.n_records) * G)
+        return per[:, :self.count // self.n_records].reshape(self.shape)
+
+    def with_meta(self, *, version: Optional[int] = None,
+                  labels: LabelsLike = None,
+                  n_samples: Optional[int] = None) -> "CodePayload":
+        """Same bytes, updated provenance (version / label channels)."""
+        return self._replace(
+            version=self.version if version is None else int(version),
+            labels=self.labels if labels is None
+            else normalize_labels(labels, n_samples))
+
+
+def as_payload(tx) -> Optional[CodePayload]:
+    """Coerce any packed carrier to a :class:`CodePayload`.
+
+    Accepts a CodePayload (incl. the deprecated ``sim.engine.PackedCodes``
+    subclass) as-is and a packed ``core.octopus.Transmission`` by view.
+    Returns None for plain index arrays and unpacked Transmissions —
+    those take the index decode path.
+    """
+    if isinstance(tx, CodePayload):
+        return tx
+    payload = getattr(tx, "payload", None)
+    if payload is None:
+        return None
+    if hasattr(tx, "indices"):                 # packed Transmission
+        return CodePayload(payload=payload, bits=int(tx.bits),
+                           shape=tuple(tx.indices.shape),
+                           labels=normalize_labels(getattr(tx, "labels",
+                                                           None)))
+    return CodePayload(payload=payload, bits=int(tx.bits),
+                       shape=tuple(tx.shape),
+                       n_records=int(getattr(tx, "n_records", 1)))

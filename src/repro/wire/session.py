@@ -1,0 +1,312 @@
+"""Session facades over the wire protocol: one client entry, one server
+entry.
+
+After PRs 1-4 the client↔server interface was a function zoo
+(``client_transmit`` / ``client_round`` / ``client_round_fused`` /
+``client_finetune_encode`` on one side; ``gather_codes`` /
+``unpack_transmission`` / hand-wired CodeStore+Registry on the other).
+These two classes subsume it:
+
+  * :class:`OctopusClient` — ``round(batch)`` is THE uplink: Steps 2-5
+    through the fused Pallas encode path (ONE encoder pass feeding ONE
+    ``ops.encode_codes`` dispatch that quantizes, bit-packs and
+    accumulates the EMA statistics on-chip), returning a
+    :class:`CodePayload`. Policy flags pick the protocol profile —
+    ``finetune=0`` skips Step 2, ``refresh=False`` skips Step 5;
+    ``transmit(batch)`` is the encode-only profile (the old
+    ``client_transmit``).
+  * :class:`OctopusServer` — ``ingest(payload)`` / ``features()`` is THE
+    downlink: payloads land in a versioned CodeStore keyed on the
+    payload's OWN codebook version and decode against the registry
+    snapshot they were packed under. The server refuses payloads that
+    are not marked ``privatized`` or speak a different wire revision.
+
+The pure, jittable round core is :func:`round_words` — bit-identical to
+the PR-4 ``client_round_fused`` tail (same calls, same dispatch count);
+``SimEngine`` remains the batched population driver for the same wire.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+
+from .payload import WIRE_VERSION, CodePayload, as_payload
+
+
+# --------------------------------------------------------- pure round core
+
+def _round_core(client: OC.ClientState, cfg: DVQAEConfig, batch, *,
+                lr: float = 1e-4, gamma: float = 0.99,
+                n_local_steps: int = 1, refresh: bool = True):
+    """Steps 2-5 with the fused uplink tail -> (client, z, words).
+
+    Exactly the ``client_round_fused`` computation: ``n_local_steps`` of
+    frozen-codebook fine-tuning, ONE encoder pass, ONE
+    ``ops.encode_codes`` dispatch (quantize + pack + EMA stats on-chip),
+    optional Step 5 refresh from the precomputed statistics. Neither the
+    (N, K) distance matrix nor the int32 index tensor ever materializes.
+    """
+    from repro.kernels.ops import encode_codes
+    client, z = OC.client_finetune_encode(client, cfg, batch, lr=lr,
+                                          n_local_steps=n_local_steps)
+    zf = z.reshape(1, -1, z.shape[-1])
+    words, counts, sums = encode_codes(
+        zf, client.params["codebook"][None], bits=OC.transmit_bits(cfg),
+        n_groups=cfg.n_groups, n_slices=cfg.n_slices)
+    if refresh:
+        client = OC.client_codebook_refresh(client, cfg, None, gamma=gamma,
+                                            stats=(counts[0], sums[0]))
+    return client, z, words
+
+
+def round_words(client: OC.ClientState, cfg: DVQAEConfig, batch, *,
+                lr: float = 1e-4, gamma: float = 0.99,
+                n_local_steps: int = 1, refresh: bool = True
+                ) -> Tuple[OC.ClientState, jax.Array]:
+    """Pure jittable round: (client, batch) -> (client, uint32 words).
+
+    The words are exactly ``pack_codes(indices, transmit_bits(cfg))`` for
+    the round's indices — wrap in ``jax.jit`` (or drive populations via
+    ``SimEngine``) and build the :class:`CodePayload` outside the trace.
+    """
+    client, _, words = _round_core(client, cfg, batch, lr=lr, gamma=gamma,
+                                   n_local_steps=n_local_steps,
+                                   refresh=refresh)
+    return client, words
+
+
+def index_shape(cfg: DVQAEConfig, z_shape) -> Tuple[int, ...]:
+    """Transmitted index shape for latents of shape (..., M): GSVQ sends
+    one group index per slice per position."""
+    base = tuple(int(d) for d in z_shape[:-1])
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
+        return base + (cfg.n_slices,)
+    return base
+
+
+def fused_round(client: OC.ClientState, cfg: DVQAEConfig, batch, *,
+                lr: float = 1e-4, gamma: float = 0.99,
+                n_local_steps: int = 1, refresh: bool = True,
+                version: int = 0, labels=None
+                ) -> Tuple[OC.ClientState, CodePayload]:
+    """One client round -> (client, CodePayload). The payload carries the
+    wire's (C, B, ...) leading layout with C == 1 — one record stream,
+    ready for ``OctopusServer.ingest`` / ``CodeStore.add``."""
+    client, z, words = _round_core(client, cfg, batch, lr=lr, gamma=gamma,
+                                   n_local_steps=n_local_steps,
+                                   refresh=refresh)
+    shape = (1,) + index_shape(cfg, z.shape)
+    return client, CodePayload.from_words(
+        words, bits=OC.transmit_bits(cfg), shape=shape, n_records=1,
+        version=version, labels=labels, n_samples=int(z.shape[0]),
+        privatized=True)
+
+
+# ----------------------------------------------------------------- client
+
+class OctopusClient:
+    """One client device's session: local DVQ-AE state + uplink policy.
+
+    ``server`` is an :class:`OctopusServer` (deploys from its current
+    state and codebook version) or a bare ``octopus.ServerState``.
+    """
+
+    def __init__(self, server, cfg: Optional[DVQAEConfig] = None, *,
+                 lr: float = 1e-4, gamma: float = 0.99,
+                 n_local_steps: int = 1, client_id: int = 0):
+        if isinstance(server, OctopusServer):
+            cfg = cfg or server.cfg
+            state, version = server.state, server.version
+        else:
+            if cfg is None:
+                raise ValueError("OctopusClient(ServerState, ...) needs an "
+                                 "explicit cfg")
+            state, version = server, 0
+        self.cfg = cfg
+        self.lr = lr
+        self.gamma = gamma
+        self.n_local_steps = n_local_steps
+        self.client_id = int(client_id)
+        self.state = OC.client_init(state)
+        self.version = int(version)
+
+    # -------------------------------------------------------------- steps
+
+    @property
+    def codebook(self) -> jax.Array:
+        return self.state.params["codebook"]
+
+    def finetune(self, batch, *, steps: int = 1, lr: Optional[float] = None
+                 ) -> None:
+        """Explicit Step 2: frozen-codebook local fine-tuning."""
+        opt = None
+        for _ in range(steps):
+            self.state, opt, _ = OC.client_finetune_step(
+                self.state, self.cfg, batch,
+                lr=self.lr if lr is None else lr, opt=opt)
+
+    def round(self, batch, *, labels=None, finetune: Optional[int] = None,
+              refresh: bool = True) -> CodePayload:
+        """THE uplink entry: Steps 2-5 through the fused encode path.
+
+        ``finetune`` overrides the session's ``n_local_steps`` for this
+        round (0 skips Step 2); ``refresh=False`` skips the Step 5 EMA
+        refresh. Returns the round's :class:`CodePayload`, stamped with
+        the codebook version this client deployed from.
+        """
+        n_local = self.n_local_steps if finetune is None else int(finetune)
+        self.state, payload = fused_round(
+            self.state, self.cfg, batch, lr=self.lr, gamma=self.gamma,
+            n_local_steps=n_local, refresh=refresh, version=self.version,
+            labels=labels)
+        return payload
+
+    def transmit(self, batch, *, labels=None) -> CodePayload:
+        """Encode-only uplink (Steps 3-4): no fine-tuning, no refresh —
+        the old ``client_transmit``, minus the materialized index tensor."""
+        return self.round(batch, labels=labels, finetune=0, refresh=False)
+
+    def sync(self, server: "OctopusServer") -> None:
+        """Adopt the server's latest merged dictionary (Step 5 tail on
+        the client side) and its codebook version; the local EMA restarts
+        from the adopted atoms, fine-tuned encoder/decoder stay."""
+        from repro.core.ema import init_ema
+        cb = server.registry.current
+        self.state = OC.ClientState(
+            params={**self.state.params, "codebook": cb},
+            ema=init_ema(cb), step=self.state.step)
+        self.version = server.version
+
+
+# ----------------------------------------------------------------- server
+
+class OctopusServer:
+    """Server session: versioned registry + code store behind ONE door.
+
+    ``ingest`` keys every payload on its own ``version`` field (the
+    per-delivery-group bookkeeping structs of the async runtime collapse
+    into the carrier); ``features`` bulk-decodes version-correctly.
+    """
+
+    def __init__(self, server, cfg: Optional[DVQAEConfig] = None, *,
+                 store=None, registry=None, require_privatized: bool = True):
+        from repro.server.registry import CodebookRegistry
+        from repro.server.store import CodeStore
+        if not isinstance(server, OC.ServerState):
+            raise TypeError("OctopusServer wraps an octopus.ServerState; "
+                            "build one with octopus.server_init(key, cfg)")
+        if cfg is None:
+            raise ValueError("OctopusServer needs the DVQAEConfig")
+        self.cfg = cfg
+        self.state = server
+        self.registry = registry if registry is not None else \
+            CodebookRegistry(server.params["codebook"])
+        self.store = store if store is not None else CodeStore(cfg)
+        self.require_privatized = require_privatized
+
+    @classmethod
+    def init(cls, key, cfg: DVQAEConfig, *, lr: float = 1e-3, **kw
+             ) -> "OctopusServer":
+        return cls(OC.server_init(key, cfg, lr=lr), cfg, **kw)
+
+    # ------------------------------------------------------------ protocol
+
+    @property
+    def version(self) -> int:
+        """Current (latest merged) codebook version."""
+        return self.registry.latest
+
+    def pretrain(self, key, x, *, steps: int, batch: int = 32,
+                 lr: float = 1e-3):
+        """Step 1: ATD pretraining of the global DVQ-AE. Re-pins the
+        pretrained dictionary as the current registry snapshot — only
+        legal before any payload landed, or already-stored codes would
+        silently decode against a dictionary they were not packed under.
+        """
+        if len(self.store):
+            raise RuntimeError(
+                f"pretrain would move codebook version "
+                f"{self.registry.latest} under {len(self.store)} stored "
+                f"payload(s); pretrain before ingesting (Step 1 precedes "
+                f"Step 4)")
+        self.state, out = OC.server_pretrain(key, self.state, self.cfg, x,
+                                             steps=steps, batch=batch, lr=lr)
+        self.registry.pin_current(self.state.params["codebook"])
+        return out
+
+    def deploy(self, **client_kw) -> OctopusClient:
+        """Step 2: hand a client a session on the current global model."""
+        return OctopusClient(self, **client_kw)
+
+    def _coerce(self, payload) -> CodePayload:
+        """Any carrier -> a CodePayload in the wire's (C, B, ...) leading
+        layout. Legacy packed Transmissions ((B, T[, n_c]) indices with
+        per-sample labels) are lifted to a single-client record."""
+        p = as_payload(payload)
+        if p is None:
+            raise TypeError(f"the wire endpoint wants a CodePayload (or a "
+                            f"packed legacy carrier), got "
+                            f"{type(payload).__name__}")
+        if hasattr(payload, "indices"):
+            p = p._replace(shape=(1,) + p.shape)
+        return p
+
+    def ingest(self, payload, *, client_ids=None, round: int = 0):
+        """THE downlink entry: one payload into the versioned store.
+
+        Coerces legacy carriers (packed ``Transmission``), then enforces
+        the wire invariants: known wire revision, known codebook version,
+        and — unless ``require_privatized=False`` — the §2.5 flag that
+        only public Z• codes are aboard.
+        """
+        p = self._coerce(payload)
+        if p.wire != WIRE_VERSION:
+            raise ValueError(f"payload speaks wire revision {p.wire}, this "
+                             f"server speaks {WIRE_VERSION}")
+        if self.require_privatized and not p.privatized:
+            raise ValueError(
+                "refusing a payload not marked privatized: only public Z• "
+                "code indices may cross the wire (§2.5)")
+        if p.version not in self.registry:
+            raise ValueError(f"payload packed under unknown codebook "
+                             f"version {p.version}; registry holds "
+                             f"0..{self.registry.latest}")
+        return self.store.add(p, client_ids=client_ids, round=round)
+
+    def features(self, *, version: Optional[int] = None):
+        """Bulk decode of everything ingested, each version group against
+        its own registry snapshot, ONE fused dispatch per version.
+        ``version`` filters to payloads packed under that version.
+        Returns (features (N, ...), {task: (N,) labels})."""
+        return self.store.dataset(self.state, registry=self.registry,
+                                  version=version)
+
+    def decode(self, payload) -> jax.Array:
+        """Directly decode ONE payload (store bypass) against the
+        snapshot it was packed under; merges the client axis. Legacy
+        Transmissions are lifted to (C=1, ...) like ``ingest`` does."""
+        p = self._coerce(payload)
+        feats = OC.codes_to_features(None, self.cfg, p,
+                                     codebook=self.registry.get(p.version))
+        return feats.reshape((-1,) + feats.shape[2:])
+
+    # --------------------------------------------------------- Step 5 tail
+
+    def merge(self, client_codebooks, client_counts, *, client_versions=None,
+              staleness_decay: float = 1.0) -> int:
+        """Staleness-weighted Step 5 merge; registers and returns the new
+        codebook version."""
+        self.state, version = self.registry.merge(
+            self.state, client_codebooks, client_counts,
+            client_versions=client_versions,
+            staleness_decay=staleness_decay)
+        return version
+
+    def merge_clients(self, clients: OC.ClientState, **kw) -> int:
+        """Merge a stacked population (e.g. ``SimEngine`` client state)."""
+        return self.merge(clients.params["codebook"], clients.ema.counts,
+                          **kw)

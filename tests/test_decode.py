@@ -4,9 +4,9 @@ The contracts that let the fused path replace unpack-then-dequantize:
   * kernel parity — ops.decode_codes == table[unpack_codes(...)] bit-exact
     for every packing width the codec supports, incl. sliced streams with
     per-group phase vectors;
-  * protocol parity — codes_to_features on a packed carrier (PackedCodes /
-    Transmission) == codes_to_features on the int32 indices, for VQ and
-    GSVQ (grouped + sliced) configs;
+  * protocol parity — codes_to_features on a packed carrier (CodePayload /
+    packed Transmission) == codes_to_features on the int32 indices, for
+    VQ and GSVQ (grouped + sliced) configs;
   * store contract — CodeStore.dataset decodes each codebook-version
     group in exactly ONE fused dispatch, matching the per-record
     unpack-then-dequantize reference across versions.
@@ -22,13 +22,11 @@ from repro.core.gsvq import gsvq_bits_per_position
 from repro.kernels import ops, ref
 from repro.kernels.pack_bits import code_bits, packing_dims
 from repro.server import CodebookRegistry, CodeStore
-from repro.sim.engine import PackedCodes
+from repro.wire import CodePayload
 
 
 def _pack(idx, bits):
-    idx = jnp.asarray(idx, jnp.int32)
-    return PackedCodes(payload=ops.pack_codes(idx, bits=bits), bits=bits,
-                       shape=tuple(idx.shape))
+    return CodePayload.pack(jnp.asarray(idx, jnp.int32), bits=bits)
 
 
 # ------------------------------------------------------------------ kernel
@@ -128,7 +126,8 @@ def test_codes_to_features_accepts_transmission(key):
     srv = OC.server_init(key, cfg)
     cl = OC.client_init(srv)
     x = jax.random.normal(key, (4, 8, 8, 3))
-    tx = OC.client_transmit(cl, cfg, x)
+    with pytest.warns(DeprecationWarning):
+        tx = OC.client_transmit(cl, cfg, x)
     fused = OC.codes_to_features(srv, cfg, tx)
     want = OC.codes_to_features(srv, cfg, tx.indices)
     np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))

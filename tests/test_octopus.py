@@ -39,8 +39,9 @@ def test_client_roundtrip_codes_only(image_cfg):
     srv = octopus.server_init(key, image_cfg)
     cl = octopus.client_init(srv)
     x = jax.random.normal(key, (4, 16, 16, 3))
-    tx = octopus.client_transmit(cl, image_cfg, x,
-                                 labels=jnp.arange(4))
+    with pytest.warns(DeprecationWarning):      # legacy carrier entry
+        tx = octopus.client_transmit(cl, image_cfg, x,
+                                     labels=jnp.arange(4))
     assert tx.indices.dtype == jnp.int32
     raw_bytes = x.size * 4
     assert tx.nbytes < raw_bytes / 50
@@ -101,7 +102,8 @@ def test_speech_pipeline(key):
     srv, out = octopus.server_pretrain_step(srv, cfg, x)
     assert out.recon.shape == x.shape
     cl = octopus.client_init(srv)
-    tx = octopus.client_transmit(cl, cfg, x)
+    with pytest.warns(DeprecationWarning):
+        tx = octopus.client_transmit(cl, cfg, x)
     assert tx.indices.shape == (4, 8)      # 32 frames -> 8 latent steps
 
 

@@ -13,6 +13,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import ema, gsvq, vq
 from repro.core.overheads import CommModel, federated_bytes, octopus_bytes
+from repro.wire import CodePayload
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -101,6 +102,57 @@ def test_overheads_positive_and_fl_grows_with_epochs(nc, nm, nd, ne, nz):
                    n_epochs=ne + 1, code_bytes_per_sample=nz)
     assert federated_bytes(c2) > fl          # FL pays per round
     assert octopus_bytes(c2) == oc           # OCTOPUS is round-free
+
+
+# ----------------------------------------------------- wire protocol
+
+# shapes/bits drawn from small fixed sets so jit caches stay warm across
+# hypothesis examples (fresh shapes would recompile every draw)
+@given(bits=st.sampled_from([1, 2, 3, 5, 7, 8, 10, 12]),
+       n=st.sampled_from([1, 37, 64]), records=st.sampled_from([1, 2, 3]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_codepayload_roundtrip_bits_and_records(bits, n, records, seed):
+    """CodePayload encode -> wire -> decode is bit-exact for every
+    packing width 1-12 and multi-record (per-client) streams; nbytes is
+    measured from the wire buffer, per-record padding included."""
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 1 << bits, size=(records, n)),
+                      jnp.int32)
+    p = (CodePayload.pack_records(idx, bits=bits) if records > 1
+         else CodePayload.pack(idx[0], bits=bits))
+    got = p.unpack()
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(idx if records > 1
+                                             else idx[0]))
+    assert p.nbytes == int(p.payload.size) * p.payload.dtype.itemsize
+    assert p.nbytes * 8 >= p.count * bits        # dense: >= b bits/code
+    assert p.privatized and p.wire == 1
+
+
+@given(case=st.sampled_from([(1, 1, 16), (4, 2, 64), (8, 1, 64),
+                             (1, 2, 64)]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_codepayload_decode_matches_index_path(case, seed):
+    """Wire-carried codes decode to the same features as their unpacked
+    indices, for VQ and grouped/sliced GSVQ configs."""
+    from repro.core import octopus as OC
+    from repro.core.dvqae import DVQAEConfig
+    n_groups, n_slices, K = case
+    cfg = DVQAEConfig(kind="image", latent_dim=16, codebook_size=K,
+                      n_groups=n_groups, n_slices=n_slices)
+    gsvq_on = n_groups > 1 or n_slices > 1
+    rng = np.random.default_rng(seed)
+    cb = jnp.asarray(rng.normal(size=(K, 16)), jnp.float32)
+    shape = (2, 5, n_slices) if gsvq_on else (2, 5)
+    idx = jnp.asarray(rng.integers(0, n_groups if gsvq_on else K,
+                                   size=shape), jnp.int32)
+    p = CodePayload.pack(idx, bits=OC.transmit_bits(cfg))
+    got = OC.codes_to_features(None, cfg, p, codebook=cb)
+    want = OC.codes_to_features(None, cfg, idx, codebook=cb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
 
 
 @given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 4),

@@ -20,13 +20,12 @@ import pytest
 from repro.core import downstream as DS
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
-from repro.kernels import ops
 from repro.kernels.pack_bits import code_bits
 from repro.server import (STANDARD_SCENARIOS, AsyncCodeServer, CodeStore,
                           CodebookRegistry, MultiTaskTrainer, RoundScheduler,
                           SchedulerConfig, TaskSpec)
 from repro.sim import SimEngine
-from repro.sim.engine import PackedCodes
+from repro.wire import CodePayload
 
 
 @pytest.fixture(scope="module")
@@ -40,12 +39,10 @@ def server(tiny_cfg):
     return OC.server_init(jax.random.PRNGKey(0), tiny_cfg)
 
 
-def _pack(codes):
-    """int32 (C, B, T) codes -> PackedCodes like the engine emits."""
-    bits = code_bits(16)
-    payload = ops.pack_codes(jnp.asarray(codes, jnp.int32), bits=bits)
-    return PackedCodes(payload=payload, bits=bits,
-                       shape=tuple(np.shape(codes)))
+def _pack(codes, version=0):
+    """int32 (C, B, T) codes -> CodePayload like the engine emits."""
+    return CodePayload.pack(jnp.asarray(codes, jnp.int32),
+                            bits=code_bits(16), version=version)
 
 
 def _codes(seed, c=2, b=3, t=4):

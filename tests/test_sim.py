@@ -65,16 +65,19 @@ def test_packed_size_is_dense(n_atoms):
 
 
 def test_transmission_measures_packed_bytes(tiny_cfg, server, key):
-    """client_transmit carries the packed payload; nbytes is measured
-    from it and the payload unpacks bit-exactly to the indices."""
+    """client_transmit (deprecated shim) carries the packed payload;
+    nbytes is measured from it (CodePayload.nbytes is the single source)
+    and the payload unpacks bit-exactly to the indices."""
     client = OC.client_init(server)
     x = jax.random.normal(key, (4, 8, 8, 3))
-    tx = OC.client_transmit(client, tiny_cfg, x, labels=jnp.arange(4))
+    with pytest.warns(DeprecationWarning):
+        tx = OC.client_transmit(client, tiny_cfg, x, labels=jnp.arange(4))
     assert tx.payload is not None
     assert tx.bits == code_bits(tiny_cfg.codebook_size)
     assert tx.nbytes == tx.payload.size * tx.payload.dtype.itemsize
-    np.testing.assert_array_equal(np.asarray(OC.unpack_transmission(tx)),
-                                  np.asarray(tx.indices))
+    with pytest.warns(DeprecationWarning):
+        back = OC.unpack_transmission(tx)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(tx.indices))
 
 
 # ------------------------------------------------------------------ engine

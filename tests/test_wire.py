@@ -1,0 +1,394 @@
+"""Unified wire protocol (repro.wire): CodePayload + session facades.
+
+The contracts that let ONE carrier and ONE session API replace the
+PR-1..4 function zoo:
+  * facade parity — ``OctopusClient.round`` is bit-identical to the PR-4
+    ``client_round_fused`` words and adds ZERO extra dispatches (counted:
+    one encoder pass, one ``ops.encode_codes`` dispatch — mirroring the
+    PR-4 exactly-one-encoder-pass regression);
+  * single byte accounting — ``CodePayload.nbytes`` is the only place
+    payload bytes are computed: an engine round's bytes == the sum of
+    the per-client payloads' bytes, and ``Transmission.nbytes`` comes
+    from the same source;
+  * deprecation shims — ``client_transmit`` / ``client_round_fused`` /
+    ``unpack_transmission`` / ``sim.engine.PackedCodes`` warn AND keep
+    behavioral parity with the new API;
+  * wire invariants — the server side refuses unknown wire revisions,
+    unknown codebook versions, and payloads not marked ``privatized``
+    (§2.5: the private residual is structurally untransmittable — pack
+    rejects floats outright);
+  * privacy — a ``privatized=True`` payload decoded through the facade
+    leaks no private-residual signal (the §2.7 audit shows the private
+    component is strictly more identifying).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dvqae, octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.kernels import ops
+from repro.kernels.pack_bits import code_bits
+from repro.sim import SimEngine
+from repro.wire import (WIRE_VERSION, CodePayload, OctopusClient,
+                        OctopusServer, as_payload)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=16, n_res_blocks=1)
+
+
+@pytest.fixture(scope="module")
+def server(tiny_cfg):
+    return OC.server_init(jax.random.PRNGKey(0), tiny_cfg)
+
+
+def _count_dispatches(fn):
+    """(encoder passes, ops.encode_codes dispatches) of running ``fn`` —
+    the PR-4 counting harness extended to the fused kernel entry."""
+    enc, kern = [], []
+    real_enc, real_kern = dvqae.encode, ops.encode_codes
+    dvqae.encode = lambda *a: (enc.append(1), real_enc(*a))[1]
+    ops.encode_codes = lambda *a, **k: (kern.append(1),
+                                        real_kern(*a, **k))[1]
+    try:
+        fn()
+    finally:
+        dvqae.encode, ops.encode_codes = real_enc, real_kern
+    return len(enc), len(kern)
+
+
+# ------------------------------------------------------------- CodePayload
+
+def test_payload_pack_unpack_multi_record():
+    """pack_records concatenates per-record zero-padded streams — the
+    engine/kernel layout — and unpacks bit-exactly."""
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 32, size=(3, 45)), jnp.int32)
+    p = CodePayload.pack_records(idx, bits=5)
+    assert p.n_records == 3 and p.shape == (3, 45)
+    np.testing.assert_array_equal(np.asarray(p.unpack()), np.asarray(idx))
+    # per-record layout == each record packed alone, stacked
+    singles = [ops.pack_codes(idx[r], bits=5) for r in range(3)]
+    np.testing.assert_array_equal(np.asarray(p.payload),
+                                  np.concatenate(singles, axis=0))
+    assert p.nbytes == sum(int(w.size) * w.dtype.itemsize for w in singles)
+
+
+def test_payload_rejects_float_latents():
+    """§2.5 structural privatization: the carrier holds quantized integer
+    codes only — a private float residual cannot even be packed."""
+    with pytest.raises(TypeError, match="untransmittable"):
+        CodePayload.pack(jnp.ones((4, 4), jnp.float32), bits=4)
+    with pytest.raises(TypeError):
+        CodePayload.pack_records(jnp.ones((2, 4)), bits=4)
+
+
+def test_payload_label_validation():
+    idx = jnp.zeros((2, 3, 4), jnp.int32)
+    p = CodePayload.pack(idx, bits=4, labels=jnp.zeros((2, 3)), n_samples=6)
+    assert set(p.labels) == {"label"} and p.labels["label"].shape == (6,)
+    with pytest.raises(ValueError, match="labels"):
+        CodePayload.pack(idx, bits=4, labels=jnp.zeros((5,)), n_samples=6)
+
+
+def test_engine_round_bytes_equal_sum_of_client_payload_bytes(tiny_cfg,
+                                                              server, key):
+    """Satellite: the sim-engine round's measured bytes == the sum of the
+    per-client payloads' bytes (CodePayload.nbytes is the ONE source)."""
+    n_clients = 3
+    data = jax.random.normal(key, (n_clients, 2, 8, 8, 3))
+    engine = SimEngine(tiny_cfg, gamma=0.9)
+    clients, packed = engine.round(engine.init_clients(server, n_clients),
+                                   data, version=0)
+    assert isinstance(packed, CodePayload) and packed.n_records == n_clients
+    idx = packed.unpack()
+    per_client = [CodePayload.pack(idx[i], bits=packed.bits)
+                  for i in range(n_clients)]
+    assert packed.nbytes == sum(p.nbytes for p in per_client)
+    # and the multi-record layout IS the per-client streams, stacked
+    np.testing.assert_array_equal(
+        np.asarray(packed.payload),
+        np.concatenate([np.asarray(p.payload) for p in per_client]))
+
+
+def test_transmission_nbytes_single_source(tiny_cfg, server, key):
+    """Transmission.nbytes now comes from CodePayload.nbytes."""
+    cl = OC.client_init(server)
+    x = jax.random.normal(key, (4, 8, 8, 3))
+    with pytest.warns(DeprecationWarning):
+        tx = OC.client_transmit(cl, tiny_cfg, x)
+    p = as_payload(tx)
+    assert isinstance(p, CodePayload)
+    assert tx.nbytes == p.nbytes \
+        == int(tx.payload.size) * tx.payload.dtype.itemsize
+
+
+# ---------------------------------------------------------- facade parity
+
+def test_facade_round_bit_identical_to_fused(tiny_cfg, server, key):
+    """Acceptance: OctopusClient.round == client_round_fused (words AND
+    client state), and unpacks to client_round's indices."""
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    srv = OctopusServer(server, tiny_cfg)
+    cl = srv.deploy()
+    payload = cl.round(x)
+    with pytest.warns(DeprecationWarning, match="client_round_fused"):
+        ref_client, words = OC.client_round_fused(OC.client_init(server),
+                                                  tiny_cfg, x)
+    np.testing.assert_array_equal(np.asarray(payload.payload),
+                                  np.asarray(words))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6), cl.state, ref_client)
+    _, idx = OC.client_round(OC.client_init(server), tiny_cfg, x)
+    np.testing.assert_array_equal(np.asarray(payload.unpack()[0]),
+                                  np.asarray(idx))
+    assert payload.privatized and payload.version == 0
+    assert payload.wire == WIRE_VERSION
+
+
+def test_facade_round_dispatch_neutral(tiny_cfg, server, key):
+    """Acceptance: the facade adds ZERO dispatches over the PR-4 fused
+    round — exactly one encoder pass, one encode_codes dispatch."""
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    cl = OctopusClient(server, tiny_cfg, n_local_steps=0)
+    assert _count_dispatches(lambda: cl.round(x)) == (1, 1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ref = _count_dispatches(lambda: OC.client_round_fused(
+            OC.client_init(server), tiny_cfg, x, n_local_steps=0))
+    assert ref == (1, 1)
+    # refresh/finetune policy flags stay single-dispatch too
+    assert _count_dispatches(lambda: cl.transmit(x)) == (1, 1)
+    assert _count_dispatches(lambda: cl.round(x, finetune=2))[1] == 1
+
+
+def test_facade_transmit_matches_client_transmit(tiny_cfg, server, key):
+    """Encode-only profile == the deprecated client_transmit uplink:
+    same packed words, same measured bytes, state untouched."""
+    x = jax.random.normal(key, (4, 8, 8, 3))
+    cl = OctopusClient(server, tiny_cfg)
+    before = jax.tree.map(np.asarray, cl.state.params)
+    payload = cl.transmit(x, labels=jnp.arange(4))
+    with pytest.warns(DeprecationWarning, match="client_transmit"):
+        tx = OC.client_transmit(OC.client_init(server), tiny_cfg, x,
+                                labels=jnp.arange(4))
+    np.testing.assert_array_equal(np.asarray(payload.payload),
+                                  np.asarray(tx.payload))
+    assert payload.nbytes == tx.nbytes
+    np.testing.assert_array_equal(np.asarray(payload.unpack()[0]),
+                                  np.asarray(tx.indices))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        a, np.asarray(b)), before, cl.state.params)   # no refresh, no tune
+
+
+def test_ingest_lifts_legacy_transmission(tiny_cfg, server, key):
+    """A packed legacy Transmission ingests through the facade: lifted to
+    the (C=1, B, ...) wire layout, labels stay per-sample aligned."""
+    x = jax.random.normal(key, (4, 8, 8, 3))
+    with pytest.warns(DeprecationWarning):
+        tx = OC.client_transmit(OC.client_init(server), tiny_cfg, x,
+                                labels=jnp.arange(4))
+    srv = OctopusServer(server, tiny_cfg)
+    rec = srv.ingest(tx)
+    assert rec.packed.shape == (1,) + tuple(tx.indices.shape)
+    feats, labels = srv.features()
+    assert feats.shape[0] == 4
+    np.testing.assert_array_equal(np.asarray(labels["label"]),
+                                  np.arange(4))
+    want = OC.codes_to_features(server, tiny_cfg, tx.indices)
+    np.testing.assert_array_equal(np.asarray(feats), np.asarray(want))
+    # direct decode lifts too: merges ONLY the client axis, so the
+    # feature geometry matches the index path (was flattening B into T)
+    np.testing.assert_array_equal(np.asarray(srv.decode(tx)),
+                                  np.asarray(want))
+
+
+def test_server_pretrain_refuses_to_move_versions_under_stored_payloads(
+        tiny_cfg, server, key):
+    """Step 1 must precede Step 4: re-pinning v0 after a payload landed
+    would silently decode stored codes against the wrong dictionary."""
+    srv = OctopusServer(server, tiny_cfg)
+    srv.ingest(CodePayload.pack(jnp.zeros((2, 3, 4), jnp.int32), bits=4))
+    with pytest.raises(RuntimeError, match="pretrain"):
+        srv.pretrain(key, jax.random.normal(key, (8, 8, 8, 3)), steps=1)
+
+
+def test_decode_codes_rejects_conflicting_carrier_args(key):
+    """ops.decode_codes with a CodePayload refuses explicit bits=/count=
+    instead of silently ignoring them."""
+    p = CodePayload.pack(jnp.zeros((8,), jnp.int32), bits=4)
+    table = jax.random.normal(key, (16, 8))
+    rows = ops.decode_codes(p, table)
+    assert rows.shape == (8, 8)
+    with pytest.raises(TypeError, match="authoritative"):
+        ops.decode_codes(p, table, bits=8, count=8)
+
+
+def test_unpack_transmission_shim_parity(tiny_cfg, server, key):
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        tx = OC.client_transmit(OC.client_init(server), tiny_cfg, x)
+    with pytest.warns(DeprecationWarning, match="unpack_transmission"):
+        idx = OC.unpack_transmission(tx)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(tx.indices))
+    np.testing.assert_array_equal(np.asarray(as_payload(tx).unpack()),
+                                  np.asarray(tx.indices))
+
+
+def test_packedcodes_is_deprecated_codepayload_alias():
+    from repro.sim.engine import PackedCodes
+    words = ops.pack_codes(jnp.arange(12, dtype=jnp.int32), bits=4)
+    with pytest.warns(DeprecationWarning, match="CodePayload"):
+        pc = PackedCodes(payload=words, bits=4, shape=(12,))
+    assert isinstance(pc, CodePayload)
+    ref = CodePayload(payload=words, bits=4, shape=(12,))
+    assert pc.nbytes == ref.nbytes and pc.count == ref.count
+    np.testing.assert_array_equal(np.asarray(pc.unpack()),
+                                  np.asarray(ref.unpack()))
+
+
+# ----------------------------------------------------------- server facade
+
+def test_server_facade_ingest_keys_on_payload_version(tiny_cfg, server):
+    """ingest() keys the store off the payload's OWN version; features()
+    decodes each version group against its snapshot and filters."""
+    srv = OctopusServer(server, tiny_cfg)
+    rng = np.random.default_rng(0)
+    codes0 = jnp.asarray(rng.integers(0, 16, size=(2, 3, 4)), jnp.int32)
+    srv.ingest(CodePayload.pack(codes0, bits=code_bits(16), version=0))
+    # a merge moves the dictionary; new payloads carry version 1
+    v1 = srv.merge(jnp.stack([jnp.ones((16, 8))]),
+                   jnp.stack([jnp.ones((16,))]))
+    assert v1 == 1 and srv.version == 1
+    codes1 = jnp.asarray(rng.integers(0, 16, size=(2, 3, 4)), jnp.int32)
+    srv.ingest(CodePayload.pack(codes1, bits=code_bits(16), version=1))
+
+    feats, _ = srv.features()
+    ref0 = np.asarray(srv.registry.get(0))[np.asarray(codes0).reshape(6, 4)]
+    ref1 = np.asarray(srv.registry.get(1))[np.asarray(codes1).reshape(6, 4)]
+    np.testing.assert_array_equal(np.asarray(feats[:6]), ref0)
+    np.testing.assert_array_equal(np.asarray(feats[6:]), ref1)
+    f0, _ = srv.features(version=0)                 # filtered view
+    np.testing.assert_array_equal(np.asarray(f0), ref0)
+    assert srv.store.records[0].version == 0
+    assert srv.store.records[1].version == 1
+
+
+def test_server_facade_rejects_wire_violations(tiny_cfg, server):
+    srv = OctopusServer(server, tiny_cfg)
+    good = CodePayload.pack(jnp.zeros((2, 3, 4), jnp.int32), bits=4)
+    with pytest.raises(ValueError, match="wire revision"):
+        srv.ingest(good._replace(wire=WIRE_VERSION + 1))
+    with pytest.raises(ValueError, match="privatized"):
+        srv.ingest(good._replace(privatized=False))
+    with pytest.raises(ValueError, match="unknown codebook version"):
+        srv.ingest(good._replace(version=7))
+    with pytest.raises(TypeError):
+        srv.ingest(jnp.zeros((2, 3, 4), jnp.int32))   # bare indices
+    # the store itself also refuses non-privatized payloads (§2.5)
+    with pytest.raises(ValueError, match="privatized"):
+        srv.store.add(good._replace(privatized=False))
+    srv.ingest(good)
+    assert srv.store.n_samples == 6
+
+
+def test_engine_payload_carries_labels_into_store(tiny_cfg, server, key):
+    """SimEngine.round(version=, labels=) -> the payload alone is enough
+    for the store: no side-channel label/version arguments."""
+    engine = SimEngine(tiny_cfg, gamma=0.9)
+    data = jax.random.normal(key, (3, 2, 8, 8, 3))
+    y = jnp.arange(6).reshape(3, 2)
+    clients, packed = engine.round(engine.init_clients(server, 3), data,
+                                   version=0, labels={"content": y})
+    srv = OctopusServer(server, tiny_cfg)
+    srv.ingest(packed)
+    feats, labels = srv.features()
+    assert feats.shape[0] == 6
+    np.testing.assert_array_equal(np.asarray(labels["content"]),
+                                  np.arange(6))
+
+
+def test_multitask_trains_from_wire_endpoint(tiny_cfg, server, key):
+    """MultiTaskTrainer.fit_from_store accepts the OctopusServer wire
+    endpoint directly — one version-correct decode, no store/registry
+    plumbing at the call site."""
+    from repro.server import MultiTaskTrainer, TaskSpec
+    srv = OctopusServer(server, tiny_cfg)
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 16, size=(2, 8, 4)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 2, size=(2, 8)), jnp.int32)
+    srv.ingest(CodePayload.pack(codes, bits=code_bits(16),
+                                labels={"content": y}, n_samples=16))
+    trainer = MultiTaskTrainer(key, [TaskSpec("content", 2)], 4 * 8)
+    params, feats, labels = trainer.fit_from_store(key, srv, steps=5)
+    assert feats.shape[0] == 16 and set(labels) == {"content"}
+    assert set(params) == {"content"}
+
+
+def test_client_sync_adopts_merged_dictionary(tiny_cfg, server, key):
+    srv = OctopusServer(server, tiny_cfg)
+    cl = srv.deploy()
+    assert cl.version == 0
+    srv.merge(jnp.stack([jnp.ones((16, 8))]), jnp.stack([jnp.ones((16,))]))
+    cl.sync(srv)
+    assert cl.version == 1
+    np.testing.assert_array_equal(np.asarray(cl.codebook),
+                                  np.asarray(srv.registry.current))
+
+
+# ---------------------------------------------------------------- privacy
+
+def test_privatized_payload_leaks_no_private_residual(key):
+    """Regression (§2.5/§2.7): a privatized=True payload leaks NO
+    private-residual signal through the facade.
+
+    Style is constructed as a per-instance channel shift — exactly the
+    "temporally-invariant style carrier" IN strips (Eq. 4) — on a linear
+    (sequence) codec, so the claim is mechanical: the wire bytes are
+    BIT-IDENTICAL with style present or stripped, the audit adversary on
+    wire-decoded features scores ~chance on style, and the private
+    residual Z∘ (which the carrier structurally cannot hold) nails it.
+    """
+    from repro.core import privacy as PV
+    from repro.core.dvqae import init_dvqae
+    from repro.optim.adamw import adamw_init
+    d_model, M, K = 12, 8, 32
+    cfg = DVQAEConfig(kind="sequence", latent_dim=M, codebook_size=K)
+    params = init_dvqae(key, cfg, d_model=d_model)
+    server = OC.ServerState(params=params, opt=adamw_init(params),
+                            step=jnp.zeros((), jnp.int32))
+
+    n_cls, n_sty, B, T = 4, 4, 160, 10
+    rng = np.random.default_rng(0)
+    protos = rng.normal(size=(n_cls, T, d_model))
+    content = rng.integers(0, n_cls, size=B)
+    style = rng.integers(0, n_sty, size=B)
+    shifts = rng.normal(size=(n_sty, d_model)) * 2.0   # style = IN-strippable
+    x_base = jnp.asarray(protos[content]
+                         + 0.05 * rng.normal(size=(B, T, d_model)),
+                         jnp.float32)
+    x = x_base + jnp.asarray(shifts[style], jnp.float32)[:, None, :]
+
+    srv = OctopusServer(server, cfg)
+    cl = srv.deploy()
+    payload = cl.transmit(x)
+    assert payload.privatized
+    # structural: style-stripped inputs -> the IDENTICAL wire bytes
+    np.testing.assert_array_equal(np.asarray(payload.payload),
+                                  np.asarray(cl.transmit(x_base).payload))
+
+    feats = srv.decode(payload)                     # what the wire carries
+    out = dvqae.forward(server.params, cfg, x)
+    priv = jnp.broadcast_to(out.latent.private, out.latent.public.shape)
+    pub_m, prv_m = PV.privacy_audit(key, feats, priv,
+                                    jnp.asarray(style), n_sty, steps=150)
+    assert prv_m.accuracy > pub_m.accuracy + 0.2, (pub_m, prv_m)
+    assert pub_m.conditional_entropy_bits > prv_m.conditional_entropy_bits, \
+        (pub_m, prv_m)
