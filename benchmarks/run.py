@@ -92,6 +92,24 @@ Paper targets:
   ingest_rounds        rounds accumulated in the server CodeStore
   ingest_total_bytes   measured bytes across the buffered rounds
   ingest_probe_acc     Step-6 probe accuracy trained from the store
+  cohort_parity_bitexact   cohort-streamed round == single full-population
+                       round (merge stats + payload words + bytes, ALL
+                       array_equal; extra: population checked)
+  cohort_size          clients per streamed cohort (the compiled unit)
+  pop<N>_clients_per_sec   clients/sec of a cohort-streamed population
+                       round at N simulated clients (extra: round wall s)
+  pop<N>_bytes         Σ measured per-cohort uplink bytes of that round
+                       (extra: n_cohorts dispatched)
+  pop_max_clients      largest population in the scaling curve — the
+                       ROADMAP 100k+ target rides here
+
+Scaling-curve methodology: clients deploy fresh from the server each
+round (cross-device regime), every cohort reuses ONE compiled engine
+round (jit cache keyed on the cohort shape), per-cohort Step-5 stats
+fold into the exactly-associative int64 fixed-point accumulator, and
+clients/sec = N / wall(streamed round) AFTER a warm-up cohort compiles
+the shape. Peak memory is one cohort's state — the population's stacked
+state never exists, which is what lets N reach 100k+ on one host.
 """
 from __future__ import annotations
 
@@ -463,6 +481,58 @@ def bench_sim(key):
     _emit("sim", "ingest_rounds", len(store))
     _emit("sim", "ingest_total_bytes", store.total_bytes)
     _emit("sim", "ingest_probe_acc", f"{acc:.4f}")
+
+    # ---- cohort-streamed population scaling curve (§2.2, ROADMAP item 1)
+    import numpy as np
+
+    from repro.sim import CohortEngine, CohortPlan
+
+    pcfg = DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=256, n_res_blocks=1)
+    pserver = OC.server_init(key, pcfg)
+    ceng = CohortEngine(pcfg, gamma=0.99, n_local_steps=0)
+    cohort_size = 256 if C.QUICK else 1024
+    pop_sizes = [512, 1024] if C.QUICK else [1024, 10240, 102400]
+    pool = jax.block_until_ready(
+        jax.random.normal(key, (4096, 1, 8, 8, 3)))    # shared sample pool
+
+    def data_fn(ids):
+        # slot-id-keyed batches WITHOUT materializing population data:
+        # each client reads its own pool row, so any cohort grouping
+        # sees identical per-client batches (the parity invariant)
+        return pool[np.asarray(ids) % pool.shape[0]]
+
+    # parity gate: the streamed round must reproduce the one-shot
+    # population round bit-for-bit before any throughput is reported
+    n_par = pop_sizes[0]
+    full = ceng.round(pserver, CohortPlan.from_groups([np.arange(n_par)]),
+                      data_fn)
+    parts = ceng.round(pserver, CohortPlan.build(np.arange(n_par),
+                                                 cohort_size), data_fn)
+    from repro.wire import concat_payloads
+    cat = concat_payloads(parts.payloads)
+    parity = (np.array_equal(parts.stats.num, full.stats.num)
+              and np.array_equal(parts.stats.den, full.stats.den)
+              and np.array_equal(np.asarray(cat.payload),
+                                 np.asarray(full.payloads[0].payload)))
+    bytes_match = parts.nbytes == full.nbytes
+    _emit("sim", "cohort_parity_bitexact", int(parity and bytes_match),
+          extra=f"pop{n_par}")
+    assert parity and bytes_match, "cohort parity broken — curve invalid"
+    _emit("sim", "cohort_size", cohort_size)
+
+    for n_pop in pop_sizes:
+        plan = CohortPlan.build(np.arange(n_pop), cohort_size)
+        warm = CohortPlan.from_groups([plan.cohorts[0]])
+        ceng.round(pserver, warm, data_fn)              # compile the shape
+        t0 = time.time()
+        out = ceng.round(pserver, plan, data_fn)
+        dt = time.time() - t0
+        _emit("sim", f"pop{n_pop}_clients_per_sec", f"{n_pop / dt:.0f}",
+              extra=f"{dt:.2f}s_round")
+        _emit("sim", f"pop{n_pop}_bytes", out.nbytes,
+              extra=f"{plan.n_cohorts}cohorts")
+    _emit("sim", "pop_max_clients", pop_sizes[-1])
 
 
 # ---------------------------------------------------------------- server

@@ -18,6 +18,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class EMAState(NamedTuple):
@@ -96,3 +97,81 @@ def batch_optimal_atoms(z_e, indices, n_atoms: int):
     """Eq. 8: per-atom mean of assigned outputs (the EMA fixed point)."""
     n, s = assignment_stats(z_e, indices, n_atoms)
     return s / jnp.maximum(n, 1.0)[:, None], n
+
+
+# ---------------------------------------------------- associative Step-5 merge
+#
+# The Step-5 server merge is a count-weighted average over client
+# codebooks. Averaging in floats is NOT associative, so a population
+# merged cohort-by-cohort would drift (in the last bits) from the same
+# population merged in one shot — and the cohort engine's whole contract
+# is that grouping is invisible. MergeStats therefore accumulates in
+# FIXED-POINT int64: each client's contribution is quantized ONCE
+# (independently of its cohort) and summed with integer adds, which are
+# exactly associative and commutative. The float division back to a
+# codebook happens once, at the end, on the identical integer totals —
+# so any cohort partition/order reproduces the single-shot merge
+# bit-for-bit.
+
+MERGE_FIXED_BITS = 24                     # fractional bits of the fixed point
+_MERGE_SCALE = np.int64(1) << MERGE_FIXED_BITS
+
+
+class MergeStats(NamedTuple):
+    """Associative sufficient statistics for the Step-5 codebook merge.
+
+    num: (K, M) int64 — Σ_clients round(count_k * codebook_km * 2^24)
+    den: (K,)  int64 — Σ_clients round(count_k * 2^24)
+    """
+    num: np.ndarray
+    den: np.ndarray
+
+
+def merge_stats_zero(n_atoms: int, dim: int) -> MergeStats:
+    """Identity element of ``merge_stats_add``."""
+    return MergeStats(num=np.zeros((n_atoms, dim), np.int64),
+                      den=np.zeros((n_atoms,), np.int64))
+
+
+def merge_stats(codebooks, counts, *, staleness=None,
+                staleness_decay: float = 0.5) -> MergeStats:
+    """Fixed-point merge statistics for a cohort of clients.
+
+    codebooks: (C, K, M); counts: (C, K); staleness: optional (C,) int
+    rounds-behind-current, weighted ``staleness_decay ** staleness`` like
+    ``server_merge_codebooks``. Each client is quantized independently,
+    so statistics from ANY partition of the same clients sum to the same
+    integers.
+    """
+    cbs = np.asarray(codebooks, np.float64)
+    w = np.asarray(counts, np.float64)
+    if cbs.ndim == 2:
+        cbs, w = cbs[None], w[None]
+    if staleness is not None:
+        decay = np.power(float(staleness_decay),
+                         np.asarray(staleness, np.float64))
+        w = w * decay[:, None]
+    den_f = w * np.float64(_MERGE_SCALE)                     # (C, K)
+    num_f = den_f[..., None] * cbs                           # (C, K, M)
+    return MergeStats(
+        num=np.rint(num_f).astype(np.int64).sum(axis=0),
+        den=np.rint(den_f).astype(np.int64).sum(axis=0))
+
+
+def merge_stats_add(a: MergeStats, b: MergeStats) -> MergeStats:
+    """Exactly associative/commutative combine (plain int64 adds)."""
+    return MergeStats(num=a.num + b.num, den=a.den + b.den)
+
+
+def merge_codebook(stats: MergeStats, current) -> np.ndarray:
+    """Finish the merge: integer totals -> float32 codebook.
+
+    Atoms with (near-)zero total weight keep the ``current`` dictionary
+    row, matching ``server_merge_codebooks``'s behaviour for dead atoms.
+    """
+    cur = np.asarray(current)
+    live = stats.den > 0
+    den = np.where(live, stats.den, np.int64(1)).astype(np.float64)
+    merged = stats.num.astype(np.float64) / den[:, None]
+    out = np.where(live[:, None], merged, cur.astype(np.float64))
+    return out.astype(cur.dtype)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from .dvqae import DVQAEConfig, DVQAEOut, forward, init_dvqae
+from . import ema as ema_mod
 from .ema import (EMAState, assignment_stats, ema_update_from_stats,
                   init_ema)
 
@@ -285,6 +286,25 @@ def server_merge_codebooks(server: ServerState,
     merged = jnp.where(tot[:, None] > 1e-9, merged, cur)
     params = {**server.params, "codebook": merged.astype(
         server.params["codebook"].dtype)}
+    return ServerState(params=params, opt=server.opt, step=server.step)
+
+
+def server_merge_stats(server: ServerState,
+                       stats: "ema_mod.MergeStats") -> ServerState:
+    """Step-5 tail from ASSOCIATIVE merge statistics (cohort streaming).
+
+    ``stats`` is the int64 fixed-point accumulator from
+    :func:`repro.core.ema.merge_stats` / ``merge_stats_add`` — the cohort
+    engine folds each cohort's contribution in as it streams, and this
+    finishes the merge once. Because the accumulation is exact integer
+    addition, the resulting dictionary is bit-identical for ANY cohort
+    partition or order of the same client set (see
+    ``ema.merge_codebook``). Atoms with zero accumulated weight keep the
+    current dictionary, matching :func:`server_merge_codebooks`.
+    """
+    merged = ema_mod.merge_codebook(stats, server.params["codebook"])
+    params = {**server.params,
+              "codebook": jnp.asarray(merged)}
     return ServerState(params=params, opt=server.opt, step=server.step)
 
 

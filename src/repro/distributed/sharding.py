@@ -52,6 +52,15 @@ def _axis_size(mesh: Mesh, axes) -> int:
     return size
 
 
+def data_axis_size(mesh: Optional[Mesh]) -> int:
+    """Size of the 'data' axis (1 without a mesh) — the population/cohort
+    divisibility unit: a shard_mapped SimEngine round needs the cohort
+    size to divide by it."""
+    if mesh is None:
+        return 1
+    return _axis_size(mesh, _default_dp_axes(mesh))
+
+
 def _place(spec: list, shape, dim: int, axes, size: int,
            taken: set) -> bool:
     """Try to put ``axes`` on ``dim``; greedy fallback over free dims."""

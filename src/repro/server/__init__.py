@@ -16,13 +16,13 @@ from repro.wire.session import OctopusServer
 
 from .multitask import MultiTaskTrainer, TaskSpec
 from .registry import CodebookRegistry
-from .runtime import AsyncCodeServer, RoundStats
-from .scheduler import (STANDARD_SCENARIOS, RoundEvent, RoundScheduler,
-                        Scenario, SchedulerConfig)
+from .runtime import AsyncCodeServer, RoundStats, UplinkQueue
+from .scheduler import (STANDARD_SCENARIOS, DiurnalProfile, RoundEvent,
+                        RoundScheduler, Scenario, SchedulerConfig)
 from .store import CodeStore, StoreRecord
 
 __all__ = ["AsyncCodeServer", "CodePayload", "CodeStore",
-           "CodebookRegistry", "MultiTaskTrainer", "OctopusServer",
-           "RoundEvent", "RoundScheduler", "RoundStats",
+           "CodebookRegistry", "DiurnalProfile", "MultiTaskTrainer",
+           "OctopusServer", "RoundEvent", "RoundScheduler", "RoundStats",
            "STANDARD_SCENARIOS", "Scenario", "SchedulerConfig",
-           "StoreRecord", "TaskSpec"]
+           "StoreRecord", "TaskSpec", "UplinkQueue"]

@@ -58,6 +58,59 @@ class PendingUplink(NamedTuple):
     sent_round: int
 
 
+class UplinkQueue:
+    """In-flight uplink payloads + the measured byte ledger (§2.8).
+
+    Shared by :class:`AsyncCodeServer` and the cohort traffic driver
+    (``repro.sim.cohort.CohortEngine.run_traffic``): ``send`` charges
+    every payload's MEASURED ``nbytes`` to the uplink (dropped packets
+    burn bytes but never land); ``deliver`` pushes everything whose
+    arrival round has come through the wire endpoint.
+    """
+
+    def __init__(self):
+        self._pending: List[PendingUplink] = []
+        self.bytes_sent = 0
+        self.bytes_delivered = 0
+        self.bytes_dropped = 0
+
+    def send(self, packed: CodePayload, *, round: int, delay: int = 0,
+             dropped: bool = False, client_ids=None) -> int:
+        """Queue one payload; returns its measured nbytes."""
+        n = packed.nbytes
+        self.bytes_sent += n
+        if dropped:
+            self.bytes_dropped += n
+            return n
+        self._pending.append(PendingUplink(
+            arrival_round=int(round) + int(delay), packed=packed,
+            client_ids=client_ids, sent_round=int(round)))
+        return n
+
+    def deliver(self, wire: OctopusServer, round: int) -> tuple:
+        """Ingest every due payload; returns (nbytes, n_payloads)."""
+        delivered, n_del = 0, 0
+        still: List[PendingUplink] = []
+        for p in self._pending:
+            if p.arrival_round <= round:
+                wire.ingest(p.packed, client_ids=p.client_ids,
+                            round=p.sent_round)
+                delivered += p.packed.nbytes
+                n_del += 1
+            else:
+                still.append(p)
+        self._pending = still
+        self.bytes_delivered += delivered
+        return delivered, n_del
+
+    @property
+    def bytes_in_flight(self) -> int:
+        return sum(p.packed.nbytes for p in self._pending)
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+
 class RoundStats(NamedTuple):
     round: int
     n_participants: int
@@ -93,11 +146,8 @@ class AsyncCodeServer:
         self.slot_versions = np.full(self.n_slots, self.registry.latest,
                                      dtype=int)
         self._participated = np.zeros(self.n_slots, dtype=bool)
-        self._pending: List[PendingUplink] = []
+        self.queue = UplinkQueue()
         self.round = 0
-        self.bytes_sent = 0
-        self.bytes_delivered = 0
-        self.bytes_dropped = 0
         self.n_merges = 0
 
     # --------------------------------------------- wire endpoint delegates
@@ -113,6 +163,20 @@ class AsyncCodeServer:
     @property
     def store(self) -> CodeStore:
         return self.wire.store
+
+    # byte ledger lives on the shared UplinkQueue
+
+    @property
+    def bytes_sent(self) -> int:
+        return self.queue.bytes_sent
+
+    @property
+    def bytes_delivered(self) -> int:
+        return self.queue.bytes_delivered
+
+    @property
+    def bytes_dropped(self) -> int:
+        return self.queue.bytes_dropped
 
     # ------------------------------------------------------------ helpers
 
@@ -175,29 +239,12 @@ class AsyncCodeServer:
                            for t, y in label_dict.items()}
             packed = CodePayload.pack(gidx, bits=self.engine.bits,
                                       version=version, labels=glabels)
-            sent += packed.nbytes
-            if dropped:
-                self.bytes_dropped += packed.nbytes
-                continue
-            self._pending.append(PendingUplink(
-                arrival_round=self.round + delay, packed=packed,
-                client_ids=ids[pos], sent_round=self.round))
-        self.bytes_sent += sent
+            sent += self.queue.send(packed, round=self.round, delay=delay,
+                                    dropped=dropped, client_ids=ids[pos])
 
         # ---- deliver everything whose arrival round has come through the
         # single wire endpoint (version/labels read from the payload)
-        delivered, n_del = 0, 0
-        still: List[PendingUplink] = []
-        for p in self._pending:
-            if p.arrival_round <= self.round:
-                self.wire.ingest(p.packed, client_ids=p.client_ids,
-                                 round=p.sent_round)
-                delivered += p.packed.nbytes
-                n_del += 1
-            else:
-                still.append(p)
-        self._pending = still
-        self.bytes_delivered += delivered
+        delivered, n_del = self.queue.deliver(self.wire, self.round)
 
         # ---- low-frequency Step 5 merge over the ACTIVE population
         merged_version = None
@@ -238,4 +285,4 @@ class AsyncCodeServer:
 
     @property
     def in_flight(self) -> int:
-        return len(self._pending)
+        return len(self.queue)

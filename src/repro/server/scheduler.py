@@ -11,18 +11,29 @@ replays through ``SimEngine``, so every scenario — full participation,
 SAME jitted population round.
 
 Determinism: the whole schedule is a pure function of the constructor
-PRNG key (per-round streams via ``jax.random.fold_in``); two schedulers
-built from equal keys emit identical event sequences.
+PRNG key. Every per-round draw gets its OWN substream
+(``fold_in(fold_in(key, round), purpose)``): churn, participant choice,
+straggler delays, drops, and diurnal cohort draws never share a
+Generator, so toggling one traffic knob — or adding a traffic profile —
+cannot perturb any other draw. (They used to share one per-round
+stream, so e.g. enabling ``straggler_prob`` silently re-randomized the
+drop pattern; a churn re-run is now bit-reproducible regardless of the
+other knobs.) Two schedulers built from equal keys emit identical event
+sequences, across processes.
 
 Shapes stay static: exactly ``k = max(1, round(participation *
 n_slots))`` participants are drawn per round (from the ACTIVE slots), so
 the engine compiles one (k, B, ...) round and reuses it for the run.
-Leaves are capped to keep at least ``k`` slots active.
+Leaves are capped to keep at least ``k`` slots active. With a
+:class:`DiurnalProfile` the per-round count still arrives in whole
+``quantum``-sized blocks (cohorts), so each cohort keeps its compiled
+shape and only the NUMBER of cohort dispatches breathes with traffic.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Dict, NamedTuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import numpy as np
@@ -58,60 +69,129 @@ def _rng_from_key(key) -> np.random.Generator:
     return np.random.default_rng(np.asarray(data).astype(np.uint32))
 
 
+# one substream per draw purpose: folding the purpose tag AFTER the round
+# index gives every (round, purpose) pair an independent Generator, so no
+# knob's draw can advance another's stream
+_STREAM_CHURN = 1
+_STREAM_PARTICIPANTS = 2
+_STREAM_DELAYS = 3
+_STREAM_DROPS = 4
+_STREAM_COHORTS = 5
+
+
+@dataclass(frozen=True)
+class DiurnalProfile:
+    """Cosine day/night participation swing (§2.2 heavy-traffic realism).
+
+    ``fraction(t)`` oscillates between ``trough`` (quietest round) and
+    ``peak`` (busiest) with period ``period`` rounds, peaking at round
+    ``phase``. The cohort engine multiplies the scheduler's base
+    participation by it, in whole cohorts.
+    """
+    period: int = 24
+    trough: float = 0.25
+    peak: float = 1.0
+    phase: int = 0
+
+    def fraction(self, round_idx: int) -> float:
+        c = math.cos(2.0 * math.pi * (round_idx - self.phase) / self.period)
+        return self.trough + (self.peak - self.trough) * 0.5 * (1.0 + c)
+
+
 class RoundScheduler:
-    """Deterministic event stream over a fixed slot array."""
+    """Deterministic event stream over a fixed slot array.
+
+    ``profile`` (optional :class:`DiurnalProfile`) modulates the
+    per-round participant count; ``quantum`` keeps that count a whole
+    multiple (the cohort size), so compiled per-cohort shapes are reused
+    and only the dispatch count varies with traffic.
+    """
 
     def __init__(self, n_slots: int, cfg: SchedulerConfig = SchedulerConfig(),
-                 *, key):
+                 *, key, profile: Optional[DiurnalProfile] = None,
+                 quantum: int = 1):
         self.n_slots = int(n_slots)
         self.cfg = cfg
         self._key = key
         self.round = 0
         self.active = np.ones(self.n_slots, dtype=bool)
+        self.profile = profile
+        self.quantum = int(quantum)
         self.k = max(1, int(round(cfg.participation * self.n_slots)))
+        if self.quantum > 1:
+            self.k = max(self.quantum,
+                         (self.k // self.quantum) * self.quantum)
         if self.k > self.n_slots:
             raise ValueError(f"participation {cfg.participation} needs "
                              f"{self.k} > {self.n_slots} slots")
 
+    def _rng(self, purpose: int) -> np.random.Generator:
+        """Fresh Generator for one (round, purpose) draw."""
+        return _rng_from_key(jax.random.fold_in(
+            jax.random.fold_in(self._key, self.round), purpose))
+
+    def round_k(self) -> int:
+        """This round's participant count: base ``k`` scaled by the
+        diurnal profile, in whole ``quantum`` blocks (>= one block)."""
+        if self.profile is None:
+            return self.k
+        want = self.profile.fraction(self.round) * self.k
+        q = self.quantum
+        return max(q, int(round(want / q)) * q)
+
     def step(self) -> RoundEvent:
         cfg = self.cfg
-        rng = _rng_from_key(jax.random.fold_in(self._key, self.round))
 
         # ---- churn first: the participant draw sees this round's roster
         joined = np.array([], dtype=int)
         left = np.array([], dtype=int)
-        if cfg.join_prob > 0.0:
-            idle = np.nonzero(~self.active)[0]
-            joined = idle[rng.random(idle.size) < cfg.join_prob]
-            self.active[joined] = True
-        if cfg.leave_prob > 0.0:
-            act = np.nonzero(self.active)[0]
-            cand = act[rng.random(act.size) < cfg.leave_prob]
-            # keep at least k slots active so the compiled shape holds;
-            # the cap drops a RANDOM subset of the would-be leavers so
-            # churn stays unbiased across slot ids
-            n_spare = int(self.active.sum()) - self.k
-            left = rng.permutation(cand)[:max(0, min(cand.size, n_spare))]
-            self.active[left] = False
+        if cfg.join_prob > 0.0 or cfg.leave_prob > 0.0:
+            rng = self._rng(_STREAM_CHURN)
+            if cfg.join_prob > 0.0:
+                idle = np.nonzero(~self.active)[0]
+                joined = idle[rng.random(idle.size) < cfg.join_prob]
+                self.active[joined] = True
+            if cfg.leave_prob > 0.0:
+                act = np.nonzero(self.active)[0]
+                cand = act[rng.random(act.size) < cfg.leave_prob]
+                # keep at least k slots active so the compiled shape
+                # holds; the cap drops a RANDOM subset of the would-be
+                # leavers so churn stays unbiased across slot ids
+                n_spare = int(self.active.sum()) - self.k
+                left = rng.permutation(cand)[:max(0, min(cand.size,
+                                                         n_spare))]
+                self.active[left] = False
 
+        k = self.round_k()
         act = np.nonzero(self.active)[0]
-        participants = rng.choice(act, size=self.k, replace=False)
+        participants = self._rng(_STREAM_PARTICIPANTS).choice(
+            act, size=min(k, act.size), replace=False)
         participants.sort()
+        k = participants.size
 
-        delays = np.zeros(self.k, dtype=int)
+        delays = np.zeros(k, dtype=int)
         if cfg.straggler_prob > 0.0:
-            slow = rng.random(self.k) < cfg.straggler_prob
+            rng = self._rng(_STREAM_DELAYS)
+            slow = rng.random(k) < cfg.straggler_prob
             # truncated geometric on {1..max_delay}
-            d = rng.geometric(1.0 - cfg.delay_p, size=self.k)
+            d = rng.geometric(1.0 - cfg.delay_p, size=k)
             delays = np.where(slow, np.minimum(d, cfg.max_delay), 0)
-        dropped = (rng.random(self.k) < cfg.drop_prob
-                   if cfg.drop_prob > 0.0 else np.zeros(self.k, dtype=bool))
+        dropped = (self._rng(_STREAM_DROPS).random(k) < cfg.drop_prob
+                   if cfg.drop_prob > 0.0 else np.zeros(k, dtype=bool))
 
         ev = RoundEvent(round=self.round, participants=participants,
                         delays=delays, dropped=dropped,
                         joined=np.sort(joined), left=np.sort(left))
         self.round += 1
         return ev
+
+    def cohort_rng(self) -> np.random.Generator:
+        """Substream reserved for cohort-level draws (e.g. shuffling
+        cohort dispatch order). Isolated by construction: consuming it
+        never advances the churn / participant / delay / drop streams,
+        so a churn re-run with or without cohort draws is
+        bit-reproducible."""
+        return self._rng(_STREAM_COHORTS)
 
 
 class Scenario(NamedTuple):

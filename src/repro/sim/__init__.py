@@ -4,15 +4,20 @@ at scale, not one Python object per client).
   engine  — stacked ClientState pytrees + one jitted vmap/shard_map round;
             the round's uplink is a ``repro.wire.CodePayload`` (the
             deprecated ``PackedCodes`` is an alias of it)
+  cohort  — cohort-streamed population rounds (100k+ clients): fixed-size
+            cohorts through ONE compiled engine round, exactly
+            associative Step-5 stats merge, scheduler-driven traffic
   ingest  — DEPRECATED server-side buffer; superseded by the async
             code-server runtime (repro.server.CodeStore)
 """
 from repro.wire.payload import CodePayload
 
+from .cohort import CohortEngine, CohortPlan, CohortRound, TrafficRound
 from .engine import (PackedCodes, SimEngine, client_batch_size,
                      replicate_clients, stack_clients, unstack_clients)
 from .ingest import IngestBuffer
 
-__all__ = ["CodePayload", "PackedCodes", "SimEngine", "IngestBuffer",
+__all__ = ["CodePayload", "CohortEngine", "CohortPlan", "CohortRound",
+           "PackedCodes", "SimEngine", "IngestBuffer", "TrafficRound",
            "client_batch_size", "replicate_clients", "stack_clients",
            "unstack_clients"]

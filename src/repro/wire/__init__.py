@@ -13,9 +13,10 @@
 """
 from .codec import decode_payloads, decode_rows
 from .payload import (DEFAULT_TASK, WIRE_VERSION, CodePayload, as_payload,
-                      normalize_labels)
+                      concat_payloads, normalize_labels)
 from .session import OctopusClient, OctopusServer, fused_round, round_words
 
 __all__ = ["CodePayload", "OctopusClient", "OctopusServer", "WIRE_VERSION",
-           "DEFAULT_TASK", "as_payload", "decode_payloads", "decode_rows",
-           "fused_round", "normalize_labels", "round_words"]
+           "DEFAULT_TASK", "as_payload", "concat_payloads",
+           "decode_payloads", "decode_rows", "fused_round",
+           "normalize_labels", "round_words"]

@@ -188,6 +188,48 @@ class CodePayload(NamedTuple):
             else normalize_labels(labels, n_samples))
 
 
+def concat_payloads(payloads) -> CodePayload:
+    """Concatenate per-record payloads into ONE carrier, byte-preserving.
+
+    Because every record (client) stream is padded to whole super-groups
+    INDIVIDUALLY, stacking the word rows of cohort payloads reproduces
+    the single whole-population payload bit-for-bit — and therefore
+    ``Σ cohort.nbytes == concat.nbytes`` (§2.8 accounting is invariant
+    to how a round is cohorted). All inputs must agree on bits / wire
+    revision / codebook version / privatized flag and on the per-record
+    trailing index shape; labels concatenate per task when every payload
+    carries the same channels, else drop to None.
+    """
+    ps = list(payloads)
+    if not ps:
+        raise ValueError("concat_payloads needs at least one payload")
+    head = ps[0]
+    for p in ps[1:]:
+        if (p.bits, p.wire, p.version, p.privatized) != (
+                head.bits, head.wire, head.version, head.privatized):
+            raise ValueError(
+                f"payload metadata mismatch: {(p.bits, p.wire, p.version, p.privatized)} "
+                f"vs {(head.bits, head.wire, head.version, head.privatized)}")
+        if p.shape[1:] != head.shape[1:]:
+            raise ValueError(f"per-record shape mismatch: {p.shape} vs "
+                             f"{head.shape}")
+    if len(ps) == 1:
+        return head
+    words = jnp.concatenate([p.payload for p in ps], axis=0)
+    n_records = sum(p.n_records for p in ps)
+    shape = (sum(p.shape[0] for p in ps),) + head.shape[1:]
+    labels = None
+    if all(p.labels is not None for p in ps):
+        tasks = set(ps[0].labels)
+        if all(set(p.labels) == tasks for p in ps):
+            labels = {t: jnp.concatenate([p.labels[t] for p in ps])
+                      for t in tasks}
+    return CodePayload(payload=words, bits=head.bits, shape=shape,
+                       n_records=n_records, version=head.version,
+                       labels=labels, privatized=head.privatized,
+                       wire=head.wire)
+
+
 def as_payload(tx) -> Optional[CodePayload]:
     """Coerce any packed carrier to a :class:`CodePayload`.
 

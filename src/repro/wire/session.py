@@ -310,3 +310,13 @@ class OctopusServer:
         """Merge a stacked population (e.g. ``SimEngine`` client state)."""
         return self.merge(clients.params["codebook"], clients.ema.counts,
                           **kw)
+
+    def merge_stats(self, stats) -> int:
+        """Step 5 tail from ASSOCIATIVE cohort statistics
+        (``repro.core.ema.MergeStats``): the cohort engine streams a
+        round cohort-by-cohort and folds each cohort's fixed-point
+        contribution into one accumulator; this finishes the merge and
+        registers the new dictionary version. Bit-identical for any
+        cohort partition/order of the same client set."""
+        self.state = OC.server_merge_stats(self.state, stats)
+        return self.registry.register(self.state.params["codebook"])

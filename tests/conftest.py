@@ -5,6 +5,17 @@ import pytest
 jax.config.update("jax_platform_name", "cpu")
 
 
+def pytest_configure(config):
+    # Escalate the repro deprecation shims (PackedCodes, client_transmit,
+    # IngestBuffer, ...) to errors: no internal code path may silently
+    # construct a deprecated carrier. Every shim's message says which
+    # repro.* replacement to use, which is what the filter keys on.
+    # (Tests that exercise the shims on purpose use pytest.warns, which
+    # overrides these filters inside its block.)
+    config.addinivalue_line(
+        "filterwarnings", r"error:.*use repro\.:DeprecationWarning")
+
+
 def abstract_mesh(sizes, names):
     """AbstractMesh across jax versions: new (sizes, names) signature vs
     the 0.4.x ((name, size), ...) pair tuple."""
