@@ -19,19 +19,30 @@ round. The demo shows the three contracts the property suite
      ``OctopusServer.ingest`` unchanged, stragglers ride the shared
      UplinkQueue, and every merge registers a codebook version.
 
+Set ``OCTOPUS_TRACE=trace.jsonl`` to flight-record the whole run (every
+encode dispatch, uplink, ingest, decode and merge — summarize with
+``python -m repro.obs.report trace.jsonl``); ``OCTOPUS_BENCH_QUICK=1``
+shrinks the population round to CI smoke scale.
+
     PYTHONPATH=src python examples/population_engine.py
 """
+import os
 import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
 from repro.server import (DiurnalProfile, OctopusServer, RoundScheduler,
                           SchedulerConfig)
 from repro.sim import CohortEngine, CohortPlan
 from repro.wire import concat_payloads
+
+QUICK = os.environ.get("OCTOPUS_BENCH_QUICK", "") == "1"
+if obs.active() is not None:
+    print(f"flight recorder active -> {obs.active().path}")
 
 key = jax.random.PRNGKey(0)
 cfg = DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
@@ -57,7 +68,7 @@ assert parts.nbytes == full.nbytes
 print(f"parity @ {n} clients: streamed round bit-matches one-shot round "
       f"({parts.nbytes} uplink bytes either way)")
 
-N = 102_400
+N = 8_192 if QUICK else 102_400
 plan = CohortPlan.build(np.arange(N), 1024)
 engine.round(server, CohortPlan.from_groups([plan.cohorts[0]]),
              data_fn)                                   # compile the shape

@@ -2,6 +2,12 @@
 
 On CPU (this container) the kernels run with interpret=True; on TPU they
 compile natively. ``INTERPRET`` flips automatically from the backend.
+
+Every dispatch runs under a ``jax.named_scope("octopus/<op>")`` so
+device traces (``jax.profiler``) attribute kernel time to the protocol
+step that dispatched it. Scopes only label the jaxpr/HLO — numerics,
+dispatch counts and compiled programs are bit-identical with or without
+them (the flight-recorder neutrality suite pins this).
 """
 from __future__ import annotations
 
@@ -26,20 +32,23 @@ def vq_nearest(z, codebook, **kw):
         # off-TPU there is no VMEM budget: fatter N blocks mean fewer
         # (traced) grid steps, which dominates interpret-mode runtime
         kw.setdefault("block_n", 4096)
-    return vq_nearest_pallas(z, codebook, **kw)
+    with jax.named_scope("octopus/vq_nearest"):
+        return vq_nearest_pallas(z, codebook, **kw)
 
 
 def pack_codes(codes, *, bits, **kw):
     """Flat/any-shape int codes -> (n_groups, W) uint32 dense bit-stream
     at ceil(log2 K) bits per code (see kernels/pack_bits.py layout)."""
     kw.setdefault("interpret", INTERPRET)
-    return pack_codes_pallas(codes, bits=bits, **kw)
+    with jax.named_scope("octopus/pack_codes"):
+        return pack_codes_pallas(codes, bits=bits, **kw)
 
 
 def unpack_codes(words, *, bits, count, **kw):
     """(n_groups, W) uint32 words -> (count,) int32 codes, bit-exact."""
     kw.setdefault("interpret", INTERPRET)
-    return unpack_codes_pallas(words, bits=bits, count=count, **kw)
+    with jax.named_scope("octopus/unpack_codes"):
+        return unpack_codes_pallas(words, bits=bits, count=count, **kw)
 
 
 def decode_codes(words, table, *, bits=None, count=None, n_slices=1,
@@ -68,11 +77,13 @@ def decode_codes(words, table, *, bits=None, count=None, n_slices=1,
                         "word stream (or pass a CodePayload)")
     if use_ref:
         from .ref import decode_codes_ref
-        return decode_codes_ref(words, table, bits=bits, count=count,
-                                n_slices=n_slices, phases=phases)
+        with jax.named_scope("octopus/decode_codes_ref"):
+            return decode_codes_ref(words, table, bits=bits, count=count,
+                                    n_slices=n_slices, phases=phases)
     kw.setdefault("interpret", INTERPRET)
-    return decode_codes_pallas(words, table, bits=bits, count=count,
-                               n_slices=n_slices, phases=phases, **kw)
+    with jax.named_scope("octopus/decode_codes"):
+        return decode_codes_pallas(words, table, bits=bits, count=count,
+                                   n_slices=n_slices, phases=phases, **kw)
 
 
 def encode_codes(z, codebooks, *, bits, n_groups=1, n_slices=1,
@@ -91,15 +102,18 @@ def encode_codes(z, codebooks, *, bits, n_groups=1, n_slices=1,
     forced kernel runs with interpret=True."""
     if use_ref or (use_ref is None and INTERPRET):
         from .ref import encode_codes_ref
-        return encode_codes_ref(z, codebooks, bits=bits, n_groups=n_groups,
-                                n_slices=n_slices)
+        with jax.named_scope("octopus/encode_codes_ref"):
+            return encode_codes_ref(z, codebooks, bits=bits,
+                                    n_groups=n_groups, n_slices=n_slices)
     kw.setdefault("interpret", INTERPRET)
     if kw["interpret"]:
         # off-TPU there is no VMEM budget: fatter N blocks mean fewer
         # (traced) grid steps, which dominates interpret-mode runtime
         kw.setdefault("block_n", 4096)
-    return encode_codes_pallas(z, codebooks, bits=bits, n_groups=n_groups,
-                               n_slices=n_slices, **kw)
+    with jax.named_scope("octopus/encode_codes"):
+        return encode_codes_pallas(z, codebooks, bits=bits,
+                                   n_groups=n_groups, n_slices=n_slices,
+                                   **kw)
 
 
 def encode_payload(z, codebooks, *, bits, shape, n_groups=1, n_slices=1,

@@ -33,6 +33,7 @@ bulk decode of the store — see repro.server.multitask.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, NamedTuple, Optional
 
 import jax
@@ -40,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import octopus as OC
+from repro.obs import recorder as _obs
 from repro.sim.engine import SimEngine
 from repro.wire import CodePayload, OctopusServer
 
@@ -79,12 +81,20 @@ class UplinkQueue:
         """Queue one payload; returns its measured nbytes."""
         n = packed.nbytes
         self.bytes_sent += n
+        rec = _obs.active()
+        if rec is not None:
+            rec.uplink(packed, round=int(round), delay=int(delay),
+                       dropped=bool(dropped),
+                       n_clients=(len(client_ids)
+                                  if client_ids is not None else None))
         if dropped:
             self.bytes_dropped += n
             return n
         self._pending.append(PendingUplink(
             arrival_round=int(round) + int(delay), packed=packed,
             client_ids=client_ids, sent_round=int(round)))
+        if rec is not None:
+            rec.metrics.set_gauge("uplink_queue_depth", len(self._pending))
         return n
 
     def deliver(self, wire: OctopusServer, round: int) -> tuple:
@@ -101,6 +111,9 @@ class UplinkQueue:
                 still.append(p)
         self._pending = still
         self.bytes_delivered += delivered
+        rec = _obs.active()
+        if rec is not None:
+            rec.metrics.set_gauge("uplink_queue_depth", len(self._pending))
         return delivered, n_del
 
     @property
@@ -205,6 +218,8 @@ class AsyncCodeServer:
         (or bare array) of (n_slots, B) arrays riding with the uplink.
         """
         assert data.shape[0] == self.n_slots, (data.shape, self.n_slots)
+        rec = _obs.active()
+        t0 = time.perf_counter() if rec is not None else 0.0
         ev: RoundEvent = self.scheduler.step()
         self._deploy_fresh(ev.joined)
 
@@ -255,6 +270,16 @@ class AsyncCodeServer:
                            n_joined=ev.joined.size, n_left=ev.left.size,
                            bytes_sent=sent, bytes_delivered=delivered,
                            n_delivered=n_del, merged_version=merged_version)
+        if rec is not None:
+            dur_ms = (time.perf_counter() - t0) * 1e3
+            rec.event("round", round=self.round,
+                      n_participants=int(ids.size),
+                      n_joined=int(ev.joined.size),
+                      n_left=int(ev.left.size), bytes_sent=sent,
+                      bytes_delivered=delivered,
+                      queue_depth=len(self.queue),
+                      merged_version=merged_version, dur_ms=dur_ms)
+            rec.metrics.observe("round_ms", dur_ms)
         self.round += 1
         return stats
 

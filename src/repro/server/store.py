@@ -29,6 +29,7 @@ time three rounds later.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -37,6 +38,7 @@ import numpy as np
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
+from repro.obs import recorder as _obs
 from repro.wire.payload import (DEFAULT_TASK, CodePayload, LabelsLike,
                                 normalize_labels)
 
@@ -140,6 +142,11 @@ class CodeStore:
         self._records.append(rec)
         self._seen_records += 1
         self._evict()
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.set_gauge("store_records", len(self._records))
+            ob.metrics.set_gauge("store_samples", self.n_samples)
+            ob.metrics.set_gauge("store_bytes", self.total_bytes)
         return rec
 
     def _evict(self) -> None:
@@ -267,10 +274,19 @@ class CodeStore:
         for i, r in recs:
             by_version.setdefault((r.version, r.packed.bits), []).append(i)
         feats_parts: Dict[int, jax.Array] = {}
+        ob = _obs.active()
         for (v, _), idxs in by_version.items():
             cb = registry.get(v) if registry is not None else None
+            t0 = time.perf_counter() if ob is not None else 0.0
             blocks = self._decode_group([self._records[i] for i in idxs],
                                         server, cb)
+            if ob is not None:
+                jax.block_until_ready(blocks)
+                dur_ms = (time.perf_counter() - t0) * 1e3
+                ob.event("decode", version=int(v), dur_ms=dur_ms,
+                         n_records=len(idxs),
+                         n_samples=int(sum(b.shape[0] for b in blocks)))
+                ob.metrics.observe(f"decode_ms/v{int(v)}", dur_ms)
             for i, f in zip(idxs, blocks):
                 feats_parts[i] = f
         feats = jnp.concatenate([feats_parts[i] for i, _ in recs], axis=0)

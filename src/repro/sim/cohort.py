@@ -51,14 +51,17 @@ Typical use::
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
+import jax
 import numpy as np
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
 from repro.core.ema import (MergeStats, merge_stats, merge_stats_add,
                             merge_stats_zero)
+from repro.obs import recorder as _obs
 from repro.wire.payload import CodePayload
 
 from .engine import SimEngine
@@ -158,7 +161,8 @@ class CohortEngine:
 
     def round(self, server: OC.ServerState, plan: CohortPlan,
               data_fn: DataFn, *, version: int = 0,
-              labels_fn: Optional[DataFn] = None) -> CohortRound:
+              labels_fn: Optional[DataFn] = None,
+              round_idx: Optional[int] = None) -> CohortRound:
         """Steps 2-5 for ``plan``'s population, one cohort at a time.
 
         ``data_fn(slot_ids)`` returns the cohort's local batches
@@ -166,11 +170,15 @@ class CohortEngine:
         client sees the SAME data under any cohort grouping (that is
         what makes grouping-invariance testable). Clients deploy fresh
         from ``server``; per-cohort payloads are stamped ``version``.
+        ``round_idx`` only labels the flight recorder's per-cohort
+        encode events (the computation never reads it).
         """
         K, M = server.params["codebook"].shape
         stats = merge_stats_zero(int(K), int(M))
         payloads: List[CodePayload] = []
         for cohort in plan.cohorts:
+            rec = _obs.active()
+            t0 = time.perf_counter() if rec is not None else 0.0
             clients = self.engine.init_clients(server, int(cohort.size))
             labels = labels_fn(cohort) if labels_fn is not None else None
             clients, payload = self.engine.round(
@@ -182,6 +190,14 @@ class CohortEngine:
                 np.asarray(clients.params["codebook"]),
                 np.asarray(clients.ema.counts)))
             payloads.append(payload)
+            if rec is not None:
+                jax.block_until_ready(payload.payload)
+                fields = {"cohort_size": int(cohort.size)}
+                if round_idx is not None:
+                    fields["round"] = int(round_idx)
+                rec.event("encode",
+                          dur_ms=(time.perf_counter() - t0) * 1e3,
+                          **fields, **_obs.payload_meta(payload))
         return CohortRound(payloads=tuple(payloads), stats=stats,
                            n_clients=plan.n_clients,
                            nbytes=sum(p.nbytes for p in payloads))
@@ -211,6 +227,8 @@ class CohortEngine:
         acc: Optional[MergeStats] = None
         history: List[TrafficRound] = []
         for _ in range(n_rounds):
+            rec = _obs.active()
+            t0 = time.perf_counter() if rec is not None else 0.0
             ev = scheduler.step()
             groups = {}
             for j, slot in enumerate(ev.participants):
@@ -220,7 +238,8 @@ class CohortEngine:
             for (delay, dropped), slots in sorted(groups.items()):
                 plan = CohortPlan.build(slots, cohort_size)
                 out = self.round(wire.state, plan, data_fn,
-                                 version=wire.version, labels_fn=labels_fn)
+                                 version=wire.version, labels_fn=labels_fn,
+                                 round_idx=ev.round)
                 for payload, cohort in zip(out.payloads, plan.cohorts):
                     sent += queue.send(payload, round=ev.round,
                                        delay=delay, dropped=dropped,
@@ -241,4 +260,14 @@ class CohortEngine:
                 round=ev.round, n_participants=int(ev.participants.size),
                 n_cohorts=n_cohorts, bytes_sent=sent,
                 bytes_delivered=delivered, merged_version=merged_version))
+            if rec is not None:
+                dur_ms = (time.perf_counter() - t0) * 1e3
+                rec.event("round", round=ev.round,
+                          n_participants=int(ev.participants.size),
+                          n_cohorts=n_cohorts, bytes_sent=sent,
+                          bytes_delivered=delivered,
+                          queue_depth=len(queue),
+                          merged_version=merged_version, dur_ms=dur_ms)
+                rec.metrics.observe("round_ms", dur_ms)
+                rec.metrics.set_gauge("uplink_queue_depth", len(queue))
         return history

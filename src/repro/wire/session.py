@@ -27,12 +27,14 @@ the PR-4 ``client_round_fused`` tail (same calls, same dispatch count);
 """
 from __future__ import annotations
 
+import time
 from typing import Optional, Tuple
 
 import jax
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
+from repro.obs import recorder as _obs
 
 from .payload import WIRE_VERSION, CodePayload, as_payload
 
@@ -159,10 +161,18 @@ class OctopusClient:
         the codebook version this client deployed from.
         """
         n_local = self.n_local_steps if finetune is None else int(finetune)
+        rec = _obs.active()
+        t0 = time.perf_counter() if rec is not None else 0.0
         self.state, payload = fused_round(
             self.state, self.cfg, batch, lr=self.lr, gamma=self.gamma,
             n_local_steps=n_local, refresh=refresh, version=self.version,
             labels=labels)
+        if rec is not None:
+            jax.block_until_ready(payload.payload)
+            rec.event("encode", dur_ms=(time.perf_counter() - t0) * 1e3,
+                      client_id=self.client_id, n_local_steps=n_local,
+                      refresh=bool(refresh), **_obs.payload_meta(payload))
+            rec.uplink(payload, client_id=self.client_id)
         return payload
 
     def transmit(self, batch, *, labels=None) -> CodePayload:
@@ -275,7 +285,13 @@ class OctopusServer:
             raise ValueError(f"payload packed under unknown codebook "
                              f"version {p.version}; registry holds "
                              f"0..{self.registry.latest}")
-        return self.store.add(p, client_ids=client_ids, round=round)
+        out = self.store.add(p, client_ids=client_ids, round=round)
+        rec = _obs.active()
+        if rec is not None:
+            rec.metrics.inc("uplinks_ingested")
+            rec.metrics.inc("bytes_ingested", p.nbytes)
+            rec.event("ingest", round=int(round), **_obs.payload_meta(p))
+        return out
 
     def features(self, *, version: Optional[int] = None):
         """Bulk decode of everything ingested, each version group against
@@ -290,9 +306,18 @@ class OctopusServer:
         snapshot it was packed under; merges the client axis. Legacy
         Transmissions are lifted to (C=1, ...) like ``ingest`` does."""
         p = self._coerce(payload)
+        rec = _obs.active()
+        t0 = time.perf_counter() if rec is not None else 0.0
         feats = OC.codes_to_features(None, self.cfg, p,
                                      codebook=self.registry.get(p.version))
-        return feats.reshape((-1,) + feats.shape[2:])
+        out = feats.reshape((-1,) + feats.shape[2:])
+        if rec is not None:
+            jax.block_until_ready(out)
+            dur_ms = (time.perf_counter() - t0) * 1e3
+            rec.event("decode", version=int(p.version), dur_ms=dur_ms,
+                      n_samples=int(out.shape[0]))
+            rec.metrics.observe(f"decode_ms/v{int(p.version)}", dur_ms)
+        return out
 
     # --------------------------------------------------------- Step 5 tail
 
@@ -304,6 +329,11 @@ class OctopusServer:
             self.state, client_codebooks, client_counts,
             client_versions=client_versions,
             staleness_decay=staleness_decay)
+        rec = _obs.active()
+        if rec is not None:
+            rec.metrics.inc("merges")
+            rec.event("merge", version=int(version),
+                      n_clients=int(len(client_counts)))
         return version
 
     def merge_clients(self, clients: OC.ClientState, **kw) -> int:
@@ -319,4 +349,9 @@ class OctopusServer:
         registers the new dictionary version. Bit-identical for any
         cohort partition/order of the same client set."""
         self.state = OC.server_merge_stats(self.state, stats)
-        return self.registry.register(self.state.params["codebook"])
+        version = self.registry.register(self.state.params["codebook"])
+        rec = _obs.active()
+        if rec is not None:
+            rec.metrics.inc("merges")
+            rec.event("merge", version=int(version), source="stats")
+        return version
