@@ -67,25 +67,42 @@ Paper targets:
 
 ``server`` CSV schema (rows ``server,<scenario>_<name>,<value>[,extra]``):
   rounds_per_sec       scheduler-driven rounds/sec through the runtime
-                       (post-compile; extra: participants per round)
+                       (post-compile)
+  participants         scheduled participants per round
   bytes_delivered      MEASURED packed bytes landed in the CodeStore
-                       (extra: bytes sent incl. dropped/in-flight)
+  bytes_sent           measured bytes incl. dropped / in-flight
   store_records        records buffered (extra: codebook versions held)
   acc_<task>           multi-task head accuracy from ONE store decode
   bytes_per_point      delivered bytes per content-accuracy point
   decode_amortization  measured end-to-end: per-task pipeline time
                        (re-decode store + fit each head) / shared
                        pipeline time (one decode, one multi-head fit)
+  decode_shared_pipeline_ms   wall ms of the shared pipeline leg
+continuous-ingest soak rows (``server,continuous_*`` / ``admission_*``):
+  continuous_uplinks_per_sec  HEADLINE: sustained uplinks/sec through
+                       the clocked ContinuousIngestService under churn,
+                       with backpressure and a rolling codebook
+                       migration engaged inside the timed window
+  continuous_ticks / continuous_participants   soak extent
+  admission_<verdict> / admission_<verdict>_bytes   admission-control
+                       histogram (accepted/migrated/deferred/rejected);
+                       refused bytes stay on the §2.8 ledger
+  continuous_bytes_delivered / continuous_bytes_refused   ledger split
+  continuous_store_partitions   (version, shard) ring buffers in use
+  continuous_migrations         rolling v_n -> v_{n+1} windows completed
+  continuous_decode_amortization   records decoded per fused dispatch
+                       by the background bulk-decode batches
 
 ``sim`` CSV schema (all rows ``sim,<name>,<value>[,<extra>]``):
   n_clients            population size advanced per jitted call
   round_ms             mean wall ms per engine round (Steps 2-5, jitted)
   clients_per_sec      n_clients * rounds / wall — the headline
                        scale metric (a Python client loop is the 1x
-                       baseline; extra column reports the measured
-                       speedup over that loop)
+                       baseline)
+  speedup_vs_loop      measured speedup over that Python client loop
   bytes_per_round      MEASURED size of the round's bit-packed uplink
-                       payload (extra column: bits per code)
+                       payload
+  bits_per_code        bits per packed code index
   bytes_per_round_int32  same indices as unpacked int32 (the naive
                        transmission the codec replaces)
   pack_ratio           bytes_per_round_int32 / bytes_per_round
@@ -94,12 +111,14 @@ Paper targets:
   ingest_probe_acc     Step-6 probe accuracy trained from the store
   cohort_parity_bitexact   cohort-streamed round == single full-population
                        round (merge stats + payload words + bytes, ALL
-                       array_equal; extra: population checked)
+                       array_equal)
+  cohort_parity_pop    population size the parity gate checked
   cohort_size          clients per streamed cohort (the compiled unit)
   pop<N>_clients_per_sec   clients/sec of a cohort-streamed population
-                       round at N simulated clients (extra: round wall s)
+                       round at N simulated clients
+  pop<N>_round_s       wall seconds of that streamed round
   pop<N>_bytes         Σ measured per-cohort uplink bytes of that round
-                       (extra: n_cohorts dispatched)
+  pop<N>_cohorts       cohorts dispatched in that round
   pop_max_clients      largest population in the scaling curve — the
                        ROADMAP 100k+ target rides here
 
@@ -476,10 +495,11 @@ def bench_sim(key):
     _emit("sim", "n_clients", n_clients)
     _emit("sim", "round_ms", f"{dt / rounds * 1e3:.1f}")
     _emit("sim", "clients_per_sec", f"{n_clients * rounds / dt:.1f}",
-          extra=f"{loop_dt / dt:.1f}x_vs_loop")
+          extra="python client loop is the 1x baseline")
+    _emit("sim", "speedup_vs_loop", f"{loop_dt / dt:.1f}")
     naive = packed.count * 4
-    _emit("sim", "bytes_per_round", packed.nbytes,
-          extra=f"{packed.bits}bits_per_code")
+    _emit("sim", "bytes_per_round", packed.nbytes)
+    _emit("sim", "bits_per_code", packed.bits)
     _emit("sim", "bytes_per_round_int32", naive)
     _emit("sim", "pack_ratio", f"{naive / packed.nbytes:.2f}")
 
@@ -539,8 +559,9 @@ def bench_sim(key):
                                  np.asarray(full.payloads[0].payload)))
     bytes_match = parts.nbytes == full.nbytes
     _emit("sim", "cohort_parity_bitexact", int(parity and bytes_match),
-          extra=f"pop{n_par}")
+          extra="streamed round vs one-shot population round")
     assert parity and bytes_match, "cohort parity broken — curve invalid"
+    _emit("sim", "cohort_parity_pop", n_par)
     _emit("sim", "cohort_size", cohort_size)
 
     for n_pop in pop_sizes:
@@ -550,10 +571,10 @@ def bench_sim(key):
         t0 = time.time()
         out = ceng.round(pserver, plan, data_fn)
         dt = time.time() - t0
-        _emit("sim", f"pop{n_pop}_clients_per_sec", f"{n_pop / dt:.0f}",
-              extra=f"{dt:.2f}s_round")
-        _emit("sim", f"pop{n_pop}_bytes", out.nbytes,
-              extra=f"{plan.n_cohorts}cohorts")
+        _emit("sim", f"pop{n_pop}_clients_per_sec", f"{n_pop / dt:.0f}")
+        _emit("sim", f"pop{n_pop}_round_s", f"{dt:.2f}")
+        _emit("sim", f"pop{n_pop}_bytes", out.nbytes)
+        _emit("sim", f"pop{n_pop}_cohorts", plan.n_cohorts)
     _emit("sim", "pop_max_clients", pop_sizes[-1])
 
 
@@ -589,10 +610,11 @@ def bench_server(key):
             name, sc, engine=engine, server=server, stacked=stacked,
             slots=n_slots, rounds=rounds, local_batch=local_b,
             probe_steps=C.PROBE_STEPS, key=key, index=i, verbose=False)
-        _emit("server", f"{name}_rounds_per_sec", f"{rps:.2f}",
-              extra=f"{srv.scheduler.k}participants")
-        _emit("server", f"{name}_bytes_delivered", srv.bytes_delivered,
-              extra=f"sent={srv.bytes_sent}")
+        _emit("server", f"{name}_rounds_per_sec", f"{rps:.2f}")
+        _emit("server", f"{name}_participants", srv.scheduler.k)
+        _emit("server", f"{name}_bytes_delivered", srv.bytes_delivered)
+        _emit("server", f"{name}_bytes_sent", srv.bytes_sent,
+              extra="incl. dropped / in-flight")
         _emit("server", f"{name}_store_records", len(srv.store),
               extra="v" + "+".join(map(str, srv.store.versions)))
         for t, a in acc.items():
@@ -623,7 +645,80 @@ def bench_server(key):
         tr.fit(key, feats, labels, steps=steps, batch=64)
     t_per_task = time.time() - t0
     _emit("server", "decode_amortization", f"{t_per_task / t_shared:.2f}",
-          extra=f"{t_shared * 1e3:.0f}ms_shared_pipeline")
+          extra="per-task pipeline time / shared pipeline time")
+    _emit("server", "decode_shared_pipeline_ms", f"{t_shared * 1e3:.0f}")
+
+    # ---- continuous-ingest soak: the headline sustained-throughput row.
+    # Open-ended Poisson traffic under churn drives the clocked service
+    # through a sharded store with a deliberately tight admission window
+    # (small queue capacity), so backpressure verdicts and a rolling
+    # codebook migration are part of the measured steady state — the
+    # uplinks/sec figure prices admission control in, not around.
+    import numpy as np
+
+    from repro.server import (BulkDecodePolicy, ContinuousIngestService,
+                              RoundScheduler, SchedulerConfig,
+                              ShardedCodeStore)
+    from repro.sim import CohortEngine
+    from repro.wire import OctopusServer
+
+    n_ticks = 6 if C.QUICK else 20
+    ccfg = DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=64, n_res_blocks=1)
+    cstate = OC.server_init(key, ccfg)
+    srv = OctopusServer(cstate, ccfg,
+                        store=ShardedCodeStore(ccfg, n_shards=4,
+                                               capacity_samples=4096))
+    svc = ContinuousIngestService(
+        srv, capacity=2, defer_depth=1,
+        decode_policy=BulkDecodePolicy(min_batch=1, max_batch=64))
+    sched = RoundScheduler(
+        n_slots * 2,
+        SchedulerConfig(rate=float(n_slots), straggler_prob=0.4,
+                        max_delay=2, drop_prob=0.1, leave_prob=0.2,
+                        join_prob=0.5),
+        key=jax.random.fold_in(key, 99))
+    ceng = CohortEngine(ccfg, gamma=0.95, n_local_steps=0)
+    pool = jax.block_until_ready(
+        jax.random.normal(key, (256, 1, 8, 8, 3)))
+    data_fn = lambda ids: pool[np.asarray(ids) % pool.shape[0]]
+
+    # warm the per-cohort compile outside the timed window
+    ceng.run_continuous(svc, sched, data_fn, cohort_size=4, n_ticks=1)
+    t0 = time.time()
+    hist = ceng.run_continuous(svc, sched, data_fn, cohort_size=4,
+                               n_ticks=n_ticks, merge_every=3,
+                               migration_policy="keep")
+    svc.drain()
+    dt = max(time.time() - t0, 1e-9)
+
+    n_up = sum(svc.verdicts.values())
+    _emit("server", "continuous_uplinks_per_sec", f"{n_up / dt:.1f}",
+          extra="sustained, churn + backpressure + rolling migration")
+    _emit("server", "continuous_ticks", n_ticks)
+    _emit("server", "continuous_participants",
+          sum(t.n_participants for t in hist))
+    for v in ("accepted", "migrated", "deferred", "rejected"):
+        _emit("server", f"admission_{v}", svc.verdicts.get(v, 0))
+        _emit("server", f"admission_{v}_bytes", svc.verdict_bytes.get(v, 0))
+    q = svc.queue
+    assert q.bytes_sent == (q.bytes_delivered + q.bytes_dropped +
+                            q.bytes_rejected + q.bytes_in_flight), \
+        "uplink byte ledger leaked under backpressure"
+    backpressured = (svc.verdicts.get("deferred", 0)
+                     + svc.verdicts.get("rejected", 0))
+    assert backpressured >= 1, \
+        "soak never engaged backpressure — tighten capacity"
+    _emit("server", "continuous_bytes_delivered", q.bytes_delivered)
+    _emit("server", "continuous_bytes_refused",
+          q.bytes_rejected + q.bytes_dropped,
+          extra="still on the §2.8 ledger")
+    _emit("server", "continuous_store_partitions",
+          len(srv.store.partitions))
+    _emit("server", "continuous_migrations", srv.registry.latest)
+    _emit("server", "continuous_decode_amortization",
+          f"{svc.decode_amortization:.2f}",
+          extra="records decoded per fused dispatch")
 
 
 # ---------------------------------------------------------------- decode

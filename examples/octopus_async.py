@@ -1,21 +1,24 @@
-"""Asynchronous code-server runtime end-to-end (Step 6 as a subsystem).
+"""Continuous-ingest server runtime end-to-end (Step 6 as a service).
 
-Successor to examples/federated_sync.py: instead of a hand-rolled loop
-over one engine call, the server side is the repro.server runtime — a
-RoundScheduler decides who participates, straggles, drops out or churns;
-every uplink is a ``repro.wire.CodePayload`` carrying its OWN codebook
-version and label channels, delivered through the single wire endpoint
-(``OctopusServer.ingest``) into a versioned CodeStore; the
-CodebookRegistry pins every Step 5 merge so late payloads decode against
-the dictionary they were packed under; and a MultiTaskTrainer fits TWO
-downstream heads (content classifier + identity adversary, the paper's
-Fig. 5 pairing) from ONE bulk decode of the store.
+Successor to the round-quantized async example: the server side is now
+the clocked ``ContinuousIngestService`` — a Poisson ``RoundScheduler``
+emits open-ended client arrivals (stragglers, radio drops, join/leave
+churn); every uplink is a ``repro.wire.CodePayload`` offered through
+ADMISSION CONTROL, so each one gets a structured verdict (accepted /
+migrated / deferred / rejected) instead of silently landing; admitted
+payloads flow through a bounded UplinkQueue into a
+``(codebook version, client shard)``-partitioned ShardedCodeStore with
+ring-buffer eviction; Step 5 merges happen mid-stream and open ROLLING
+MIGRATION windows (``v_n -> v_{n+1}``), so payloads of both versions
+ingest concurrently while the CodebookRegistry keeps every snapshot
+pinned for bit-exact decode; background bulk-decode batches amortize
+the packed->feature kernel across records; and a MultiTaskTrainer fits
+TWO downstream heads (content classifier + identity adversary, the
+paper's Fig. 5 pairing) from ONE decode of the surviving store.
 
-Three scheduler scenarios, same jitted population round:
-  full     every slot participates, no failures
-  partial  25 % participation + geometric stragglers + dropped uplinks
-  churn    join/leave churn with merges every 2 rounds -> stragglers and
-           re-joiners carry codebook-version lag into the store
+Set ``OCTOPUS_TRACE=trace.jsonl`` to flight-record the run, then audit
+it (byte conservation across refusals included) with
+``python -m repro.obs.report trace.jsonl --check``.
 
     PYTHONPATH=src python examples/octopus_async.py
 """
@@ -24,18 +27,23 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
-from repro.data import make_images, partition_stacked, stacked_batches
-from repro.server import (STANDARD_SCENARIOS, AsyncCodeServer,
-                          MultiTaskTrainer, RoundScheduler, TaskSpec)
-from repro.sim import SimEngine
+from repro.data import make_images, partition_stacked
+from repro.server import (BulkDecodePolicy, ContinuousIngestService,
+                          MultiTaskTrainer, RoundScheduler, SchedulerConfig,
+                          ShardedCodeStore, TaskSpec)
+from repro.sim import CohortEngine
+from repro.wire import OctopusServer
+
+rec = obs.install_from_env()                 # OCTOPUS_TRACE=... to record
 
 key = jax.random.PRNGKey(0)
 cfg = DVQAEConfig(kind="image", in_channels=3, hidden=16, latent_dim=16,
                   codebook_size=64, n_res_blocks=1)
 
-N_SLOTS, LOCAL_B, ROUNDS = 8, 8, 8
+N_SLOTS, COHORT, TICKS = 16, 4, 24
 data = make_images(key, 640, size=16, n_identities=4)
 
 # Step 1: pretrain the global DVQ-AE on (public) data
@@ -44,55 +52,92 @@ server0, out = OC.server_pretrain(key, OC.server_init(key, cfg), cfg,
 print(f"pretrain recon loss: {float(out.recon_loss):.4f}")
 
 stacked = partition_stacked(data, N_SLOTS, regime="skewed", skew=0.2)
-engine = SimEngine(cfg, lr=1e-4, gamma=0.95)          # shared jit cache
 
-for name, sc in STANDARD_SCENARIOS.items():
-    sched = RoundScheduler(N_SLOTS, sc.sched, key=jax.random.PRNGKey(7))
-    srv = AsyncCodeServer(engine, server0, sched,
-                          merge_every=sc.merge_every,
-                          staleness_decay=0.5)
-    batches = stacked_batches(stacked, LOCAL_B, epochs=ROUNDS, seed=3)
 
-    # reference features captured the round each payload LANDS (fused
-    # wire decode against its own version) — re-decoded at the end via
-    # the index path to show the store stays bit-exact across merges
-    refs = []
-    t0, timed = time.time(), 0.0
-    for r, b in zip(range(ROUNDS), batches):
-        if r == 1:
-            t0 = time.time()            # round 0 pays compilation
-        stats = srv.run_round(b.x, labels={"content": b.content,
-                                           "style": b.style})
-        if r >= 1:
-            timed = time.time() - t0
-        for rec in srv.store.records[len(refs):]:
-            refs.append((rec.version,
-                         np.asarray(srv.wire.decode(rec.packed))))
+def data_fn(ids):
+    return stacked.x[np.asarray(ids) % N_SLOTS, :COHORT]
 
-    rps = (ROUNDS - 1) / max(timed, 1e-9)
-    print(f"\n[{name}] {ROUNDS} rounds, {rps:.2f} rounds/sec (post-compile)")
-    print(f"[{name}] uplink bytes: sent={srv.bytes_sent} "
-          f"delivered={srv.bytes_delivered} dropped={srv.bytes_dropped} "
-          f"in_flight={srv.in_flight}")
-    print(f"[{name}] store: {len(srv.store)} records, "
-          f"{srv.store.n_samples} samples, versions={srv.store.versions}, "
-          f"merges={srv.n_merges} (registry latest v{srv.registry.latest})")
 
-    # version-correct decode stays bit-exact after the run's merges
-    for (version, ref), rec in zip(refs, srv.store.records):
-        codes = rec.packed.unpack().reshape((-1,) + rec.packed.shape[2:])
-        now = OC.codes_to_features(None, cfg, codes,
-                                   codebook=srv.registry.get(version))
-        assert np.array_equal(np.asarray(now), ref), (name, version)
-    print(f"[{name}] bit-exact decode for versions "
-          f"{sorted(set(v for v, _ in refs))} after {srv.n_merges} merges: OK")
+def labels_fn(ids):
+    sel = np.asarray(ids) % N_SLOTS
+    return {"content": stacked.content[sel, :COHORT],
+            "style": stacked.style[sel, :COHORT]}
 
-    # Step 6: TWO downstream heads from ONE decode of the shared store
-    feats, labels = srv.dataset()
-    tasks = [TaskSpec("content", int(stacked.content.max()) + 1),
-             TaskSpec("style", int(stacked.style.max()) + 1)]
-    trainer = MultiTaskTrainer(key, tasks, int(feats[0].size))
-    trainer.fit(key, feats, labels, steps=150, batch=64)
-    acc = trainer.accuracy(feats, labels)
-    print(f"[{name}] multi-task from one decode: "
-          + ", ".join(f"{t}={a:.3f}" for t, a in acc.items()))
+
+# the service: a deliberately tight queue so churny bursts actually hit
+# backpressure, a sharded store bounding memory per (version, shard),
+# and a bulk-decode policy amortizing the fused decode kernel
+srv = OctopusServer(server0, cfg,
+                    store=ShardedCodeStore(cfg, n_shards=4,
+                                           capacity_samples=2048))
+service = ContinuousIngestService(
+    srv, capacity=3, defer_depth=2,
+    decode_policy=BulkDecodePolicy(min_batch=2, max_batch=64,
+                                   interval_ticks=2))
+sched = RoundScheduler(
+    N_SLOTS,
+    SchedulerConfig(rate=6.0, straggler_prob=0.4, max_delay=2,
+                    drop_prob=0.1, leave_prob=0.2, join_prob=0.5),
+    key=jax.random.PRNGKey(7))
+engine = CohortEngine(cfg, gamma=0.95, n_local_steps=0)
+
+# warm the per-cohort compile, then run the soak: merges every 6 ticks,
+# each one opening a rolling keep-policy migration window
+engine.run_continuous(service, sched, data_fn, cohort_size=COHORT,
+                      n_ticks=1, labels_fn=labels_fn)
+t0 = time.time()
+hist = engine.run_continuous(service, sched, data_fn, cohort_size=COHORT,
+                             n_ticks=TICKS, merge_every=6,
+                             labels_fn=labels_fn, migration_policy="keep")
+service.drain()
+dt = max(time.time() - t0, 1e-9)
+
+n_up = sum(service.verdicts.values())
+print(f"\n{TICKS} ticks, {sum(t.n_participants for t in hist)} arrivals, "
+      f"{n_up / dt:.1f} uplinks/sec sustained (post-compile)")
+print("admission verdicts: "
+      + ", ".join(f"{v}={service.verdicts.get(v, 0)}"
+                  for v in ("accepted", "migrated", "deferred", "rejected")))
+
+q = service.queue
+print(f"uplink bytes: sent={q.bytes_sent} delivered={q.bytes_delivered} "
+      f"dropped={q.bytes_dropped} rejected={q.bytes_rejected} "
+      f"in_flight={q.bytes_in_flight}")
+assert q.bytes_sent == (q.bytes_delivered + q.bytes_dropped
+                        + q.bytes_rejected + q.bytes_in_flight)
+print("byte ledger conserved across refusals: OK")
+
+store = srv.store
+print(f"store: {len(store)} records / {store.n_samples} samples across "
+      f"{len(store.partitions)} (version, shard) partitions, "
+      f"evicted={store.evicted_records} records "
+      f"({store.evicted_bytes}B stay ledgered)")
+print(f"registry: latest v{srv.registry.latest}, "
+      f"{srv.registry.latest} rolling migrations completed, "
+      f"decode amortization {service.decode_amortization:.2f} "
+      f"records/dispatch")
+
+# every surviving record still decodes against the snapshot it was
+# packed under — bit-exact across all the mid-stream merges
+for r in store.records:
+    now = OC.codes_to_features(None, cfg, r.packed,
+                               codebook=srv.registry.get(r.version))
+    ref = srv.decode(r.packed)
+    assert np.array_equal(np.asarray(now).reshape(np.asarray(ref).shape),
+                          np.asarray(ref)), r.version
+print(f"bit-exact decode for versions {store.versions}: OK")
+
+# Step 6: TWO downstream heads from ONE decode of the shared store
+feats, labels = srv.features()
+tasks = [TaskSpec("content", int(stacked.content.max()) + 1),
+         TaskSpec("style", int(stacked.style.max()) + 1)]
+trainer = MultiTaskTrainer(key, tasks, int(feats[0].size))
+trainer.fit(key, feats, labels, steps=150, batch=64)
+acc = trainer.accuracy(feats, labels)
+print("multi-task from one decode: "
+      + ", ".join(f"{t}={a:.3f}" for t, a in acc.items()))
+
+if rec is not None:
+    obs.uninstall()
+    rec.close()
+    print(f"flight recording written to {rec.path}")

@@ -431,8 +431,8 @@ def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
     """Dequantize gathered codes into downstream-task features.
 
     ``indices`` is either an int32 code array OR a packed carrier — a
-    ``repro.wire.CodePayload`` (or legacy ``sim.engine.PackedCodes`` /
-    packed ``Transmission``, coerced via ``repro.wire.as_payload``). The
+    ``repro.wire.CodePayload`` (or a legacy packed ``Transmission``,
+    coerced via ``repro.wire.as_payload``). The
     carrier takes the fused decode path (repro.wire.codec, ONE
     ops.decode_codes dispatch): straight from the uint32 word stream to
     feature rows, never materialising the index or gathered-atom

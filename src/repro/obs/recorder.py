@@ -18,6 +18,11 @@ per line, one line per event, covering the whole uplink life cycle —
   ``ingest``   one payload landing in the server's versioned store
   ``decode``   one fused decode dispatch (per codebook-version group)
   ``merge``    one Step-5 dictionary merge registering a new version
+  ``admission`` one admission verdict at the continuous-ingest door
+               (accepted / migrated / deferred / rejected + reason +
+               queue depth) — refusals stay §2.8-witnessed
+  ``migration`` a rolling codebook-upgrade window opening or closing
+               (src / dst versions, policy, leftover src records)
 
 Zero-overhead default: no recorder is installed unless the process opts
 in (:func:`install` / :func:`recording` / the ``OCTOPUS_TRACE`` env
@@ -41,7 +46,8 @@ from typing import IO, Any, Dict, Optional, Union
 
 from .metrics import MetricsRegistry
 
-EVENT_KINDS = ("round", "encode", "uplink", "ingest", "decode", "merge")
+EVENT_KINDS = ("round", "encode", "uplink", "ingest", "decode", "merge",
+               "admission", "migration")
 
 #: uplink/ingest events carry EXACTLY this payload metadata — the §2.5
 #: boundary of the observability plane (no words, no labels, no latents)

@@ -18,6 +18,13 @@ measured ``nbytes`` must equal the round's ``bytes_sent`` ledger (which
 the traffic drivers compute from ``CodePayload.nbytes`` as payloads hit
 the queue) — byte-exact, or the exit code is non-zero. A trace with no
 uplink events also fails the check: an empty recorder is not evidence.
+
+Continuous-ingest traces (``admission`` events present, every round
+event carrying ``bytes_in_flight``) additionally get the conservation
+check: Σ uplink bytes == Σ ingested bytes + Σ admission-REJECTED bytes
++ the final tick's bytes still in flight — i.e. every refused or
+deferred payload stays on the ledger, backpressure and migration
+included.
 """
 from __future__ import annotations
 
@@ -61,6 +68,11 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
     decode: Dict[Any, Dict[str, float]] = defaultdict(
         lambda: {"count": 0, "total_ms": 0.0, "n_samples": 0})
     merges: List[Any] = []
+    admission = {"n": 0, "bytes": 0,
+                 "verdicts": defaultdict(int),
+                 "verdict_bytes": defaultdict(int),
+                 "reasons": defaultdict(int)}
+    migrations: List[Dict[str, Any]] = []
     for ev in events:
         kind = ev.get("kind", "?")
         kinds[kind] += 1
@@ -86,6 +98,20 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
             d["n_samples"] += int(ev.get("n_samples", 0))
         elif kind == "merge":
             merges.append(ev.get("version"))
+        elif kind == "admission":
+            admission["n"] += 1
+            nb = int(ev.get("nbytes", 0))
+            admission["bytes"] += nb
+            v = str(ev.get("verdict", "?"))
+            admission["verdicts"][v] += 1
+            admission["verdict_bytes"][v] += nb
+            if ev.get("reason"):
+                admission["reasons"][str(ev["reason"])] += 1
+        elif kind == "migration":
+            migrations.append({k: ev.get(k) for k in
+                               ("phase", "src", "dst", "policy",
+                                "src_records", "src_bytes", "n_reencoded")
+                               if k in ev})
 
     round_rows = []
     for ev in sorted(rounds, key=lambda e: e.get("round", -1)):
@@ -102,6 +128,7 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
             "bytes_sent": ev.get("bytes_sent"),
             "bytes_delivered": ev.get("bytes_delivered"),
             "queue_depth": ev.get("queue_depth"),
+            "bytes_in_flight": ev.get("bytes_in_flight"),
             "merged_version": ev.get("merged_version"),
             "dur_ms": dur_ms,
             "uplinks_per_sec": (u["n"] / (dur_ms / 1e3)) if dur_ms else None,
@@ -112,7 +139,12 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
             "ingest": ingest, "rounds": round_rows,
             "decode": {str(k): v for k, v in sorted(
                 decode.items(), key=lambda kv: str(kv[0]))},
-            "merges": merges}
+            "merges": merges,
+            "admission": {"n": admission["n"], "bytes": admission["bytes"],
+                          "verdicts": dict(admission["verdicts"]),
+                          "verdict_bytes": dict(admission["verdict_bytes"]),
+                          "reasons": dict(admission["reasons"])},
+            "migrations": migrations}
 
 
 def check_bytes(summary: Dict[str, Any]) -> List[str]:
@@ -131,6 +163,21 @@ def check_bytes(summary: Dict[str, Any]) -> List[str]:
                 f"round {row['round']}: uplink events sum to "
                 f"{row['uplink_bytes']} B but the round ledger sent "
                 f"{sent} B")
+    # continuous-ingest conservation: every byte that hit the wire is
+    # either in the store, refused-and-witnessed, or still in flight
+    adm = summary.get("admission", {"n": 0})
+    rows = summary["rounds"]
+    if adm["n"] and rows and all(r.get("bytes_in_flight") is not None
+                                 for r in rows):
+        rejected = adm["verdict_bytes"].get("rejected", 0)
+        in_flight = int(rows[-1]["bytes_in_flight"])
+        lhs = int(summary["uplinks"]["bytes"])
+        rhs = int(summary["ingest"]["bytes"]) + int(rejected) + in_flight
+        if lhs != rhs:
+            problems.append(
+                f"conservation: {lhs} B uplinked != {summary['ingest']['bytes']} B "
+                f"ingested + {rejected} B rejected + {in_flight} B in "
+                f"flight (= {rhs} B)")
     return problems
 
 
@@ -171,6 +218,23 @@ def bench_rows(summary: Dict[str, Any]) -> List[Dict[str, Any]]:
         rows.append({"name": f"decode_v{v}_ms_mean", "value": d["mean_ms"],
                      "extra": f"{d['count']}dispatches_"
                               f"{d['n_samples']}samples"})
+    adm = summary.get("admission", {"n": 0})
+    if adm["n"]:
+        for v in sorted(adm["verdicts"]):
+            rows.append({"name": f"admission_{v}",
+                         "value": adm["verdicts"][v], "extra": ""})
+            rows.append({"name": f"admission_{v}_bytes",
+                         "value": adm["verdict_bytes"].get(v, 0),
+                         "extra": "stays on the §2.8 ledger"})
+        for k in sorted(adm["reasons"]):
+            rows.append({"name": f"admission_reason_{k}",
+                         "value": adm["reasons"][k], "extra": ""})
+    if summary.get("migrations"):
+        rows.append({"name": "migrations",
+                     "value": len(summary["migrations"]),
+                     "extra": "+".join(
+                         f"{m.get('phase')}:{m.get('src')}->{m.get('dst')}"
+                         for m in summary["migrations"])})
     return rows
 
 
@@ -202,6 +266,22 @@ def render(summary: Dict[str, Any]) -> str:
     if summary["merges"]:
         out.append("merges: " + ", ".join(f"v{m}" for m in
                                           summary["merges"]))
+    adm = summary.get("admission", {"n": 0})
+    if adm["n"]:
+        out.append("admission: " + "  ".join(
+            f"{v}={adm['verdicts'][v]} ({adm['verdict_bytes'].get(v, 0)} B)"
+            for v in sorted(adm["verdicts"])))
+        if adm["reasons"]:
+            out.append("  reasons: " + "  ".join(
+                f"{k}={n}" for k, n in sorted(adm["reasons"].items())))
+    for m in summary.get("migrations", []):
+        line = (f"migration {m.get('phase')}: v{m.get('src')} -> "
+                f"v{m.get('dst')} ({m.get('policy')})")
+        if m.get("phase") == "complete":
+            line += (f", {m.get('src_records')} src records "
+                     f"{m.get('src_bytes')} B left, "
+                     f"{m.get('n_reencoded')} re-encoded")
+        out.append(line)
     return "\n".join(out)
 
 

@@ -1,28 +1,40 @@
-"""Asynchronous code-server runtime (OCTOPUS Step 6 at production scale).
+"""Continuous-ingest code-server runtime (OCTOPUS Step 6 at production
+scale).
 
-  store      — CodeStore: capacity-bounded, versioned, lazily-decoded
-               store of packed transmissions (supersedes sim.IngestBuffer)
+  store      — CodeStore: one capacity-bounded, versioned, lazily-decoded
+               ring buffer of packed transmissions; ShardedCodeStore:
+               independent ring buffers per (codebook version, client
+               shard) partition
   registry   — CodebookRegistry: immutable per-merge dictionary snapshots
-               + staleness-weighted Step 5 merge
+               + staleness-weighted Step 5 merge + rolling
+               MigrationWindow (keep / retire / reencode policies)
   scheduler  — RoundScheduler: partial participation, stragglers, drops,
-               client churn — deterministic under one PRNG key
+               client churn, open-ended Poisson arrivals — deterministic
+               under one PRNG key
   multitask  — MultiTaskTrainer: N downstream heads from ONE bulk decode
-  runtime    — AsyncCodeServer: ties it all to sim.SimEngine per round,
-               ingesting every uplink through the unified wire endpoint
-               (repro.wire.OctopusServer / CodePayload)
+  runtime    — ContinuousIngestService: clocked, admission-controlled
+               ingest (backpressure verdicts, background bulk decode
+               under a BulkDecodePolicy); AsyncCodeServer remains the
+               round-quantized shim over it, one tick per round
 """
 from repro.wire.payload import CodePayload
-from repro.wire.session import OctopusServer
+from repro.wire.session import AdmissionResult, OctopusServer
 
 from .multitask import MultiTaskTrainer, TaskSpec
-from .registry import CodebookRegistry
-from .runtime import AsyncCodeServer, RoundStats, UplinkQueue
+from .registry import (MIGRATION_POLICIES, CodebookRegistry,
+                       MigrationWindow)
+from .runtime import (AsyncCodeServer, BulkDecodePolicy,
+                      ContinuousIngestService, RoundStats, TickStats,
+                      UplinkQueue)
 from .scheduler import (STANDARD_SCENARIOS, DiurnalProfile, RoundEvent,
                         RoundScheduler, Scenario, SchedulerConfig)
-from .store import CodeStore, StoreRecord
+from .store import CodeStore, ShardedCodeStore, StoreRecord
 
-__all__ = ["AsyncCodeServer", "CodePayload", "CodeStore",
-           "CodebookRegistry", "DiurnalProfile", "MultiTaskTrainer",
+__all__ = ["AdmissionResult", "AsyncCodeServer", "BulkDecodePolicy",
+           "CodePayload", "CodeStore", "CodebookRegistry",
+           "ContinuousIngestService", "DiurnalProfile",
+           "MIGRATION_POLICIES", "MigrationWindow", "MultiTaskTrainer",
            "OctopusServer", "RoundEvent", "RoundScheduler", "RoundStats",
            "STANDARD_SCENARIOS", "Scenario", "SchedulerConfig",
-           "StoreRecord", "TaskSpec", "UplinkQueue"]
+           "ShardedCodeStore", "StoreRecord", "TaskSpec", "TickStats",
+           "UplinkQueue"]

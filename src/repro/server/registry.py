@@ -12,15 +12,37 @@ pack time has moved.
 snapshot keyed by a monotonically increasing version, so the code store
 can decode each transmission against exactly the table it was packed
 under, bit-for-bit, no matter how many merges happened since.
+
+A rolling upgrade is modelled as a ``MigrationWindow``: while a
+``v_src -> v_dst`` window is open, payloads of BOTH versions ingest
+concurrently (src-version payloads get a ``migrated`` admission
+verdict); when the window closes, src-version records are kept,
+retired, or lazily re-encoded under the window's policy, and the src
+version may be retired so new src-version uplinks are rejected at
+admission. Snapshots are NEVER deleted — a retired version still
+decodes bit-exactly for anything already stored under it.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, NamedTuple, Optional, Set
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import octopus as OC
+
+#: how a closing migration window disposes of src-version records:
+#:   keep     — records stay, still decoded against their pinned snapshot
+#:   retire   — records evicted (ledgered), src version refused at the door
+#:   reencode — records transcoded to the dst codebook, then src retired
+MIGRATION_POLICIES = ("keep", "retire", "reencode")
+
+
+class MigrationWindow(NamedTuple):
+    """An open ``src -> dst`` rolling-upgrade window."""
+    src: int
+    dst: int
+    policy: str
 
 
 class CodebookRegistry:
@@ -29,6 +51,8 @@ class CodebookRegistry:
     def __init__(self, codebook: jax.Array):
         self._versions: Dict[int, jax.Array] = {0: jnp.asarray(codebook)}
         self.latest = 0
+        self.migration: Optional[MigrationWindow] = None
+        self._retired: Set[int] = set()
 
     def __len__(self) -> int:
         return len(self._versions)
@@ -56,6 +80,60 @@ class CodebookRegistry:
         deployed or any payload was packed under it."""
         self._versions[self.latest] = jnp.asarray(codebook)
         return self.latest
+
+    # --------------------------------------------------------- migration
+
+    @property
+    def retired(self) -> tuple:
+        return tuple(sorted(self._retired))
+
+    def is_retired(self, version: int) -> bool:
+        return int(version) in self._retired
+
+    def begin_migration(self, *, src: Optional[int] = None,
+                        dst: Optional[int] = None,
+                        policy: str = "keep") -> MigrationWindow:
+        """Open a rolling ``src -> dst`` upgrade window.
+
+        ``dst`` defaults to the latest version, ``src`` to ``dst - 1``.
+        While the window is open, src-version payloads still ingest
+        (flagged ``migrated``); the window's ``policy`` decides what
+        happens to them when the window closes.
+        """
+        if self.migration is not None:
+            raise ValueError(
+                f"migration window {self.migration.src}->"
+                f"{self.migration.dst} is still open")
+        if policy not in MIGRATION_POLICIES:
+            raise ValueError(f"policy must be one of {MIGRATION_POLICIES}, "
+                             f"got {policy!r}")
+        dst = self.latest if dst is None else int(dst)
+        src = dst - 1 if src is None else int(src)
+        if src not in self._versions or dst not in self._versions:
+            raise KeyError(f"migration {src}->{dst}: both versions must be "
+                           f"registered (have {sorted(self._versions)})")
+        if src == dst:
+            raise ValueError(f"migration src and dst are both {src}")
+        if self.is_retired(src):
+            raise ValueError(f"version {src} is already retired")
+        self.migration = MigrationWindow(src=src, dst=dst, policy=policy)
+        return self.migration
+
+    def close_migration(self) -> MigrationWindow:
+        if self.migration is None:
+            raise ValueError("no migration window is open")
+        win, self.migration = self.migration, None
+        return win
+
+    def retire(self, version: int) -> None:
+        """Refuse future uplinks packed under ``version``. The snapshot
+        stays pinned — already-stored payloads keep decoding bit-exactly."""
+        version = int(version)
+        if version == self.latest:
+            raise ValueError(f"cannot retire the latest version {version}")
+        if version not in self._versions:
+            raise KeyError(version)
+        self._retired.add(version)
 
     # ----------------------------------------------------------- merging
 

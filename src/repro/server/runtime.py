@@ -75,6 +75,7 @@ class UplinkQueue:
         self.bytes_sent = 0
         self.bytes_delivered = 0
         self.bytes_dropped = 0
+        self.bytes_rejected = 0
 
     def send(self, packed: CodePayload, *, round: int, delay: int = 0,
              dropped: bool = False, client_ids=None) -> int:
@@ -97,16 +98,53 @@ class UplinkQueue:
             rec.metrics.set_gauge("uplink_queue_depth", len(self._pending))
         return n
 
-    def deliver(self, wire: OctopusServer, round: int) -> tuple:
-        """Ingest every due payload; returns (nbytes, n_payloads)."""
+    def charge(self, packed: CodePayload, *, round: int, reason: str = "",
+               client_ids=None) -> int:
+        """Ledger a REFUSED payload that never queues (§2.8: refusals
+        still burned their uplink bytes). Returns its measured nbytes."""
+        n = packed.nbytes
+        self.bytes_sent += n
+        self.bytes_rejected += n
+        rec = _obs.active()
+        if rec is not None:
+            rec.uplink(packed, round=int(round), rejected=True,
+                       reason=reason,
+                       n_clients=(len(client_ids)
+                                  if client_ids is not None else None))
+        return n
+
+    def deliver(self, wire: OctopusServer, round: int, *,
+                results: Optional[list] = None) -> tuple:
+        """Ingest every due payload; returns (nbytes, n_payloads).
+
+        ``results`` (a list) collects one :class:`AdmissionResult` per
+        delivery attempt; a payload the wire endpoint REJECTS (retired
+        version, wire violation) moves its bytes to ``bytes_rejected``
+        and is not counted delivered.
+        """
         delivered, n_del = 0, 0
         still: List[PendingUplink] = []
         for p in self._pending:
             if p.arrival_round <= round:
-                wire.ingest(p.packed, client_ids=p.client_ids,
-                            round=p.sent_round)
-                delivered += p.packed.nbytes
-                n_del += 1
+                res = wire.ingest(p.packed, client_ids=p.client_ids,
+                                  round=p.sent_round)
+                if results is not None:
+                    results.append(res)
+                if res.ok:
+                    delivered += p.packed.nbytes
+                    n_del += 1
+                else:
+                    # admitted earlier, refused at the door now (e.g. its
+                    # version was retired while in flight) — witness the
+                    # late rejection so byte conservation stays checkable
+                    self.bytes_rejected += p.packed.nbytes
+                    late = _obs.active()
+                    if late is not None:
+                        late.metrics.inc("admission_rejected")
+                        late.event("admission", round=int(round),
+                                   verdict="rejected", reason=res.reason,
+                                   queue_depth=len(self._pending),
+                                   nbytes=p.packed.nbytes)
             else:
                 still.append(p)
         self._pending = still
@@ -135,8 +173,239 @@ class RoundStats(NamedTuple):
     merged_version: Optional[int]   # registry version if this round merged
 
 
+class BulkDecodePolicy(NamedTuple):
+    """When the background bulk decoder fires and how much it batches.
+
+    The PR-7 flight recorder measured ``decode_amortization = 1.32``
+    records per dispatch for the round-driven runtime; this grows that
+    seed into a tunable policy: every ``interval_ticks`` service ticks,
+    if at least ``min_batch`` freshly-stored records are waiting, decode
+    up to ``max_batch`` of them in as few fused dispatches as their
+    (version, bits) grouping allows. ``interval_ticks=0`` disables the
+    background decoder (decode happens only when a trainer asks).
+    """
+    min_batch: int = 1
+    max_batch: int = 64
+    interval_ticks: int = 1
+
+
+class TickStats(NamedTuple):
+    """What one ``ContinuousIngestService.tick`` did."""
+    tick: int
+    n_offered: int           # uplinks offered since the previous tick
+    bytes_offered: int       # their measured bytes (incl. refusals)
+    n_delivered: int         # payloads ingested into the store this tick
+    bytes_delivered: int
+    n_decoded: int           # records background-bulk-decoded this tick
+    decode_dispatches: int   # fused dispatches those decodes cost
+    queue_depth: int         # in-flight payloads after this tick
+    bytes_in_flight: int
+    merged_version: Optional[int] = None
+
+
+class ContinuousIngestService:
+    """Clocked, admission-controlled ingest over ONE wire endpoint.
+
+    The round-driven loop inverted: clients ``offer`` uplinks whenever
+    they like; a clock ``tick`` drains the due slice of the queue into
+    the store and runs the background bulk decoder. Admission control
+    happens AT OFFER TIME:
+
+      * wire violations (§2.5 flag, wire revision, retired/unknown
+        codebook version) are rejected at the door — bytes still burn
+        on the §2.8 ledger, the payload never queues;
+      * a full queue (``capacity``) rejects with ``queue_full`` —
+        backpressure instead of unbounded growth;
+      * a queue past ``defer_depth`` admits but answers ``deferred`` —
+        the client's signal to back off while the service catches up;
+      * payloads packed under the src version of an open migration
+        window admit as ``migrated``.
+
+    Every offer gets a structured :class:`AdmissionResult`; per-verdict
+    count/byte histograms live on ``.verdicts`` / ``.verdict_bytes``
+    (and stream out as ``admission`` trace events).
+    """
+
+    def __init__(self, wire: OctopusServer, *,
+                 queue: Optional[UplinkQueue] = None,
+                 capacity: Optional[int] = None,
+                 defer_depth: Optional[int] = None,
+                 decode_policy: BulkDecodePolicy = BulkDecodePolicy()):
+        self.wire = wire
+        self.queue = queue if queue is not None else UplinkQueue()
+        self.capacity = capacity
+        if defer_depth is None and capacity is not None:
+            defer_depth = max(1, (3 * capacity) // 4)
+        self.defer_depth = defer_depth
+        self.decode_policy = decode_policy
+        self.tick_idx = 0
+        self.verdicts: Dict[str, int] = {}
+        self.verdict_bytes: Dict[str, int] = {}
+        self.decoded_records = 0
+        self.decode_dispatches = 0
+        self._pending_decode: list = []
+        self._tick_offered = 0
+        self._tick_bytes = 0
+
+    # ------------------------------------------------------------- offers
+
+    def _result(self, verdict: str, reason: str, nbytes: int
+                ) -> "AdmissionResult":
+        from repro.wire.session import AdmissionResult
+        self._tick_offered += 1
+        self._tick_bytes += nbytes
+        self.verdicts[verdict] = self.verdicts.get(verdict, 0) + 1
+        self.verdict_bytes[verdict] = \
+            self.verdict_bytes.get(verdict, 0) + nbytes
+        rec = _obs.active()
+        if rec is not None:
+            rec.metrics.inc(f"admission_{verdict}")
+            rec.event("admission", round=self.tick_idx, verdict=verdict,
+                      reason=reason, queue_depth=len(self.queue),
+                      nbytes=nbytes)
+        return AdmissionResult(verdict, reason, nbytes, None)
+
+    def offer(self, payload, *, client_ids=None, delay: int = 0,
+              dropped: bool = False) -> "AdmissionResult":
+        """One uplink at the door -> admission verdict.
+
+        ``dropped`` models a radio-layer loss: the bytes burn (§2.8)
+        but the payload never lands — verdict ``rejected/radio_drop``.
+        Rejections (wire violations, full queue) are ledgered via
+        ``UplinkQueue.charge``; admitted payloads queue via ``send``
+        and land at the ``tick`` whose clock reaches their delay.
+        """
+        p = self.wire._coerce(payload)
+        if dropped:
+            self.queue.send(p, round=self.tick_idx, delay=int(delay),
+                            dropped=True, client_ids=client_ids)
+            return self._result("rejected", "radio_drop", p.nbytes)
+        verdict, reason = self.wire.precheck(p)
+        if verdict == "rejected":
+            self.queue.charge(p, round=self.tick_idx, reason=reason,
+                              client_ids=client_ids)
+            return self._result(verdict, reason, p.nbytes)
+        if self.capacity is not None and len(self.queue) >= self.capacity:
+            self.queue.charge(p, round=self.tick_idx, reason="queue_full",
+                              client_ids=client_ids)
+            return self._result("rejected", "queue_full", p.nbytes)
+        self.queue.send(p, round=self.tick_idx, delay=int(delay),
+                        client_ids=client_ids)
+        if verdict == "accepted" and self.defer_depth is not None \
+                and len(self.queue) > self.defer_depth:
+            verdict, reason = "deferred", "queue_pressure"
+        return self._result(verdict, reason, p.nbytes)
+
+    # -------------------------------------------------------------- clock
+
+    def tick(self, *, merged_version: Optional[int] = None,
+             extra_fields: Optional[Dict] = None,
+             emit_event: bool = True) -> TickStats:
+        """Advance the service clock one step: deliver every due payload
+        into the store, then (under ``decode_policy``) bulk-decode a
+        batch of freshly-stored records in the background."""
+        rec = _obs.active()
+        t0 = time.perf_counter() if rec is not None else 0.0
+        results: list = []
+        delivered, n_del = self.queue.deliver(self.wire, self.tick_idx,
+                                              results=results)
+        for res in results:
+            if res.ok and res.record is not None:
+                self._pending_decode.append(res.record)
+
+        n_decoded, n_disp = 0, 0
+        pol = self.decode_policy
+        if pol.interval_ticks and \
+                (self.tick_idx + 1) % pol.interval_ticks == 0 and \
+                len(self._pending_decode) >= pol.min_batch:
+            batch = self._pending_decode[:pol.max_batch]
+            self._pending_decode = self._pending_decode[pol.max_batch:]
+            n_decoded, n_disp = self._bulk_decode(batch)
+
+        stats = TickStats(
+            tick=self.tick_idx, n_offered=self._tick_offered,
+            bytes_offered=self._tick_bytes, n_delivered=n_del,
+            bytes_delivered=delivered, n_decoded=n_decoded,
+            decode_dispatches=n_disp, queue_depth=len(self.queue),
+            bytes_in_flight=self.queue.bytes_in_flight,
+            merged_version=merged_version)
+        if rec is not None and emit_event:
+            dur_ms = (time.perf_counter() - t0) * 1e3
+            rec.event("round", round=self.tick_idx,
+                      n_offered=self._tick_offered,
+                      bytes_sent=self._tick_bytes,
+                      bytes_delivered=delivered,
+                      n_delivered=n_del, n_decoded=n_decoded,
+                      queue_depth=len(self.queue),
+                      bytes_in_flight=self.queue.bytes_in_flight,
+                      merged_version=merged_version, dur_ms=dur_ms,
+                      **(extra_fields or {}))
+            rec.metrics.observe("tick_ms", dur_ms)
+        self._tick_offered = 0
+        self._tick_bytes = 0
+        self.tick_idx += 1
+        return stats
+
+    def _bulk_decode(self, records) -> tuple:
+        """Background decode: ONE fused dispatch per (version, bits)
+        group of the batch, each against its pinned registry snapshot."""
+        from .store import decode_group
+        by_key: Dict[tuple, list] = {}
+        for r in records:
+            by_key.setdefault((r.version, r.packed.bits), []).append(r)
+        rec = _obs.active()
+        n_decoded = 0
+        for (v, _), recs in by_key.items():
+            cb = self.wire.registry.get(v)
+            t0 = time.perf_counter() if rec is not None else 0.0
+            blocks = decode_group(recs, self.wire.cfg, self.wire.state, cb)
+            if rec is not None:
+                jax.block_until_ready(blocks)
+                dur_ms = (time.perf_counter() - t0) * 1e3
+                rec.event("decode", version=int(v), dur_ms=dur_ms,
+                          n_records=len(recs),
+                          n_samples=int(sum(b.shape[0] for b in blocks)))
+                rec.metrics.observe(f"decode_ms/v{int(v)}", dur_ms)
+            n_decoded += len(recs)
+        self.decoded_records += n_decoded
+        self.decode_dispatches += len(by_key)
+        return n_decoded, len(by_key)
+
+    def drain(self, max_ticks: int = 1000) -> List[TickStats]:
+        """Tick until the queue is empty (or ``max_ticks``), then keep
+        ticking until the background decoder has caught up."""
+        out = []
+        while (len(self.queue) or self._pending_decode) \
+                and len(out) < max_ticks:
+            out.append(self.tick())
+        return out
+
+    # ----------------------------------------------------------- metrics
+
+    @property
+    def decode_amortization(self) -> float:
+        """Records decoded per fused dispatch (higher = better batching)."""
+        return self.decoded_records / max(self.decode_dispatches, 1)
+
+    @property
+    def n_rejected(self) -> int:
+        return self.verdicts.get("rejected", 0)
+
+    @property
+    def n_deferred(self) -> int:
+        return self.verdicts.get("deferred", 0)
+
+
 class AsyncCodeServer:
-    """Server runtime: scheduler-driven rounds over a versioned store."""
+    """Server runtime: scheduler-driven rounds over a versioned store.
+
+    Since the continuous-ingest refactor this is a thin round-quantized
+    shim over :class:`ContinuousIngestService` — each ``run_round`` is
+    exactly one service tick (offer the round's delivery groups, tick
+    the clock, merge on schedule). The background bulk decoder is OFF
+    here (``interval_ticks=0``): the round driver decodes when its
+    trainer asks, like it always did.
+    """
 
     def __init__(self, engine: SimEngine, server: OC.ServerState,
                  scheduler: RoundScheduler, *,
@@ -159,9 +428,16 @@ class AsyncCodeServer:
         self.slot_versions = np.full(self.n_slots, self.registry.latest,
                                      dtype=int)
         self._participated = np.zeros(self.n_slots, dtype=bool)
-        self.queue = UplinkQueue()
-        self.round = 0
+        # the round loop is one service tick per round (no background
+        # decode, no admission capacity — the legacy contract)
+        self.service = ContinuousIngestService(
+            self.wire, decode_policy=BulkDecodePolicy(interval_ticks=0))
+        self.queue = self.service.queue
         self.n_merges = 0
+
+    @property
+    def round(self) -> int:
+        return self.service.tick_idx
 
     # --------------------------------------------- wire endpoint delegates
 
@@ -254,33 +530,39 @@ class AsyncCodeServer:
                            for t, y in label_dict.items()}
             packed = CodePayload.pack(gidx, bits=self.engine.bits,
                                       version=version, labels=glabels)
-            sent += self.queue.send(packed, round=self.round, delay=delay,
-                                    dropped=dropped, client_ids=ids[pos])
+            res = self.service.offer(packed, client_ids=ids[pos],
+                                     delay=delay, dropped=dropped)
+            sent += res.nbytes
 
-        # ---- deliver everything whose arrival round has come through the
-        # single wire endpoint (version/labels read from the payload)
-        delivered, n_del = self.queue.deliver(self.wire, self.round)
-
-        # ---- low-frequency Step 5 merge over the ACTIVE population
+        # ---- low-frequency Step 5 merge over the ACTIVE population:
+        # decided BEFORE the tick so the round event carries it
+        this_round = self.round
         merged_version = None
-        if self.merge_every and (self.round + 1) % self.merge_every == 0:
+        if self.merge_every and (this_round + 1) % self.merge_every == 0:
             merged_version = self._merge()
 
-        stats = RoundStats(round=self.round, n_participants=ids.size,
+        # ---- one service tick: deliver everything whose arrival round
+        # has come through the single wire endpoint (version/labels read
+        # from the payload)
+        ts = self.service.tick(merged_version=merged_version,
+                               emit_event=False)
+        delivered, n_del = ts.bytes_delivered, ts.n_delivered
+
+        stats = RoundStats(round=this_round, n_participants=ids.size,
                            n_joined=ev.joined.size, n_left=ev.left.size,
                            bytes_sent=sent, bytes_delivered=delivered,
                            n_delivered=n_del, merged_version=merged_version)
         if rec is not None:
             dur_ms = (time.perf_counter() - t0) * 1e3
-            rec.event("round", round=self.round,
+            rec.event("round", round=this_round,
                       n_participants=int(ids.size),
                       n_joined=int(ev.joined.size),
                       n_left=int(ev.left.size), bytes_sent=sent,
                       bytes_delivered=delivered,
                       queue_depth=len(self.queue),
+                      bytes_in_flight=self.queue.bytes_in_flight,
                       merged_version=merged_version, dur_ms=dur_ms)
             rec.metrics.observe("round_ms", dur_ms)
-        self.round += 1
         return stats
 
     def _merge(self) -> int:

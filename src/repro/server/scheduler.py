@@ -48,6 +48,9 @@ class SchedulerConfig:
     drop_prob: float = 0.0       # P(an uplink never arrives)
     leave_prob: float = 0.0      # per-active-slot P(depart) per round
     join_prob: float = 0.0       # per-inactive-slot P(enroll) per round
+    rate: Optional[float] = None  # open-ended traffic: mean arrivals/tick
+    #                               (Poisson; overrides `participation`'s
+    #                               fixed per-round count, 0 ticks happen)
 
 
 class RoundEvent(NamedTuple):
@@ -77,6 +80,7 @@ _STREAM_PARTICIPANTS = 2
 _STREAM_DELAYS = 3
 _STREAM_DROPS = 4
 _STREAM_COHORTS = 5
+_STREAM_ARRIVALS = 6
 
 
 @dataclass(frozen=True)
@@ -132,7 +136,18 @@ class RoundScheduler:
 
     def round_k(self) -> int:
         """This round's participant count: base ``k`` scaled by the
-        diurnal profile, in whole ``quantum`` blocks (>= one block)."""
+        diurnal profile, in whole ``quantum`` blocks (>= one block).
+
+        With ``cfg.rate`` set the count is instead an open-ended Poisson
+        arrival draw (its own substream) — traffic is no longer
+        round-quantized: quiet ticks (k = 0) and bursts both happen,
+        which is what a continuous-ingest service must absorb.
+        """
+        if self.cfg.rate is not None:
+            k = int(self._rng(_STREAM_ARRIVALS).poisson(self.cfg.rate))
+            if self.quantum > 1:
+                k = (k // self.quantum) * self.quantum
+            return min(k, self.n_slots)
         if self.profile is None:
             return self.k
         want = self.profile.fraction(self.round) * self.k

@@ -1,9 +1,13 @@
-"""Versioned, capacity-bounded store of packed client payloads.
+"""Versioned, capacity-bounded stores of packed client payloads.
 
 This is Step 6's front door. Clients stream bit-packed code indices at
 high frequency; the server must absorb them under churn without either
-unbounded memory or eager decoding. ``CodeStore`` supersedes the passive
-``sim.IngestBuffer``:
+unbounded memory or eager decoding. ``CodeStore`` is one bounded ring
+buffer; ``ShardedCodeStore`` partitions the traffic into independent
+ring buffers keyed by ``(codebook version, client shard)`` so a
+continuous-ingest service stays memory-capped per partition no matter
+how the uplink mix skews. Both supersede the retired
+``sim.IngestBuffer`` (see ``repro.wire``):
 
   * entries stay PACKED until a trainer asks for features — storage cost
     is the measured uplink bytes, not the decoded float tensors;
@@ -17,6 +21,9 @@ unbounded memory or eager decoding. ``CodeStore`` supersedes the passive
   * a sample-count capacity with FIFO or reservoir eviction bounds the
     store under "millions of users" traffic — FIFO keeps the freshest
     window, reservoir keeps an (approximately) uniform sample of history;
+    every ingested and evicted byte stays on a per-version ledger, so
+    for each codebook version Σ stored + Σ evicted == Σ ingested bytes
+    holds at all times (§2.8 accounting survives eviction);
   * decoding is BULK: records are grouped by version and each group is
     dequantized in one ``repro.wire.codec`` dispatch, so a multi-task
     trainer pays one decode for the whole store regardless of how many
@@ -72,6 +79,13 @@ class CodeStore:
         self._seen_records = 0            # total ever added (reservoir stats)
         self.evicted_samples = 0
         self.evicted_records = 0
+        self.evicted_bytes = 0
+        self.ingested_records = 0
+        self.ingested_samples = 0
+        self.ingested_bytes = 0
+        # per-version byte ledgers: stored + evicted == ingested, always
+        self._ingested_by_version: Dict[int, int] = {}
+        self._evicted_by_version: Dict[int, int] = {}
 
     # ----------------------------------------------------------- metadata
 
@@ -141,12 +155,14 @@ class CodeStore:
                           labels=normalize_labels(labels, C * B))
         self._records.append(rec)
         self._seen_records += 1
+        nb = rec.packed.nbytes
+        self.ingested_records += 1
+        self.ingested_samples += rec.n_samples
+        self.ingested_bytes += nb
+        v = rec.version
+        self._ingested_by_version[v] = self._ingested_by_version.get(v, 0) + nb
         self._evict()
-        ob = _obs.active()
-        if ob is not None:
-            ob.metrics.set_gauge("store_records", len(self._records))
-            ob.metrics.set_gauge("store_samples", self.n_samples)
-            ob.metrics.set_gauge("store_bytes", self.total_bytes)
+        self._set_gauges()
         return rec
 
     def _evict(self) -> None:
@@ -166,8 +182,54 @@ class CodeStore:
                 else:
                     victim = len(self._records) - 1
             rec = self._records.pop(victim)
-            self.evicted_samples += rec.n_samples
-            self.evicted_records += 1
+            self._charge_eviction(rec)
+
+    def _charge_eviction(self, rec: StoreRecord) -> None:
+        nb = rec.packed.nbytes
+        self.evicted_samples += rec.n_samples
+        self.evicted_records += 1
+        self.evicted_bytes += nb
+        v = rec.version
+        self._evicted_by_version[v] = self._evicted_by_version.get(v, 0) + nb
+
+    def _set_gauges(self) -> None:
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.set_gauge("store_records", len(self._records))
+            ob.metrics.set_gauge("store_samples", self.n_samples)
+            ob.metrics.set_gauge("store_bytes", self.total_bytes)
+
+    # ------------------------------------------------------------- ledgers
+
+    @property
+    def ingested_bytes_by_version(self) -> Dict[int, int]:
+        return dict(self._ingested_by_version)
+
+    @property
+    def evicted_bytes_by_version(self) -> Dict[int, int]:
+        return dict(self._evicted_by_version)
+
+    @property
+    def stored_bytes_by_version(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for r in self._records:
+            out[r.version] = out.get(r.version, 0) + r.packed.nbytes
+        return out
+
+    def retire_version(self, version: int) -> Tuple[StoreRecord, ...]:
+        """Evict EVERY record packed under ``version`` (migration retire /
+        re-encode paths). The evicted bytes stay on the per-version
+        ledger, so §2.8 accounting survives retirement; returns the
+        retired records so a re-encode policy can transcode them."""
+        version = int(version)
+        keep, gone = [], []
+        for r in self._records:
+            (gone if r.version == version else keep).append(r)
+        self._records = keep
+        for r in gone:
+            self._charge_eviction(r)
+        self._set_gauges()
+        return tuple(gone)
 
     # ------------------------------------------------------------- lookup
 
@@ -205,52 +267,12 @@ class CodeStore:
         """Concatenated labels for ``task`` (record order), or None if any
         record lacks them. ``records`` restricts to a subset (e.g. one
         codebook version's)."""
-        if task is None:
-            task = DEFAULT_TASK
-        parts = []
-        for r in (self._records if records is None else records):
-            if not r.labels or task not in r.labels:
-                return None
-            parts.append(r.labels[task])
-        return jnp.concatenate(parts, axis=0) if parts else None
+        return labels_for(self._records if records is None else records,
+                          task)
 
     def label_dict(self, *, records=None) -> Dict[str, jax.Array]:
         """All tasks that every record carries -> {task: (N,) labels}."""
-        recs = self._records if records is None else records
-        names: Dict[str, None] = {}
-        for r in recs:
-            if r.labels:
-                for t in r.labels:
-                    names[t] = None
-        out = {}
-        for t in names:
-            v = self.labels(t, records=recs)
-            if v is not None:
-                out[t] = v
-        return out
-
-    def _decode_group(self, recs: List[StoreRecord], server, codebook
-                      ) -> List[jax.Array]:
-        """ONE fused decode dispatch for records packed under one version.
-
-        Delegates to ``repro.wire.codec.decode_payloads`` — the records'
-        word streams are concatenated into a single ``ops.decode_codes``
-        dispatch with per-record-restarting slice phases; the int32 index
-        and gathered-atom tensors never materialise. A stored upload may
-        itself be a MULTI-record stream (``CodePayload.n_records`` > 1,
-        one sub-stream per client — what the fused encode kernel emits
-        for a population round). Returns per-record (C*B, T..., M)
-        feature blocks.
-        """
-        from repro.wire.codec import decode_payloads
-        if codebook is None:
-            if server is None:
-                raise ValueError("CodeStore.dataset needs a ServerState or "
-                                 "a registry to decode against")
-            codebook = server.params["codebook"]
-        blocks = decode_payloads([r.packed for r in recs], self.cfg,
-                                 codebook)
-        return [f.reshape((-1,) + f.shape[2:]) for f in blocks]
+        return label_dict_for(self._records if records is None else records)
 
     def dataset(self, server: Optional[OC.ServerState], *, registry=None,
                 version: Optional[int] = None
@@ -264,37 +286,323 @@ class CodeStore:
         codebook version. Returns (features (N, ...), {task: (N,)
         labels}) in record order.
         """
-        recs = [(i, r) for i, r in enumerate(self._records)
+        return decode_records(self._records, self.cfg, server,
+                              registry=registry, version=version)
+
+    def batches(self, server, batch_size: int, *, key, steps: int,
+                registry=None):
+        """Minibatch stream over the decoded store (decoded ONCE)."""
+        feats, labels = self.dataset(server, registry=registry)
+        n = feats.shape[0]
+        for i in range(steps):
+            sel = jax.random.randint(jax.random.fold_in(key, i),
+                                     (min(batch_size, n),), 0, n)
+            yield feats[sel], {t: y[sel] for t, y in labels.items()}
+
+
+# ------------------------------------------------------- shared decode path
+
+def labels_for(records, task: Optional[str] = None) -> Optional[jax.Array]:
+    """Concatenated labels for ``task`` over ``records`` (record order),
+    or None if any record lacks them."""
+    if task is None:
+        task = DEFAULT_TASK
+    parts = []
+    for r in records:
+        if not r.labels or task not in r.labels:
+            return None
+        parts.append(r.labels[task])
+    return jnp.concatenate(parts, axis=0) if parts else None
+
+
+def label_dict_for(records) -> Dict[str, jax.Array]:
+    """All tasks that every record carries -> {task: (N,) labels}."""
+    names: Dict[str, None] = {}
+    for r in records:
+        if r.labels:
+            for t in r.labels:
+                names[t] = None
+    out = {}
+    for t in names:
+        v = labels_for(records, t)
+        if v is not None:
+            out[t] = v
+    return out
+
+
+def decode_group(recs, cfg: DVQAEConfig, server, codebook
+                 ) -> List[jax.Array]:
+    """ONE fused decode dispatch for records packed under one version.
+
+    Delegates to ``repro.wire.codec.decode_payloads`` — the records'
+    word streams are concatenated into a single ``ops.decode_codes``
+    dispatch with per-record-restarting slice phases; the int32 index
+    and gathered-atom tensors never materialise. A stored upload may
+    itself be a MULTI-record stream (``CodePayload.n_records`` > 1,
+    one sub-stream per client — what the fused encode kernel emits
+    for a population round). Returns per-record (C*B, T..., M)
+    feature blocks.
+    """
+    from repro.wire.codec import decode_payloads
+    if codebook is None:
+        if server is None:
+            raise ValueError("decode needs a ServerState or a registry "
+                             "to decode against")
+        codebook = server.params["codebook"]
+    blocks = decode_payloads([r.packed for r in recs], cfg, codebook)
+    return [f.reshape((-1,) + f.shape[2:]) for f in blocks]
+
+
+def decode_records(records, cfg: DVQAEConfig,
+                   server: Optional[OC.ServerState], *, registry=None,
+                   version: Optional[int] = None
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Bulk decode any record sequence: ONE fused dispatch per
+    (codebook version, bit width) group, each against its pinned
+    registry snapshot when a ``registry`` is given. Shared by
+    ``CodeStore.dataset`` and ``ShardedCodeStore.dataset``."""
+    records = list(records)
+    recs = [(i, r) for i, r in enumerate(records)
+            if version is None or r.version == version]
+    if not recs:
+        raise ValueError("empty code store"
+                         + (f" for version {version}" if version
+                            is not None else ""))
+    by_version: Dict[Tuple[int, int], List[int]] = {}
+    for i, r in recs:
+        by_version.setdefault((r.version, r.packed.bits), []).append(i)
+    feats_parts: Dict[int, jax.Array] = {}
+    ob = _obs.active()
+    for (v, _), idxs in by_version.items():
+        cb = registry.get(v) if registry is not None else None
+        t0 = time.perf_counter() if ob is not None else 0.0
+        blocks = decode_group([records[i] for i in idxs], cfg, server, cb)
+        if ob is not None:
+            jax.block_until_ready(blocks)
+            dur_ms = (time.perf_counter() - t0) * 1e3
+            ob.event("decode", version=int(v), dur_ms=dur_ms,
+                     n_records=len(idxs),
+                     n_samples=int(sum(b.shape[0] for b in blocks)))
+            ob.metrics.observe(f"decode_ms/v{int(v)}", dur_ms)
+        for i, f in zip(idxs, blocks):
+            feats_parts[i] = f
+    feats = jnp.concatenate([feats_parts[i] for i, _ in recs], axis=0)
+    return feats, label_dict_for([r for _, r in recs])
+
+
+# ------------------------------------------------------------ sharded store
+
+class ShardedCodeStore:
+    """`(codebook version, client shard)`-partitioned ring buffers.
+
+    Each partition is an independent ``CodeStore`` with its OWN
+    ``capacity_samples`` bound and eviction policy, so memory stays
+    capped per partition no matter how the uplink mix skews across
+    versions or client populations — one hot shard cannot evict
+    another shard's history. Partitions are created lazily on first
+    traffic; their byte ledgers survive retirement so the §2.8
+    invariant (per version: Σ stored + Σ evicted == Σ ingested bytes)
+    holds across the whole store at all times.
+
+    ``shard_fn`` maps a ``client_ids`` array to a shard index; the
+    default hashes the first client id modulo ``n_shards`` (cohort
+    uploads keep all their clients in one partition).
+    """
+
+    def __init__(self, cfg: DVQAEConfig, *, n_shards: int = 4,
+                 capacity_samples: Optional[int] = None,
+                 policy: str = "fifo", seed: int = 0, shard_fn=None):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if policy not in ("fifo", "reservoir"):
+            raise ValueError(f"policy must be fifo|reservoir, got {policy!r}")
+        self.cfg = cfg
+        self.n_shards = int(n_shards)
+        self.capacity_samples = capacity_samples
+        self.policy = policy
+        self.seed = int(seed)
+        self.shard_fn = shard_fn
+        self._parts: Dict[Tuple[int, int], CodeStore] = {}
+
+    # -------------------------------------------------------- partitioning
+
+    def shard_of(self, client_ids) -> int:
+        if self.shard_fn is not None:
+            return int(self.shard_fn(client_ids)) % self.n_shards
+        if client_ids is None:
+            return 0
+        ids = np.asarray(client_ids).reshape(-1)
+        if ids.size == 0:
+            return 0
+        return int(ids[0]) % self.n_shards
+
+    def partition(self, version: int, shard: int) -> CodeStore:
+        k = (int(version), int(shard))
+        part = self._parts.get(k)
+        if part is None:
+            # deterministic per-partition reservoir streams
+            pseed = (self.seed * 1000003 + k[0] * 8191 + k[1]) & 0x7FFFFFFF
+            part = CodeStore(self.cfg,
+                             capacity_samples=self.capacity_samples,
+                             policy=self.policy, seed=pseed)
+            self._parts[k] = part
+        return part
+
+    @property
+    def partitions(self) -> Dict[Tuple[int, int], CodeStore]:
+        return dict(self._parts)
+
+    def _ordered_parts(self) -> List[CodeStore]:
+        return [self._parts[k] for k in sorted(self._parts)]
+
+    # ---------------------------------------------------------------- add
+
+    def add(self, packed: CodePayload, *, client_ids=None, round: int = 0,
+            version: Optional[int] = None, labels: LabelsLike = None
+            ) -> StoreRecord:
+        if version is None:
+            version = int(getattr(packed, "version", 0))
+        shard = self.shard_of(client_ids)
+        rec = self.partition(version, shard).add(
+            packed, client_ids=client_ids, round=round, version=version,
+            labels=labels)
+        self._set_gauges()
+        return rec
+
+    def _set_gauges(self) -> None:
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.set_gauge("store_records", len(self))
+            ob.metrics.set_gauge("store_samples", self.n_samples)
+            ob.metrics.set_gauge("store_bytes", self.total_bytes)
+            ob.metrics.set_gauge("store_partitions", len(self._parts))
+
+    # ----------------------------------------------------------- metadata
+
+    def __len__(self) -> int:
+        return sum(len(p) for p in self._parts.values())
+
+    @property
+    def records(self) -> Tuple[StoreRecord, ...]:
+        """All records, in sorted (version, shard) partition order."""
+        out: List[StoreRecord] = []
+        for p in self._ordered_parts():
+            out.extend(p.records)
+        return tuple(out)
+
+    @property
+    def n_samples(self) -> int:
+        return sum(p.n_samples for p in self._parts.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(p.total_bytes for p in self._parts.values())
+
+    @property
+    def versions(self) -> Tuple[int, ...]:
+        return tuple(sorted({v for p in self._parts.values()
+                             for v in p.versions}))
+
+    @property
+    def tasks(self) -> Tuple[str, ...]:
+        names: Dict[str, None] = {}
+        for p in self._ordered_parts():
+            for t in p.tasks:
+                names[t] = None
+        return tuple(names)
+
+    # ------------------------------------------------------------- ledgers
+
+    @property
+    def ingested_bytes(self) -> int:
+        return sum(p.ingested_bytes for p in self._parts.values())
+
+    @property
+    def evicted_bytes(self) -> int:
+        return sum(p.evicted_bytes for p in self._parts.values())
+
+    @property
+    def evicted_records(self) -> int:
+        return sum(p.evicted_records for p in self._parts.values())
+
+    @property
+    def evicted_samples(self) -> int:
+        return sum(p.evicted_samples for p in self._parts.values())
+
+    def _sum_by_version(self, attr: str) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for p in self._parts.values():
+            for v, nb in getattr(p, attr).items():
+                out[v] = out.get(v, 0) + nb
+        return out
+
+    @property
+    def ingested_bytes_by_version(self) -> Dict[int, int]:
+        return self._sum_by_version("ingested_bytes_by_version")
+
+    @property
+    def evicted_bytes_by_version(self) -> Dict[int, int]:
+        return self._sum_by_version("evicted_bytes_by_version")
+
+    @property
+    def stored_bytes_by_version(self) -> Dict[int, int]:
+        return self._sum_by_version("stored_bytes_by_version")
+
+    def retire_version(self, version: int) -> Tuple[StoreRecord, ...]:
+        """Evict every record of ``version`` across all shards. The
+        emptied partitions stay registered so their ledgers keep
+        witnessing the retired bytes."""
+        gone: List[StoreRecord] = []
+        for k in sorted(self._parts):
+            if k[0] == int(version):
+                gone.extend(self._parts[k].retire_version(version))
+        self._set_gauges()
+        return tuple(gone)
+
+    # ------------------------------------------------------------- lookup
+
+    def get(self, client_id: int, round: int) -> Tuple[jax.Array, int]:
+        for p in self._ordered_parts():
+            try:
+                return p.get(client_id, round)
+            except KeyError:
+                continue
+        raise KeyError((client_id, round))
+
+    # ------------------------------------------------------------- decode
+
+    def codes(self, version: Optional[int] = None) -> jax.Array:
+        recs = [r for r in self.records
                 if version is None or r.version == version]
         if not recs:
             raise ValueError("empty code store"
                              + (f" for version {version}" if version
                                 is not None else ""))
-        by_version: Dict[Tuple[int, int], List[int]] = {}
-        for i, r in recs:
-            by_version.setdefault((r.version, r.packed.bits), []).append(i)
-        feats_parts: Dict[int, jax.Array] = {}
-        ob = _obs.active()
-        for (v, _), idxs in by_version.items():
-            cb = registry.get(v) if registry is not None else None
-            t0 = time.perf_counter() if ob is not None else 0.0
-            blocks = self._decode_group([self._records[i] for i in idxs],
-                                        server, cb)
-            if ob is not None:
-                jax.block_until_ready(blocks)
-                dur_ms = (time.perf_counter() - t0) * 1e3
-                ob.event("decode", version=int(v), dur_ms=dur_ms,
-                         n_records=len(idxs),
-                         n_samples=int(sum(b.shape[0] for b in blocks)))
-                ob.metrics.observe(f"decode_ms/v{int(v)}", dur_ms)
-            for i, f in zip(idxs, blocks):
-                feats_parts[i] = f
-        feats = jnp.concatenate([feats_parts[i] for i, _ in recs], axis=0)
-        return feats, self.label_dict(records=[r for _, r in recs])
+        parts = []
+        for r in recs:
+            idx = r.packed.unpack()
+            parts.append(idx.reshape((-1,) + idx.shape[2:]))
+        return jnp.concatenate(parts, axis=0)
+
+    def labels(self, task: Optional[str] = None, *, records=None
+               ) -> Optional[jax.Array]:
+        return labels_for(self.records if records is None else records,
+                          task)
+
+    def label_dict(self, *, records=None) -> Dict[str, jax.Array]:
+        return label_dict_for(self.records if records is None else records)
+
+    def dataset(self, server: Optional[OC.ServerState], *, registry=None,
+                version: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Bulk decode across all partitions: still ONE fused dispatch
+        per (version, bits) group — sharding changes residency, not the
+        decode batching."""
+        return decode_records(self.records, self.cfg, server,
+                              registry=registry, version=version)
 
     def batches(self, server, batch_size: int, *, key, steps: int,
                 registry=None):
-        """Minibatch stream over the decoded store (decoded ONCE)."""
         feats, labels = self.dataset(server, registry=registry)
         n = feats.shape[0]
         for i in range(steps):

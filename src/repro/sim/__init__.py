@@ -2,22 +2,37 @@
 at scale, not one Python object per client).
 
   engine  — stacked ClientState pytrees + one jitted vmap/shard_map round;
-            the round's uplink is a ``repro.wire.CodePayload`` (the
-            deprecated ``PackedCodes`` is an alias of it)
+            the round's uplink is a ``repro.wire.CodePayload``
   cohort  — cohort-streamed population rounds (100k+ clients): fixed-size
             cohorts through ONE compiled engine round, exactly
-            associative Step-5 stats merge, scheduler-driven traffic
-  ingest  — DEPRECATED server-side buffer; superseded by the async
-            code-server runtime (repro.server.CodeStore)
+            associative Step-5 stats merge, scheduler-driven traffic +
+            open-ended continuous-ingest traffic
+
+The PR-1 ``IngestBuffer`` and the ``PackedCodes`` payload alias are
+RETIRED: importing either raises with a pointer at the unified wire
+layer (``repro.wire`` / ``repro.server``).
 """
 from repro.wire.payload import CodePayload
 
-from .cohort import CohortEngine, CohortPlan, CohortRound, TrafficRound
-from .engine import (PackedCodes, SimEngine, client_batch_size,
-                     replicate_clients, stack_clients, unstack_clients)
-from .ingest import IngestBuffer
+from .cohort import (CohortEngine, CohortPlan, CohortRound, ContinuousTick,
+                     TrafficRound)
+from .engine import (SimEngine, client_batch_size, replicate_clients,
+                     stack_clients, unstack_clients)
 
 __all__ = ["CodePayload", "CohortEngine", "CohortPlan", "CohortRound",
-           "PackedCodes", "SimEngine", "IngestBuffer", "TrafficRound",
+           "ContinuousTick", "SimEngine", "TrafficRound",
            "client_batch_size", "replicate_clients", "stack_clients",
            "unstack_clients"]
+
+_TOMBSTONES = {
+    "IngestBuffer": "repro.server.CodeStore / repro.server.ShardedCodeStore",
+    "PackedCodes": "repro.wire.CodePayload",
+}
+
+
+def __getattr__(name):
+    if name in _TOMBSTONES:
+        raise ImportError(
+            f"repro.sim.{name} was removed; use {_TOMBSTONES[name]} "
+            f"(the unified wire carrier/store — see repro.wire)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -142,6 +142,18 @@ class TrafficRound(NamedTuple):
     merged_version: Optional[int]
 
 
+class ContinuousTick(NamedTuple):
+    """Per-tick ledger of an open-ended continuous-ingest run."""
+    tick: int
+    n_participants: int
+    n_cohorts: int
+    bytes_offered: int       # measured bytes at the door (incl. refusals)
+    bytes_delivered: int     # landed in the store this tick
+    n_rejected: int          # admission rejections this tick
+    n_deferred: int          # admissions answered "back off"
+    merged_version: Optional[int]
+
+
 class CohortEngine:
     """Streams population rounds cohort-by-cohort through ONE SimEngine.
 
@@ -270,4 +282,79 @@ class CohortEngine:
                           merged_version=merged_version, dur_ms=dur_ms)
                 rec.metrics.observe("round_ms", dur_ms)
                 rec.metrics.set_gauge("uplink_queue_depth", len(queue))
+        return history
+
+    def run_continuous(self, service, scheduler, data_fn: DataFn, *,
+                       cohort_size: int, n_ticks: int, merge_every: int = 0,
+                       labels_fn: Optional[DataFn] = None,
+                       migration_policy: Optional[str] = None
+                       ) -> List[ContinuousTick]:
+        """Open-ended traffic into a ``ContinuousIngestService``.
+
+        The round-quantized loop inverted: each tick the scheduler draws
+        an arrival count (set ``SchedulerConfig.rate`` for Poisson
+        arrivals — quiet ticks and bursts both happen), arrivals are
+        carved into cohorts per (delay, dropped) fate and OFFERED to the
+        service one cohort-payload at a time, and the service clock
+        ticks once. Admission is the service's call: a cohort whose
+        offer comes back ``rejected`` (full queue, radio drop, wire
+        violation) loses its Step-5 contribution along with its payload
+        — backpressure reaches the merge, not just the store.
+
+        Every ``merge_every`` ticks the accumulated associative stats
+        finish the Step-5 merge. With ``migration_policy`` set, each
+        merge also runs a rolling codebook upgrade: any open migration
+        window is completed (applying the policy to old-version
+        records), then a fresh ``latest-1 -> latest`` window opens — so
+        in-flight payloads packed under the previous dictionary ingest
+        as ``migrated`` while new cohorts pack under the merged one.
+        """
+        wire = service.wire
+        acc: Optional[MergeStats] = None
+        history: List[ContinuousTick] = []
+        for _ in range(n_ticks):
+            ev = scheduler.step()
+            groups = {}
+            for j, slot in enumerate(ev.participants):
+                key = (int(ev.delays[j]), bool(ev.dropped[j]))
+                groups.setdefault(key, []).append(int(slot))
+            offered = n_cohorts = n_rej = n_def = 0
+            for (delay, dropped), slots in sorted(groups.items()):
+                plan = CohortPlan.build(slots, cohort_size)
+                for cohort in plan.cohorts:
+                    out = self.round(wire.state,
+                                     CohortPlan.from_groups([cohort]),
+                                     data_fn, version=wire.version,
+                                     labels_fn=labels_fn,
+                                     round_idx=ev.round)
+                    res = service.offer(out.payloads[0], client_ids=cohort,
+                                        delay=delay, dropped=dropped)
+                    offered += res.nbytes
+                    if res.verdict == "rejected":
+                        n_rej += 1
+                    else:
+                        if res.verdict == "deferred":
+                            n_def += 1
+                        # only admitted cohorts reach the Step-5 merge
+                        acc = out.stats if acc is None else \
+                            merge_stats_add(acc, out.stats)
+                n_cohorts += plan.n_cohorts
+            merged_version = None
+            if merge_every and (ev.round + 1) % merge_every == 0 \
+                    and acc is not None:
+                merged_version = wire.merge_stats(acc)
+                acc = None
+                if migration_policy is not None:
+                    if wire.registry.migration is not None:
+                        wire.complete_migration()
+                    wire.begin_migration(policy=migration_policy)
+            ts = service.tick(
+                merged_version=merged_version,
+                extra_fields={"n_participants": int(ev.participants.size),
+                              "n_cohorts": n_cohorts})
+            history.append(ContinuousTick(
+                tick=ts.tick, n_participants=int(ev.participants.size),
+                n_cohorts=n_cohorts, bytes_offered=offered,
+                bytes_delivered=ts.bytes_delivered, n_rejected=n_rej,
+                n_deferred=n_def, merged_version=merged_version))
         return history

@@ -30,7 +30,6 @@ Typical use::
 """
 from __future__ import annotations
 
-import warnings
 from typing import Tuple
 
 import jax
@@ -41,23 +40,12 @@ from repro.core.dvqae import DVQAEConfig
 from repro.wire.payload import CodePayload, normalize_labels
 
 
-class PackedCodes(CodePayload):
-    """DEPRECATED alias of :class:`repro.wire.CodePayload`.
-
-    The engine's packed uplink IS the unified wire carrier now — same
-    fields, same measured ``nbytes`` (per-record padding included), plus
-    the codebook ``version`` / ``labels`` / ``privatized`` provenance the
-    wire protocol adds. Constructing ``PackedCodes`` still works (it is a
-    CodePayload) but warns; new code should construct / accept
-    ``repro.wire.CodePayload``.
-    """
-
-    def __new__(cls, *args, **kw):
-        warnings.warn(
-            "sim.engine.PackedCodes is deprecated; use "
-            "repro.wire.CodePayload (same carrier, versioned wire format)",
-            DeprecationWarning, stacklevel=2)
-        return super().__new__(cls, *args, **kw)
+def __getattr__(name):
+    if name == "PackedCodes":
+        raise ImportError(
+            "sim.engine.PackedCodes was removed; use "
+            "repro.wire.CodePayload (same carrier, versioned wire format)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ----------------------------------------------------------- client batches

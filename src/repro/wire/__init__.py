@@ -9,14 +9,18 @@
   session  — OctopusClient.round(batch) / OctopusServer.ingest(payload)
              + .features(): the session facades subsuming the PR-1..4
              function zoo (client_transmit, client_round_fused,
-             unpack_transmission, hand-wired store/registry plumbing)
+             unpack_transmission, hand-wired store/registry plumbing).
+             ``ingest`` answers with a structured AdmissionResult
+             verdict (accepted / migrated / deferred / rejected)
 """
 from .codec import decode_payloads, decode_rows
 from .payload import (DEFAULT_TASK, WIRE_VERSION, CodePayload, as_payload,
                       concat_payloads, normalize_labels)
-from .session import OctopusClient, OctopusServer, fused_round, round_words
+from .session import (ADMISSION_VERDICTS, AdmissionResult, OctopusClient,
+                      OctopusServer, fused_round, round_words)
 
-__all__ = ["CodePayload", "OctopusClient", "OctopusServer", "WIRE_VERSION",
+__all__ = ["ADMISSION_VERDICTS", "AdmissionResult", "CodePayload",
+           "OctopusClient", "OctopusServer", "WIRE_VERSION",
            "DEFAULT_TASK", "as_payload", "concat_payloads",
            "decode_payloads", "decode_rows", "fused_round",
            "normalize_labels", "round_words"]

@@ -27,9 +27,9 @@ that crosses that boundary travels as a :class:`CodePayload`:
     heterogeneous deployments can reject payloads from an incompatible
     protocol revision instead of mis-decoding them.
 
-``repro.sim.engine.PackedCodes`` and the packed half of
-``repro.core.octopus.Transmission`` are deprecated views over this
-carrier; :func:`as_payload` coerces any legacy carrier to it.
+The packed half of ``repro.core.octopus.Transmission`` is a legacy view
+over this carrier; :func:`as_payload` coerces it. (The old
+``sim.engine.PackedCodes`` alias is retired — importing it raises.)
 """
 from __future__ import annotations
 
@@ -233,8 +233,8 @@ def concat_payloads(payloads) -> CodePayload:
 def as_payload(tx) -> Optional[CodePayload]:
     """Coerce any packed carrier to a :class:`CodePayload`.
 
-    Accepts a CodePayload (incl. the deprecated ``sim.engine.PackedCodes``
-    subclass) as-is and a packed ``core.octopus.Transmission`` by view.
+    Accepts a CodePayload as-is and a packed
+    ``core.octopus.Transmission`` by view.
     Returns None for plain index arrays and unpacked Transmissions —
     those take the index decode path.
     """

@@ -18,8 +18,13 @@ These two classes subsume it:
   * :class:`OctopusServer` — ``ingest(payload)`` / ``features()`` is THE
     downlink: payloads land in a versioned CodeStore keyed on the
     payload's OWN codebook version and decode against the registry
-    snapshot they were packed under. The server refuses payloads that
-    are not marked ``privatized`` or speak a different wire revision.
+    snapshot they were packed under. ``ingest`` returns a structured
+    :class:`AdmissionResult` verdict (accepted / migrated / deferred /
+    rejected) instead of raising — payloads that are not marked
+    ``privatized``, speak a different wire revision, or name a retired
+    codebook version are REJECTED with a reason, and their measured
+    bytes stay on the §2.8 ledger. Rolling ``v_n -> v_{n+1}`` codebook
+    upgrades run through ``begin_migration`` / ``complete_migration``.
 
 The pure, jittable round core is :func:`round_words` — bit-identical to
 the PR-4 ``client_round_fused`` tail (same calls, same dispatch count);
@@ -28,15 +33,43 @@ the PR-4 ``client_round_fused`` tail (same calls, same dispatch count);
 from __future__ import annotations
 
 import time
-from typing import Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
 from repro.obs import recorder as _obs
 
 from .payload import WIRE_VERSION, CodePayload, as_payload
+
+#: admission verdicts an ingest path can return (§2.8: ALL of them keep
+#: the payload's measured bytes on the ledger, accepted or not)
+ADMISSION_VERDICTS = ("accepted", "migrated", "deferred", "rejected")
+
+
+class AdmissionResult(NamedTuple):
+    """Structured verdict for one uplink payload at the server door.
+
+    ``verdict``:
+      accepted — stored (or queued) on the current codebook version
+      migrated — stored, but packed under the src version of an OPEN
+                 migration window (will be kept/retired/re-encoded when
+                 the window closes)
+      deferred — queued under backpressure; will be decoded, later
+      rejected — refused (``reason`` says why); bytes still ledgered
+    ``nbytes`` is the payload's measured wire size; ``record`` is the
+    StoreRecord for verdicts that stored the payload, else None.
+    """
+    verdict: str
+    reason: str = ""
+    nbytes: int = 0
+    record: Optional[object] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.verdict != "rejected"
 
 
 # --------------------------------------------------------- pure round core
@@ -265,33 +298,53 @@ class OctopusServer:
             p = p._replace(shape=(1,) + p.shape)
         return p
 
-    def ingest(self, payload, *, client_ids=None, round: int = 0):
+    def precheck(self, p: CodePayload) -> Tuple[str, str]:
+        """Wire-invariant admission check -> (verdict, reason), without
+        touching the store. Rejections: unknown wire revision, missing
+        §2.5 privatized flag, retired or never-registered codebook
+        version. A payload packed under the src version of an OPEN
+        migration window admits as ``migrated``."""
+        if p.wire != WIRE_VERSION:
+            return "rejected", "wire_revision"
+        if self.require_privatized and not p.privatized:
+            return "rejected", "unprivatized"
+        if self.registry.is_retired(p.version):
+            return "rejected", "retired_version"
+        if p.version not in self.registry:
+            return "rejected", "unknown_version"
+        win = self.registry.migration
+        if win is not None and int(p.version) == win.src:
+            return "migrated", "migration_window"
+        return "accepted", ""
+
+    def ingest(self, payload, *, client_ids=None, round: int = 0
+               ) -> AdmissionResult:
         """THE downlink entry: one payload into the versioned store.
 
-        Coerces legacy carriers (packed ``Transmission``), then enforces
-        the wire invariants: known wire revision, known codebook version,
-        and — unless ``require_privatized=False`` — the §2.5 flag that
-        only public Z• codes are aboard.
+        Coerces legacy carriers (packed ``Transmission``) — a carrier
+        that is not a payload at all still raises ``TypeError`` — then
+        runs :meth:`precheck` and returns a structured
+        :class:`AdmissionResult` instead of raising on wire violations.
+        Rejected payloads do NOT enter the store, but their measured
+        bytes are counted (§2.8 accounting includes refusals).
         """
         p = self._coerce(payload)
-        if p.wire != WIRE_VERSION:
-            raise ValueError(f"payload speaks wire revision {p.wire}, this "
-                             f"server speaks {WIRE_VERSION}")
-        if self.require_privatized and not p.privatized:
-            raise ValueError(
-                "refusing a payload not marked privatized: only public Z• "
-                "code indices may cross the wire (§2.5)")
-        if p.version not in self.registry:
-            raise ValueError(f"payload packed under unknown codebook "
-                             f"version {p.version}; registry holds "
-                             f"0..{self.registry.latest}")
-        out = self.store.add(p, client_ids=client_ids, round=round)
+        verdict, reason = self.precheck(p)
         rec = _obs.active()
+        if verdict == "rejected":
+            if rec is not None:
+                rec.metrics.inc("uplinks_rejected")
+                rec.metrics.inc("bytes_rejected", p.nbytes)
+            return AdmissionResult(verdict, reason, p.nbytes, None)
+        out = self.store.add(p, client_ids=client_ids, round=round)
         if rec is not None:
             rec.metrics.inc("uplinks_ingested")
             rec.metrics.inc("bytes_ingested", p.nbytes)
-            rec.event("ingest", round=int(round), **_obs.payload_meta(p))
-        return out
+            if verdict == "migrated":
+                rec.metrics.inc("uplinks_migrated")
+            rec.event("ingest", round=int(round), verdict=verdict,
+                      **_obs.payload_meta(p))
+        return AdmissionResult(verdict, reason, p.nbytes, out)
 
     def features(self, *, version: Optional[int] = None):
         """Bulk decode of everything ingested, each version group against
@@ -318,6 +371,86 @@ class OctopusServer:
                       n_samples=int(out.shape[0]))
             rec.metrics.observe(f"decode_ms/v{int(p.version)}", dur_ms)
         return out
+
+    # ----------------------------------------------------------- migration
+
+    def begin_migration(self, *, src: Optional[int] = None,
+                        dst: Optional[int] = None, policy: str = "keep"):
+        """Open a rolling ``src -> dst`` codebook upgrade window (defaults:
+        latest-1 -> latest). While open, payloads of BOTH versions ingest
+        concurrently — src-version ones get ``migrated`` verdicts."""
+        win = self.registry.begin_migration(src=src, dst=dst, policy=policy)
+        rec = _obs.active()
+        if rec is not None:
+            rec.metrics.set_gauge("migration_open", 1)
+            rec.event("migration", phase="begin", src=win.src, dst=win.dst,
+                      policy=win.policy)
+        return win
+
+    def migration_progress(self) -> Dict[str, int]:
+        """Record/byte counts for the open window's src and dst versions —
+        how much of the store still speaks the old dictionary."""
+        win = self.registry.migration
+        if win is None:
+            raise ValueError("no migration window is open")
+        by_v = self.store.stored_bytes_by_version
+        recs = self.store.records
+        return {
+            "src": win.src, "dst": win.dst,
+            "src_records": sum(1 for r in recs if r.version == win.src),
+            "dst_records": sum(1 for r in recs if r.version == win.dst),
+            "src_bytes": by_v.get(win.src, 0),
+            "dst_bytes": by_v.get(win.dst, 0),
+        }
+
+    def complete_migration(self) -> Dict[str, int]:
+        """Close the window and apply its policy to src-version records:
+        ``keep`` leaves them decoding against their pinned snapshot;
+        ``retire`` evicts them (bytes stay ledgered) and refuses future
+        src uplinks; ``reencode`` transcodes them to the dst codebook
+        before retiring src. Returns the final progress summary."""
+        progress = self.migration_progress()
+        win = self.registry.close_migration()
+        n_reencoded = 0
+        if win.policy in ("retire", "reencode"):
+            gone = self.store.retire_version(win.src)
+            if win.policy == "reencode":
+                for r in gone:
+                    p = self._reencode_payload(r.packed, win.dst)
+                    self.store.add(p, client_ids=r.client_ids,
+                                   round=r.round, labels=r.labels)
+                    n_reencoded += 1
+            self.registry.retire(win.src)
+        progress["n_reencoded"] = n_reencoded
+        rec = _obs.active()
+        if rec is not None:
+            rec.metrics.set_gauge("migration_open", 0)
+            rec.event("migration", phase="complete", src=win.src,
+                      dst=win.dst, policy=win.policy,
+                      src_records=progress["src_records"],
+                      src_bytes=progress["src_bytes"],
+                      n_reencoded=n_reencoded)
+        return progress
+
+    def _reencode_payload(self, packed: CodePayload, dst: int
+                          ) -> CodePayload:
+        """Transcode one payload to the ``dst`` codebook: decode against
+        the snapshot it was packed under, re-quantize each feature to its
+        nearest dst atom, re-pack under ``dst``. Plain-VQ only — a GSVQ
+        index names a (group, slice) product atom, so transcoding it
+        needs the full encoder path, not a nearest-atom lookup."""
+        if self.cfg.n_groups > 1 or self.cfg.n_slices > 1:
+            raise ValueError("reencode migration supports plain VQ only "
+                             f"(cfg has n_groups={self.cfg.n_groups}, "
+                             f"n_slices={self.cfg.n_slices})")
+        feats = OC.codes_to_features(
+            None, self.cfg, packed,
+            codebook=self.registry.get(packed.version))  # (C, B, ..., M)
+        cb = self.registry.get(dst)                      # (K, M)
+        d = jnp.sum((feats[..., None, :] - cb) ** 2, axis=-1)
+        idx = jnp.argmin(d, axis=-1).astype(jnp.int32)
+        return CodePayload.pack(idx, bits=packed.bits, version=int(dst),
+                                privatized=True)
 
     # --------------------------------------------------------- Step 5 tail
 

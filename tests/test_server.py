@@ -355,15 +355,17 @@ def test_async_runtime_full_participation_matches_engine_round(tiny_cfg,
         srv.clients, clients)
 
 
-# ------------------------------------------------------------ deprecation
+# ------------------------------------------------------------- tombstones
 
-def test_ingest_buffer_is_deprecated_alias(tiny_cfg):
-    from repro.sim import IngestBuffer
-    with pytest.warns(DeprecationWarning, match="CodeStore"):
-        buf = IngestBuffer(tiny_cfg)
-    packed = _pack(_codes(0))
-    with pytest.raises(ValueError, match="labels"):    # caught at add() now
-        buf.add(packed, labels=jnp.zeros((7,), jnp.int32))
-    buf.add(packed, labels=jnp.zeros((2, 3), jnp.int32))
-    assert buf.n_samples == 6 and len(buf) == 1
-    np.testing.assert_array_equal(np.asarray(buf.labels()), np.zeros(6))
+def test_retired_shims_raise_with_pointer_to_wire():
+    """The long-deprecated PR-1 shims are GONE, not warning: importing
+    any of them raises ImportError pointing at the unified wire layer."""
+    with pytest.raises(ImportError, match="repro.server.CodeStore"):
+        from repro.sim import IngestBuffer  # noqa: F401
+    with pytest.raises(ImportError, match="repro.wire.CodePayload"):
+        from repro.sim import PackedCodes  # noqa: F401
+    with pytest.raises(ImportError, match="repro.wire.CodePayload"):
+        from repro.sim.engine import PackedCodes  # noqa: F401
+    import repro.sim
+    assert "IngestBuffer" not in repro.sim.__all__
+    assert "PackedCodes" not in repro.sim.__all__

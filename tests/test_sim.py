@@ -14,7 +14,8 @@ from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
 from repro.kernels import ops, ref
 from repro.kernels.pack_bits import code_bits, packing_dims
-from repro.sim import IngestBuffer, SimEngine, stack_clients
+from repro.server import CodeStore
+from repro.sim import SimEngine, stack_clients
 
 
 @pytest.fixture(scope="module")
@@ -135,29 +136,31 @@ def test_engine_merge_matches_sequence_merge(tiny_cfg, server, key):
 
 # ------------------------------------------------------------------ ingest
 
-def test_ingest_buffer_accumulates_and_feeds_downstream(tiny_cfg, server,
-                                                        key):
+def test_code_store_accumulates_engine_rounds(tiny_cfg, server, key):
+    """Engine uplinks land in repro.server.CodeStore (the IngestBuffer
+    successor): measured byte totals, lazily-decoded dataset, labels."""
     n_clients, b = 4, 2
     data = jax.random.normal(key, (n_clients, b, 8, 8, 3))
     engine = SimEngine(tiny_cfg, gamma=0.9)
     clients = engine.init_clients(server, n_clients)
-    with pytest.warns(DeprecationWarning):
-        buf = IngestBuffer(tiny_cfg)     # thin alias over server.CodeStore
+    store = CodeStore(tiny_cfg)
     packeds = []
     for r in range(3):
         clients, packed = engine.round(clients, data)
-        buf.add(packed, labels=jnp.full((n_clients, b), r % 2, jnp.int32))
+        store.add(packed, labels=jnp.full((n_clients, b), r % 2, jnp.int32))
         packeds.append(packed)
-    assert len(buf) == 3
-    assert buf.total_bytes == sum(p.nbytes for p in packeds)
-    assert buf.n_samples == 3 * n_clients * b
-    codes = buf.codes()
-    assert codes.shape[0] == buf.n_samples
+    assert len(store) == 3
+    assert store.total_bytes == sum(p.nbytes for p in packeds)
+    assert store.ingested_bytes == store.total_bytes   # nothing evicted
+    assert store.n_samples == 3 * n_clients * b
+    codes = store.codes()
+    assert codes.shape[0] == store.n_samples
     assert codes.dtype == jnp.int32
-    feats, labels = buf.dataset(server)
-    assert feats.shape[0] == labels.shape[0] == buf.n_samples
-    probe = buf.train_probe(key, server, n_classes=2, steps=3)
-    assert jax.tree.leaves(probe)
+    feats, labels = store.dataset(server)
+    assert feats.shape[0] == labels["label"].shape[0] == store.n_samples
+    np.testing.assert_array_equal(
+        np.asarray(labels["label"]),
+        np.repeat([0, 1, 0], n_clients * b))
 
 
 # -------------------------------------------------------------------- data

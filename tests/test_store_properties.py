@@ -1,0 +1,145 @@
+"""Property tests: sharded code-store ledgers under churn.
+
+The two invariants that make bounded ring buffers safe to run forever:
+  * BYTE CONSERVATION — for every codebook version, at every point in
+    an arbitrary ingest stream, Σ stored + Σ evicted == Σ ingested
+    measured bytes (§2.8 never loses a byte to eviction), under both
+    FIFO and reservoir policies;
+  * PARTITION ISOLATION — a record lands in exactly the
+    ``(version, shard)`` partition its payload routes to, and eviction
+    in one partition never touches another (no cross-version or
+    cross-client mixing).
+
+Payloads are built from raw numpy word streams via
+``CodePayload.from_words`` so the properties run hundreds of cases
+without a single kernel dispatch.  Hypothesis is a dev-only dependency;
+the fixed-case fallbacks keep the invariants covered without it.
+"""
+import numpy as np
+import pytest
+
+from repro.core.dvqae import DVQAEConfig
+from repro.kernels.pack_bits import code_bits, packing_dims
+from repro.server import CodeStore, ShardedCodeStore
+from repro.wire import CodePayload
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # dev-only dependency; fixed cases still run
+    HAVE_HYPOTHESIS = False
+
+BITS = code_bits(16)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=16, n_res_blocks=1)
+
+
+def _payload(n_samples, version, fill=0):
+    """A (n_samples, 3)-shaped payload from raw words — no kernels."""
+    G, W = packing_dims(BITS)
+    count = n_samples * 3
+    rows = (count + G - 1) // G
+    words = np.full((rows, W), fill, dtype=np.uint32)
+    return CodePayload.from_words(words, bits=BITS,
+                                  shape=(n_samples, 3),
+                                  version=version)
+
+
+# (n_samples 1..4, version 0..2, client id 0..7) per ingest step
+if HAVE_HYPOTHESIS:
+    STEP = st.tuples(st.integers(1, 4), st.integers(0, 2),
+                     st.integers(0, 7))
+    STREAM = st.lists(STEP, min_size=1, max_size=40)
+else:
+    STREAM = None
+
+FIXED_STREAMS = [
+    [(2, 0, 0), (3, 0, 1), (2, 1, 0), (4, 0, 2), (1, 1, 3), (2, 0, 0)],
+    [(4, 0, 0)] * 8,                        # one partition, heavy churn
+    [(1, v, c) for v in (0, 1, 2) for c in range(6)],
+]
+
+
+def _run_byte_conservation(tiny_cfg, policy, stream):
+    store = CodeStore(tiny_cfg, capacity_samples=8, policy=policy, seed=3)
+    for i, (n, version, _) in enumerate(stream):
+        store.add(_payload(n, version, fill=i))
+        # the invariant holds at EVERY step, not just at the end
+        stored = store.stored_bytes_by_version
+        ing = store.ingested_bytes_by_version
+        ev = store.evicted_bytes_by_version
+        for v in ing:
+            assert stored.get(v, 0) + ev.get(v, 0) == ing[v], \
+                f"v{v} leak at step {i} under {policy}"
+        # bounded: over capacity only when a single record alone is
+        assert store.n_samples <= 8 or len(store.records) == 1
+    assert store.total_bytes + store.evicted_bytes == store.ingested_bytes
+    assert sum(ing.values()) == store.ingested_bytes
+
+
+def _run_partition_isolation(tiny_cfg, stream):
+    store = ShardedCodeStore(tiny_cfg, n_shards=4, capacity_samples=6,
+                             seed=5)
+    for i, (n, version, client) in enumerate(stream):
+        ids = np.arange(client, client + n)
+        store.add(_payload(n, version, fill=i), client_ids=ids)
+        for (v, shard), part in store.partitions.items():
+            for rec in part.records:
+                assert rec.version == v, "version mixed across partitions"
+                assert store.shard_of(rec.client_ids) == shard, \
+                    "client shard mixed across partitions"
+            assert part.n_samples <= 6 or len(part.records) == 1
+    # aggregate ledgers == sum of partition ledgers, per version
+    ing = store.ingested_bytes_by_version
+    for v in ing:
+        assert store.stored_bytes_by_version.get(v, 0) + \
+            store.evicted_bytes_by_version.get(v, 0) == ing[v]
+    assert store.total_bytes + store.evicted_bytes == store.ingested_bytes
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(stream=STREAM, policy=st.sampled_from(["fifo", "reservoir"]))
+    def test_eviction_conserves_bytes_per_version(stream, policy):
+        cfg = DVQAEConfig(kind="image", in_channels=3, hidden=8,
+                          latent_dim=8, codebook_size=16, n_res_blocks=1)
+        _run_byte_conservation(cfg, policy, stream)
+
+    @settings(max_examples=60, deadline=None)
+    @given(stream=STREAM)
+    def test_partitions_never_mix_versions_or_shards(stream):
+        cfg = DVQAEConfig(kind="image", in_channels=3, hidden=8,
+                          latent_dim=8, codebook_size=16, n_res_blocks=1)
+        _run_partition_isolation(cfg, stream)
+
+
+@pytest.mark.parametrize("policy", ["fifo", "reservoir"])
+@pytest.mark.parametrize("stream", FIXED_STREAMS)
+def test_eviction_conserves_bytes_fixed_cases(tiny_cfg, policy, stream):
+    _run_byte_conservation(tiny_cfg, policy, stream)
+
+
+@pytest.mark.parametrize("stream", FIXED_STREAMS)
+def test_partition_isolation_fixed_cases(tiny_cfg, stream):
+    _run_partition_isolation(tiny_cfg, stream)
+
+
+def test_retire_version_keeps_ledgers(tiny_cfg):
+    """retire_version evicts every record of that version across all
+    shards — the bytes move to the evicted ledger, never vanish."""
+    store = ShardedCodeStore(tiny_cfg, n_shards=2, capacity_samples=32)
+    for i, (n, v, c) in enumerate(FIXED_STREAMS[0]):
+        store.add(_payload(n, v, fill=i),
+                  client_ids=np.arange(c, c + n))
+    ing = dict(store.ingested_bytes_by_version)
+    gone = store.retire_version(0)
+    assert all(r.version == 0 for r in gone)
+    assert store.versions == (1,)
+    assert store.evicted_bytes_by_version[0] == ing[0]
+    assert store.stored_bytes_by_version.get(0, 0) == 0
+    assert store.total_bytes + store.evicted_bytes == store.ingested_bytes

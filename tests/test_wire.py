@@ -11,12 +11,14 @@ PR-1..4 function zoo:
     the per-client payloads' bytes, and ``Transmission.nbytes`` comes
     from the same source;
   * deprecation shims — ``client_transmit`` / ``client_round_fused`` /
-    ``unpack_transmission`` / ``sim.engine.PackedCodes`` warn AND keep
-    behavioral parity with the new API;
-  * wire invariants — the server side refuses unknown wire revisions,
-    unknown codebook versions, and payloads not marked ``privatized``
-    (§2.5: the private residual is structurally untransmittable — pack
-    rejects floats outright);
+    ``unpack_transmission`` warn AND keep behavioral parity with the new
+    API (the retired ``sim.engine.PackedCodes`` now raises — see
+    tests/test_server.py's tombstone test);
+  * wire invariants — the server side REJECTS (structured
+    ``AdmissionResult`` verdicts, §2.8-ledgered, not exceptions)
+    unknown wire revisions, unknown/retired codebook versions, and
+    payloads not marked ``privatized`` (§2.5: the private residual is
+    structurally untransmittable — pack rejects floats outright);
   * privacy — a ``privatized=True`` payload decoded through the facade
     leaks no private-residual signal (the §2.7 audit shows the private
     component is strictly more identifying).
@@ -195,8 +197,9 @@ def test_ingest_lifts_legacy_transmission(tiny_cfg, server, key):
         tx = OC.client_transmit(OC.client_init(server), tiny_cfg, x,
                                 labels=jnp.arange(4))
     srv = OctopusServer(server, tiny_cfg)
-    rec = srv.ingest(tx)
-    assert rec.packed.shape == (1,) + tuple(tx.indices.shape)
+    res = srv.ingest(tx)
+    assert res.verdict == "accepted" and res.ok
+    assert res.record.packed.shape == (1,) + tuple(tx.indices.shape)
     feats, labels = srv.features()
     assert feats.shape[0] == 4
     np.testing.assert_array_equal(np.asarray(labels["label"]),
@@ -242,18 +245,6 @@ def test_unpack_transmission_shim_parity(tiny_cfg, server, key):
                                   np.asarray(tx.indices))
 
 
-def test_packedcodes_is_deprecated_codepayload_alias():
-    from repro.sim.engine import PackedCodes
-    words = ops.pack_codes(jnp.arange(12, dtype=jnp.int32), bits=4)
-    with pytest.warns(DeprecationWarning, match="CodePayload"):
-        pc = PackedCodes(payload=words, bits=4, shape=(12,))
-    assert isinstance(pc, CodePayload)
-    ref = CodePayload(payload=words, bits=4, shape=(12,))
-    assert pc.nbytes == ref.nbytes and pc.count == ref.count
-    np.testing.assert_array_equal(np.asarray(pc.unpack()),
-                                  np.asarray(ref.unpack()))
-
-
 # ----------------------------------------------------------- server facade
 
 def test_server_facade_ingest_keys_on_payload_version(tiny_cfg, server):
@@ -282,20 +273,28 @@ def test_server_facade_ingest_keys_on_payload_version(tiny_cfg, server):
 
 
 def test_server_facade_rejects_wire_violations(tiny_cfg, server):
+    """Wire violations come back as structured rejection verdicts — the
+    payload never enters the store, but its measured bytes do reach the
+    §2.8 ledger (AdmissionResult.nbytes)."""
     srv = OctopusServer(server, tiny_cfg)
     good = CodePayload.pack(jnp.zeros((2, 3, 4), jnp.int32), bits=4)
-    with pytest.raises(ValueError, match="wire revision"):
-        srv.ingest(good._replace(wire=WIRE_VERSION + 1))
-    with pytest.raises(ValueError, match="privatized"):
-        srv.ingest(good._replace(privatized=False))
-    with pytest.raises(ValueError, match="unknown codebook version"):
-        srv.ingest(good._replace(version=7))
+    for bad, reason in [
+            (good._replace(wire=WIRE_VERSION + 1), "wire_revision"),
+            (good._replace(privatized=False), "unprivatized"),
+            (good._replace(version=7), "unknown_version")]:
+        res = srv.ingest(bad)
+        assert res.verdict == "rejected" and not res.ok
+        assert res.reason == reason
+        assert res.record is None
+        assert res.nbytes == bad.nbytes > 0     # refusals stay ledgered
     with pytest.raises(TypeError):
         srv.ingest(jnp.zeros((2, 3, 4), jnp.int32))   # bare indices
     # the store itself also refuses non-privatized payloads (§2.5)
     with pytest.raises(ValueError, match="privatized"):
         srv.store.add(good._replace(privatized=False))
-    srv.ingest(good)
+    assert len(srv.store) == 0                  # no rejection landed
+    res = srv.ingest(good)
+    assert res.verdict == "accepted" and res.ok
     assert srv.store.n_samples == 6
 
 
