@@ -29,14 +29,12 @@ Paper targets:
            dispatch-count-neutral, plus the CodePayload->store roundtrip
 
 ``wire`` CSV schema (rows ``wire,<name>,<value>[,extra]``):
-  bit_identical_to_fused    facade words == client_round_fused words
-  facade_samples_per_sec    jitted facade round (repro.wire.round_words)
-  fused_samples_per_sec     jitted PR-4 client_round_fused (deprecated)
-  facade_overhead           facade time / fused time (target <= 1.05)
+  bit_identical_to_fused    facade payload words == pure round_words core
+  facade_samples_per_sec    jitted facade round core (wire.round_words)
   facade_encoder_passes     COUNTED encoder invocations of one facade
-                            round (extra: the fused path's count)
+                            round (extra: the pure core's count)
   facade_encode_dispatches  COUNTED ops.encode_codes dispatches (extra:
-                            the fused path's count)
+                            the pure core's count)
   payload_bytes             measured CodePayload.nbytes of one round
   store_bytes_match         store.total_bytes == payload.nbytes after
                             OctopusServer.ingest
@@ -92,6 +90,14 @@ continuous-ingest soak rows (``server,continuous_*`` / ``admission_*``):
   continuous_migrations         rolling v_n -> v_{n+1} windows completed
   continuous_decode_amortization   records decoded per fused dispatch
                        by the background bulk-decode batches
+chaos-plane rows (``server,goodput_under_faults`` etc.):
+  goodput_under_faults  delivered B/s of the SAME soak run through a
+                       journaled FaultyChannel (drop / duplicate /
+                       reorder / delay / corrupt / truncate + retries)
+                       — the §2.8 ledger stays conserved under chaos
+  faults_injected / fault_retries   chaos extent (extra: per-kind)
+  recovery_time_s      crash drill: snapshot + journal replay back to
+                       the exact pre-kill tick/verdicts/ledger
 
 ``sim`` CSV schema (all rows ``sim,<name>,<value>[,<extra>]``):
   n_clients            population size advanced per jitted call
@@ -703,7 +709,8 @@ def bench_server(key):
         _emit("server", f"admission_{v}_bytes", svc.verdict_bytes.get(v, 0))
     q = svc.queue
     assert q.bytes_sent == (q.bytes_delivered + q.bytes_dropped +
-                            q.bytes_rejected + q.bytes_in_flight), \
+                            q.bytes_rejected + q.bytes_duplicate +
+                            q.bytes_in_flight), \
         "uplink byte ledger leaked under backpressure"
     backpressured = (svc.verdicts.get("deferred", 0)
                      + svc.verdicts.get("rejected", 0))
@@ -719,6 +726,72 @@ def bench_server(key):
     _emit("server", "continuous_decode_amortization",
           f"{svc.decode_amortization:.2f}",
           extra="records decoded per fused dispatch")
+
+    # ---- chaos plane: the same soak through a FaultyChannel, journaled.
+    # goodput_under_faults prices retries, duplicates and CRC rejections
+    # into the delivered-byte rate; recovery_time_s measures the crash
+    # drill (snapshot + journal replay to the exact pre-kill state).
+    import os
+    import tempfile
+
+    from repro.server import ServerPersistence
+    from repro.sim import FaultPlan, FaultyChannel
+    from repro.wire import RetryPolicy
+
+    root = os.path.join(tempfile.mkdtemp(prefix="octopus_bench_"), "srv")
+    fstate = OC.server_init(key, ccfg)
+    fsrv = OctopusServer(fstate, ccfg,
+                         store=ShardedCodeStore(ccfg, n_shards=4,
+                                                capacity_samples=4096))
+    fsvc = ContinuousIngestService(
+        fsrv, capacity=4, defer_depth=3,
+        decode_policy=BulkDecodePolicy(min_batch=1, max_batch=64),
+        persist=ServerPersistence(root, snapshot_every=5))
+    chan = FaultyChannel(
+        fsvc,
+        FaultPlan(drop=0.15, duplicate=0.15, reorder=0.2, delay=0.3,
+                  corrupt=0.1, truncate=0.1),
+        key=jax.random.fold_in(key, 123),
+        retry=RetryPolicy(max_attempts=3))
+    fsched = RoundScheduler(
+        n_slots * 2,
+        SchedulerConfig(rate=float(n_slots), straggler_prob=0.4,
+                        max_delay=2, drop_prob=0.1),
+        key=jax.random.fold_in(key, 124))
+    ceng.run_continuous(chan, fsched, data_fn, cohort_size=4, n_ticks=1)
+    t0 = time.time()
+    ceng.run_continuous(chan, fsched, data_fn, cohort_size=4,
+                        n_ticks=n_ticks, merge_every=3,
+                        migration_policy="keep")
+    chan.drain()
+    dt = max(time.time() - t0, 1e-9)
+    fq = fsvc.queue
+    assert fq.bytes_sent == (fq.bytes_delivered + fq.bytes_dropped +
+                             fq.bytes_rejected + fq.bytes_duplicate +
+                             fq.bytes_in_flight), \
+        "uplink byte ledger leaked under chaos"
+    assert sum(chan.faults.values()) > 0, "fault plan never fired"
+    _emit("server", "goodput_under_faults",
+          f"{fq.bytes_delivered / dt:.0f}",
+          extra=f"delivered B/s, {sum(chan.faults.values())} faults + "
+                f"{chan.retries} retries priced in")
+    _emit("server", "faults_injected", sum(chan.faults.values()),
+          extra=", ".join(f"{k}={v}"
+                          for k, v in sorted(chan.faults.items())))
+    _emit("server", "fault_retries", chan.retries)
+
+    t0 = time.time()
+    recovered = ContinuousIngestService.recover(
+        root, ccfg, OC.server_init(key, ccfg),
+        capacity=4, defer_depth=3,
+        decode_policy=BulkDecodePolicy(min_batch=1, max_batch=64))
+    rec_s = time.time() - t0
+    assert recovered.tick_idx == fsvc.tick_idx
+    assert recovered.verdicts == fsvc.verdicts, \
+        "recovered verdict histogram diverged"
+    assert recovered.queue.bytes_sent == fq.bytes_sent
+    _emit("server", "recovery_time_s", f"{rec_s:.3f}",
+          extra=f"snapshot + journal replay to tick {recovered.tick_idx}")
 
 
 # ---------------------------------------------------------------- decode
@@ -895,10 +968,9 @@ def bench_encode(key):
 
 def bench_wire(key):
     """Unified wire protocol: the OctopusClient/OctopusServer facade
-    round vs the PR-4 fused round it replaced — must be dispatch-count
-    neutral and bit-identical (schema in the module docstring)."""
-    import warnings
-
+    round vs the pure ``round_words`` core it wraps — must be
+    dispatch-count neutral and bit-identical (schema in the module
+    docstring)."""
     import numpy as np
 
     from repro.core import octopus as OC
@@ -915,14 +987,13 @@ def bench_wire(key):
 
     facade_fn = jax.jit(lambda c, xb: round_words(c, cfg, xb,
                                                   n_local_steps=0))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy_fn = jax.jit(lambda c, xb: OC.client_round_fused(
-            c, cfg, xb, n_local_steps=0))
-        _, legacy_words = legacy_fn(client0, x)            # compile
     _, words = facade_fn(client0, x)                       # compile
-    jax.block_until_ready((words, legacy_words))
-    assert np.array_equal(np.asarray(words), np.asarray(legacy_words))
+    jax.block_until_ready(words)
+    # the facade's CodePayload carries exactly the pure core's words
+    srv = OctopusServer(server, cfg)
+    cl = srv.deploy()
+    payload = cl.round(x, finetune=0)
+    assert np.array_equal(np.asarray(payload.payload), np.asarray(words))
     _emit("wire", "bit_identical_to_fused", "True")
 
     def timeit(fn):
@@ -932,34 +1003,19 @@ def bench_wire(key):
         jax.block_until_ready(out)
         return (time.time() - t0) / rounds
 
-    # interleave the two paths and keep mins — the compiled computations
-    # are identical, so any gap is scheduling noise, not the facade
-    t_f, t_l = [], []
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        for _ in range(5):
-            t_f.append(timeit(facade_fn))
-            t_l.append(timeit(legacy_fn))
-    t_facade, t_legacy = min(t_f), min(t_l)
+    t_facade = min(timeit(facade_fn) for _ in range(5))
     _emit("wire", "facade_samples_per_sec", f"{B / t_facade:.0f}")
-    _emit("wire", "fused_samples_per_sec", f"{B / t_legacy:.0f}")
-    _emit("wire", "facade_overhead", f"{t_facade / t_legacy:.3f}",
-          extra="target<=1.05x")
 
     # dispatch neutrality, COUNTED (not inferred): encoder passes and
-    # fused encode dispatches of one un-jitted facade round vs PR-4,
-    # through the supported monitor (obs.dispatch_monitor)
+    # fused encode dispatches of one un-jitted facade round vs the pure
+    # core, through the supported monitor (obs.dispatch_monitor)
     from repro.obs import dispatch_monitor
 
-    srv = OctopusServer(server, cfg)
-    cl = srv.deploy()
     with dispatch_monitor() as fcounts:
         cl.round(x, finetune=0)
     fe, fk = fcounts.encoder_passes, fcounts.encode_dispatches
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        with dispatch_monitor() as lcounts:
-            OC.client_round_fused(client0, cfg, x, n_local_steps=0)
+    with dispatch_monitor() as lcounts:
+        round_words(client0, cfg, x, n_local_steps=0)
     le, lk = lcounts.encoder_passes, lcounts.encode_dispatches
     _emit("wire", "facade_encoder_passes", fe, extra=f"fused={le}")
     _emit("wire", "facade_encode_dispatches", fk, extra=f"fused={lk}")

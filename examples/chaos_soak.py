@@ -1,0 +1,170 @@
+"""Chaos soak + crash drill: faulted uplinks into a journaled service,
+then a mid-stream kill and a bit-exact recovery.
+
+The continuous-ingest runtime under the conditions OCTOPUS actually
+assumes (§2.7-§2.8: flaky edge uplinks are the norm, not the
+exception): every cohort payload crosses a ``FaultyChannel`` that
+deterministically drops, duplicates, reorders, delays, corrupts and
+truncates on its own PRNG substreams; clients retransmit transient
+failures under ``(client_id, seq)`` idempotency envelopes
+(``RetryPolicy`` backoff), so ingest stays exactly-once over an
+at-least-once channel; every admitted offer / tick / merge / migration
+is journaled through ``ServerPersistence`` with periodic snapshots.
+
+Halfway through, the service is KILLED (abandoned mid-migration) and
+``ContinuousIngestService.recover`` rebuilds it from snapshot + journal
+replay — the drill asserts the recovered verdict histogram, byte
+ledger and decoded features are EXACTLY the crashed service's, then
+keeps serving traffic on the recovered instance.
+
+Set ``OCTOPUS_TRACE=chaos.jsonl`` to flight-record the run, then audit
+it (fault histogram + §2.8 conservation incl. duplicates) with
+``python -m repro.obs.report chaos.jsonl --check``.
+
+    PYTHONPATH=src python examples/chaos_soak.py
+"""
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.data import make_images, partition_stacked
+from repro.server import (BulkDecodePolicy, ContinuousIngestService,
+                          RoundScheduler, SchedulerConfig,
+                          ServerPersistence, ShardedCodeStore)
+from repro.sim import CohortEngine, FaultPlan, FaultyChannel
+from repro.wire import OctopusServer, RetryPolicy
+
+rec = obs.install_from_env()                 # OCTOPUS_TRACE=... to record
+
+key = jax.random.PRNGKey(0)
+cfg = DVQAEConfig(kind="image", in_channels=3, hidden=16, latent_dim=16,
+                  codebook_size=64, n_res_blocks=1)
+
+N_SLOTS, COHORT, TICKS = 16, 4, 12
+data = make_images(key, 640, size=16, n_identities=4)
+
+server0, out = OC.server_pretrain(key, OC.server_init(key, cfg), cfg,
+                                  data.x, steps=40)
+print(f"pretrain recon loss: {float(out.recon_loss):.4f}")
+
+stacked = partition_stacked(data, N_SLOTS, regime="skewed", skew=0.2)
+
+
+def data_fn(ids):
+    return stacked.x[np.asarray(ids) % N_SLOTS, :COHORT]
+
+
+root = os.path.join(tempfile.mkdtemp(prefix="octopus_chaos_"), "srv")
+
+
+def build_service():
+    srv = OctopusServer(server0, cfg,
+                        store=ShardedCodeStore(cfg, n_shards=2,
+                                               capacity_samples=4096))
+    return ContinuousIngestService(
+        srv, capacity=6, defer_depth=4,
+        decode_policy=BulkDecodePolicy(min_batch=2, max_batch=64,
+                                       interval_ticks=2),
+        persist=ServerPersistence(root, snapshot_every=5))
+
+
+PLAN = FaultPlan(drop=0.15, duplicate=0.15, reorder=0.2, delay=0.3,
+                 corrupt=0.1, truncate=0.1)
+service = build_service()
+chan = FaultyChannel(service, PLAN, key=jax.random.PRNGKey(3),
+                     retry=RetryPolicy(max_attempts=3))
+sched = RoundScheduler(
+    N_SLOTS,
+    SchedulerConfig(rate=6.0, straggler_prob=0.4, max_delay=2,
+                    drop_prob=0.1, leave_prob=0.2, join_prob=0.5),
+    key=jax.random.PRNGKey(7))
+engine = CohortEngine(cfg, gamma=0.95, n_local_steps=0)
+
+# phase 1: chaos soak — merges every 4 ticks, each opening a rolling
+# migration window, all of it journaled
+t0 = time.time()
+hist = engine.run_continuous(chan, sched, data_fn, cohort_size=COHORT,
+                             n_ticks=TICKS, merge_every=4,
+                             migration_policy="keep")
+dt = max(time.time() - t0, 1e-9)
+n_up = sum(service.verdicts.values())
+print(f"\n{TICKS} faulted ticks, {n_up} offers, "
+      f"{n_up / dt:.1f} uplinks/sec under chaos "
+      f"({sum(chan.faults.values())} faults injected: "
+      + ", ".join(f"{k}={v}" for k, v in sorted(chan.faults.items()))
+      + f", {chan.retries} retries)")
+
+q = service.queue
+assert q.bytes_sent == (q.bytes_delivered + q.bytes_dropped
+                        + q.bytes_rejected + q.bytes_duplicate
+                        + q.bytes_in_flight)
+print("byte ledger conserved under chaos: OK")
+
+# phase 2: the CRASH — abandon the live service (in-flight queue, open
+# migration window and all) and recover from snapshot + journal
+crashed = service
+assert crashed.wire.registry.migration is not None, \
+    "kill was supposed to land mid-migration"
+print(f"\nKILL at tick {crashed.tick_idx} (migration "
+      f"v{crashed.wire.registry.migration.src}->"
+      f"v{crashed.wire.registry.migration.dst} OPEN, "
+      f"{len(crashed.queue)} payloads in flight)")
+
+t0 = time.time()
+recovered = ContinuousIngestService.recover(
+    root, cfg, OC.server_init(key, cfg),
+    capacity=6, defer_depth=4,
+    decode_policy=BulkDecodePolicy(min_batch=2, max_batch=64,
+                                   interval_ticks=2))
+rec_s = time.time() - t0
+
+assert recovered.tick_idx == crashed.tick_idx
+assert recovered.verdicts == crashed.verdicts
+assert recovered.verdict_bytes == crashed.verdict_bytes
+for attr in ("bytes_sent", "bytes_delivered", "bytes_dropped",
+             "bytes_rejected", "bytes_duplicate", "bytes_in_flight"):
+    assert getattr(recovered.queue, attr) == getattr(crashed.queue, attr)
+rw = recovered.wire.registry.migration
+assert rw is not None and rw.dst == crashed.wire.registry.migration.dst
+fa, _ = crashed.wire.features()
+fb, _ = recovered.wire.features()
+assert np.array_equal(np.asarray(fa), np.asarray(fb))
+print(f"recovered in {rec_s:.2f}s: verdicts, ledger and decoded "
+      f"features EXACT (tick {recovered.tick_idx}, migration window "
+      f"still open, {len(recovered.wire.store)} records)")
+
+# phase 3: the recovered service keeps serving the same chaos
+chan2 = FaultyChannel(recovered, PLAN, key=jax.random.PRNGKey(4),
+                      retry=RetryPolicy(max_attempts=3))
+hist2 = engine.run_continuous(chan2, sched, data_fn, cohort_size=COHORT,
+                              n_ticks=TICKS // 2, merge_every=4,
+                              migration_policy="keep")
+chan2.drain()
+q = recovered.queue
+assert q.bytes_sent == (q.bytes_delivered + q.bytes_dropped
+                        + q.bytes_rejected + q.bytes_duplicate
+                        + q.bytes_in_flight)
+print(f"\npost-recovery: {TICKS // 2} more faulted ticks "
+      f"({sum(chan2.faults.values())} faults), ledger still conserved, "
+      f"registry at v{recovered.wire.registry.latest}")
+
+store = recovered.wire.store
+for r in store.records:
+    now = OC.codes_to_features(None, cfg, r.packed,
+                               codebook=recovered.wire.registry.get(
+                                   r.version))
+    ref = recovered.wire.decode(r.packed)
+    assert np.array_equal(np.asarray(now).reshape(np.asarray(ref).shape),
+                          np.asarray(ref)), r.version
+print(f"bit-exact decode for versions {store.versions} after crash + "
+      f"recovery: OK")
+
+if rec is not None:
+    obs.uninstall()
+    print(f"\ntrace written: {rec.path}")

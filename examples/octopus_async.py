@@ -102,9 +102,10 @@ print("admission verdicts: "
 q = service.queue
 print(f"uplink bytes: sent={q.bytes_sent} delivered={q.bytes_delivered} "
       f"dropped={q.bytes_dropped} rejected={q.bytes_rejected} "
-      f"in_flight={q.bytes_in_flight}")
+      f"duplicate={q.bytes_duplicate} in_flight={q.bytes_in_flight}")
 assert q.bytes_sent == (q.bytes_delivered + q.bytes_dropped
-                        + q.bytes_rejected + q.bytes_in_flight)
+                        + q.bytes_rejected + q.bytes_duplicate
+                        + q.bytes_in_flight)
 print("byte ledger conserved across refusals: OK")
 
 store = srv.store

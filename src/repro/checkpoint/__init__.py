@@ -1,2 +1,4 @@
-"""Pytree checkpointing to .npz (flat path-keyed arrays) + metadata json."""
+"""Pytree checkpointing to .npz (flat path-keyed arrays) + metadata json,
+plus the append-only JSONL journal crash recovery replays from."""
+from .journal import Journal, decode_array, encode_array
 from .npz import load_pytree, restore, save, save_pytree

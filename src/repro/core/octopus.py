@@ -14,7 +14,6 @@ group) — see repro.distributed for the sharded variant.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -145,38 +144,8 @@ def client_finetune_step(client: ClientState, cfg: DVQAEConfig, batch,
 
 
 # ----------------------------------------------------------- Steps 3 + 4
-
-def client_transmit(client: ClientState, cfg: DVQAEConfig, batch,
-                    labels=None) -> Transmission:
-    """DEPRECATED (use ``repro.wire.OctopusClient.transmit`` — same
-    uplink as a ``CodePayload``, without materializing the index tensor).
-
-    Encode a local batch, release ONLY the public code indices,
-    bit-packed to ceil(log2 K) bits per code (§2.8)."""
-    warnings.warn(
-        "client_transmit is deprecated; use repro.wire.OctopusClient"
-        ".transmit / .round (CodePayload uplink)",
-        DeprecationWarning, stacklevel=2)
-    from repro.wire.payload import CodePayload
-    out = forward(client.params, cfg, batch)
-    idx = out.latent.indices
-    p = CodePayload.pack(idx, bits=transmit_bits(cfg))
-    return Transmission(indices=idx, nbytes=p.nbytes, labels=labels,
-                        payload=p.payload, bits=p.bits)
-
-
-def unpack_transmission(tx: Transmission) -> jax.Array:
-    """DEPRECATED (use ``repro.wire.CodePayload.unpack``): server side of
-    Step 4, packed payload -> int32 code matrix."""
-    warnings.warn(
-        "unpack_transmission is deprecated; use repro.wire.CodePayload"
-        ".unpack (via repro.wire.as_payload for legacy Transmissions)",
-        DeprecationWarning, stacklevel=2)
-    from repro.wire.payload import as_payload
-    p = as_payload(tx)
-    if p is None:                      # unpacked legacy carrier
-        return tx.indices
-    return p.unpack()
+# (client_transmit / unpack_transmission are RETIRED — see _TOMBSTONES
+# at the end of the module; the uplink is repro.wire.CodePayload now)
 
 
 # --------------------------------------------------------------- Step 5
@@ -354,26 +323,6 @@ def client_round(client: ClientState, cfg: DVQAEConfig, batch, *,
     return client, idx
 
 
-def client_round_fused(client: ClientState, cfg: DVQAEConfig, batch, *,
-                       lr: float = 1e-4, gamma: float = 0.99,
-                       n_local_steps: int = 1):
-    """DEPRECATED (use ``repro.wire.OctopusClient.round`` — the same
-    fused Steps 2-5 tail, returning a ``CodePayload``; or the pure
-    ``repro.wire.round_words`` for jit composition).
-
-    Returns (new_client, (nW, W) uint32 packed words) — the words are
-    exactly ``pack_codes(indices, bits=transmit_bits(cfg))``, identical
-    to ``OctopusClient.round(batch).payload``.
-    """
-    warnings.warn(
-        "client_round_fused is deprecated; use repro.wire.OctopusClient"
-        ".round / repro.wire.round_words (CodePayload uplink)",
-        DeprecationWarning, stacklevel=2)
-    from repro.wire.session import round_words
-    return round_words(client, cfg, batch, lr=lr, gamma=gamma,
-                       n_local_steps=n_local_steps)
-
-
 # --------------------------------------------------------------- Step 6
 
 def gather_codes(transmissions: Sequence[Transmission], *,
@@ -462,3 +411,28 @@ def codes_to_features(server: Optional[ServerState], cfg: DVQAEConfig,
         return gsvq_dequantize_indices(indices, cb, n_groups=cfg.n_groups,
                                        n_slices=cfg.n_slices)
     return dequantize(indices, cb)
+
+
+# ------------------------------------------------------------ tombstones
+# The PR-5 wire shims finished their deprecation cycle: importing one now
+# raises with a pointer at the unified wire layer, the same retirement
+# pattern as repro.sim's IngestBuffer/PackedCodes.
+
+_TOMBSTONES = {
+    "client_transmit": "repro.wire.OctopusClient.transmit / .round "
+                       "(CodePayload uplink)",
+    "client_round_fused": "repro.wire.OctopusClient.round / "
+                          "repro.wire.round_words",
+    "unpack_transmission": "repro.wire.CodePayload.unpack (via "
+                           "repro.wire.as_payload for legacy "
+                           "Transmissions)",
+}
+
+
+def __getattr__(name):
+    if name in _TOMBSTONES:
+        raise ImportError(
+            f"repro.core.octopus.{name} was removed; use "
+            f"{_TOMBSTONES[name]} — the unified wire carrier, see "
+            f"repro.wire")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

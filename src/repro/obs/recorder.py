@@ -23,6 +23,13 @@ per line, one line per event, covering the whole uplink life cycle —
                queue depth) — refusals stay §2.8-witnessed
   ``migration`` a rolling codebook-upgrade window opening or closing
                (src / dst versions, policy, leftover src records)
+  ``fault``    the chaos plane injecting one fault into one uplink
+               (``fault`` = drop / duplicate / reorder / delay /
+               corrupt / truncate, plus the victim's nbytes)
+  ``retry``    a client scheduling a retransmit of a transient-refused
+               envelope (client_id / seq / attempt / backoff ticks)
+  ``recovery`` one crash recovery completing (snapshot tick, journal
+               entries replayed, wall duration)
 
 Zero-overhead default: no recorder is installed unless the process opts
 in (:func:`install` / :func:`recording` / the ``OCTOPUS_TRACE`` env
@@ -47,7 +54,7 @@ from typing import IO, Any, Dict, Optional, Union
 from .metrics import MetricsRegistry
 
 EVENT_KINDS = ("round", "encode", "uplink", "ingest", "decode", "merge",
-               "admission", "migration")
+               "admission", "migration", "fault", "retry", "recovery")
 
 #: uplink/ingest events carry EXACTLY this payload metadata — the §2.5
 #: boundary of the observability plane (no words, no labels, no latents)

@@ -22,9 +22,12 @@ uplink events also fails the check: an empty recorder is not evidence.
 Continuous-ingest traces (``admission`` events present, every round
 event carrying ``bytes_in_flight``) additionally get the conservation
 check: Σ uplink bytes == Σ ingested bytes + Σ admission-REJECTED bytes
-+ the final tick's bytes still in flight — i.e. every refused or
-deferred payload stays on the ledger, backpressure and migration
-included.
++ Σ admission-DUPLICATE bytes + the final tick's bytes still in flight
+— i.e. every refused, retransmitted-and-deduplicated, or deferred
+payload stays on the ledger, backpressure, faults and migration
+included. Chaos-plane traces (``fault`` / ``retry`` / ``recovery``
+events) get their injected-fault histogram, retry count and recovery
+drill summarized alongside.
 """
 from __future__ import annotations
 
@@ -73,6 +76,9 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
                  "verdict_bytes": defaultdict(int),
                  "reasons": defaultdict(int)}
     migrations: List[Dict[str, Any]] = []
+    faults: Dict[str, int] = defaultdict(int)
+    retries = 0
+    recoveries: List[Dict[str, Any]] = []
     for ev in events:
         kind = ev.get("kind", "?")
         kinds[kind] += 1
@@ -112,27 +118,63 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
                                ("phase", "src", "dst", "policy",
                                 "src_records", "src_bytes", "n_reencoded")
                                if k in ev})
+        elif kind == "fault":
+            faults[str(ev.get("fault", "?"))] += 1
+        elif kind == "retry":
+            retries += 1
+        elif kind == "recovery":
+            recoveries.append({k: ev.get(k) for k in
+                               ("tick", "snapshot_tick", "n_replayed",
+                                "dur_ms", "queue_depth", "store_records")
+                               if k in ev})
 
-    round_rows = []
+    # one row per round INDEX: a crash-recovered service re-emits ticks
+    # of the indices the crashed instance already traced (recovery is a
+    # point on the same timeline, not a fork), so counter fields SUM
+    # across the event group while gauges (queue depth, in-flight) come
+    # from the group's last event — the per-round §2.8 identity then
+    # holds across the kill
+    by_rid: Dict[Any, Dict[str, Any]] = {}
+    order: List[Any] = []
     for ev in sorted(rounds, key=lambda e: e.get("round", -1)):
         rid = ev.get("round")
         u = per_round_up.get(int(rid), {"n": 0, "bytes": 0}) \
             if rid is not None else {"n": 0, "bytes": 0}
         dur_ms = float(ev.get("dur_ms", 0.0))
-        round_rows.append({
-            "round": rid,
-            "n_participants": ev.get("n_participants"),
-            "n_cohorts": ev.get("n_cohorts"),
-            "n_uplinks": u["n"],
-            "uplink_bytes": u["bytes"],
-            "bytes_sent": ev.get("bytes_sent"),
-            "bytes_delivered": ev.get("bytes_delivered"),
-            "queue_depth": ev.get("queue_depth"),
-            "bytes_in_flight": ev.get("bytes_in_flight"),
-            "merged_version": ev.get("merged_version"),
-            "dur_ms": dur_ms,
-            "uplinks_per_sec": (u["n"] / (dur_ms / 1e3)) if dur_ms else None,
-        })
+        row = by_rid.get(rid)
+        if row is None:
+            order.append(rid)
+            by_rid[rid] = {
+                "round": rid,
+                "n_participants": ev.get("n_participants"),
+                "n_cohorts": ev.get("n_cohorts"),
+                "n_uplinks": u["n"],
+                "uplink_bytes": u["bytes"],
+                "bytes_sent": ev.get("bytes_sent"),
+                "bytes_delivered": ev.get("bytes_delivered"),
+                "queue_depth": ev.get("queue_depth"),
+                "bytes_in_flight": ev.get("bytes_in_flight"),
+                "merged_version": ev.get("merged_version"),
+                "dur_ms": dur_ms,
+            }
+            continue
+        for f in ("n_participants", "n_cohorts", "bytes_sent",
+                  "bytes_delivered"):
+            if ev.get(f) is not None:
+                row[f] = (row[f] or 0) + ev[f]
+        for f in ("queue_depth", "bytes_in_flight"):
+            if ev.get(f) is not None:
+                row[f] = ev[f]
+        if ev.get("merged_version") is not None:
+            row["merged_version"] = ev["merged_version"]
+        row["dur_ms"] += dur_ms
+    round_rows = []
+    for rid in order:
+        row = by_rid[rid]
+        dur_ms = row["dur_ms"]
+        row["uplinks_per_sec"] = (row["n_uplinks"] / (dur_ms / 1e3)) \
+            if dur_ms else None
+        round_rows.append(row)
     for d in decode.values():
         d["mean_ms"] = d["total_ms"] / d["count"] if d["count"] else 0.0
     return {"n_events": len(events), "kinds": dict(kinds), "uplinks": up,
@@ -144,7 +186,8 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
                           "verdicts": dict(admission["verdicts"]),
                           "verdict_bytes": dict(admission["verdict_bytes"]),
                           "reasons": dict(admission["reasons"])},
-            "migrations": migrations}
+            "migrations": migrations, "faults": dict(faults),
+            "retries": retries, "recoveries": recoveries}
 
 
 def check_bytes(summary: Dict[str, Any]) -> List[str]:
@@ -164,20 +207,23 @@ def check_bytes(summary: Dict[str, Any]) -> List[str]:
                 f"{row['uplink_bytes']} B but the round ledger sent "
                 f"{sent} B")
     # continuous-ingest conservation: every byte that hit the wire is
-    # either in the store, refused-and-witnessed, or still in flight
+    # either in the store, refused-and-witnessed, a deduplicated
+    # retransmit, or still in flight
     adm = summary.get("admission", {"n": 0})
     rows = summary["rounds"]
     if adm["n"] and rows and all(r.get("bytes_in_flight") is not None
                                  for r in rows):
         rejected = adm["verdict_bytes"].get("rejected", 0)
+        duplicate = adm["verdict_bytes"].get("duplicate", 0)
         in_flight = int(rows[-1]["bytes_in_flight"])
         lhs = int(summary["uplinks"]["bytes"])
-        rhs = int(summary["ingest"]["bytes"]) + int(rejected) + in_flight
+        rhs = int(summary["ingest"]["bytes"]) + int(rejected) \
+            + int(duplicate) + in_flight
         if lhs != rhs:
             problems.append(
                 f"conservation: {lhs} B uplinked != {summary['ingest']['bytes']} B "
-                f"ingested + {rejected} B rejected + {in_flight} B in "
-                f"flight (= {rhs} B)")
+                f"ingested + {rejected} B rejected + {duplicate} B "
+                f"duplicate + {in_flight} B in flight (= {rhs} B)")
     return problems
 
 
@@ -235,6 +281,22 @@ def bench_rows(summary: Dict[str, Any]) -> List[Dict[str, Any]]:
                      "extra": "+".join(
                          f"{m.get('phase')}:{m.get('src')}->{m.get('dst')}"
                          for m in summary["migrations"])})
+    if summary.get("faults"):
+        rows.append({"name": "faults_injected",
+                     "value": sum(summary["faults"].values()),
+                     "extra": "+".join(f"{k}:{v}" for k, v in
+                                       sorted(summary["faults"].items()))})
+        for k in sorted(summary["faults"]):
+            rows.append({"name": f"fault_{k}",
+                         "value": summary["faults"][k], "extra": ""})
+    if summary.get("retries"):
+        rows.append({"name": "retries", "value": summary["retries"],
+                     "extra": "transient-refused envelopes retransmitted"})
+    for r in summary.get("recoveries", []):
+        rows.append({"name": "recovery_ms",
+                     "value": float(r.get("dur_ms", 0.0)),
+                     "extra": f"snap_tick={r.get('snapshot_tick')}_"
+                              f"replayed={r.get('n_replayed')}"})
     return rows
 
 
@@ -282,6 +344,16 @@ def render(summary: Dict[str, Any]) -> str:
                      f"{m.get('src_bytes')} B left, "
                      f"{m.get('n_reencoded')} re-encoded")
         out.append(line)
+    if summary.get("faults"):
+        out.append("faults injected: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(summary["faults"].items())))
+    if summary.get("retries"):
+        out.append(f"retries: {summary['retries']} envelopes retransmitted")
+    for r in summary.get("recoveries", []):
+        out.append(f"recovery: snapshot t={r.get('snapshot_tick')}, "
+                   f"{r.get('n_replayed')} journal entries replayed in "
+                   f"{r.get('dur_ms', 0.0):.1f} ms -> tick {r.get('tick')}, "
+                   f"{r.get('store_records')} records")
     return "\n".join(out)
 
 

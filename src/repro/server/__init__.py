@@ -13,14 +13,18 @@ scale).
                under one PRNG key
   multitask  — MultiTaskTrainer: N downstream heads from ONE bulk decode
   runtime    — ContinuousIngestService: clocked, admission-controlled
-               ingest (backpressure verdicts, background bulk decode
-               under a BulkDecodePolicy); AsyncCodeServer remains the
-               round-quantized shim over it, one tick per round
+               ingest (backpressure verdicts, exactly-once dedup window,
+               background bulk decode under a BulkDecodePolicy) with
+               journaled crash recovery (``recover``); AsyncCodeServer
+               remains the round-quantized shim over it
+  persist    — ServerPersistence: append-only ingest journal + atomic
+               periodic snapshots of the full durable state
 """
 from repro.wire.payload import CodePayload
 from repro.wire.session import AdmissionResult, OctopusServer
 
 from .multitask import MultiTaskTrainer, TaskSpec
+from .persist import ServerPersistence
 from .registry import (MIGRATION_POLICIES, CodebookRegistry,
                        MigrationWindow)
 from .runtime import (AsyncCodeServer, BulkDecodePolicy,
@@ -36,5 +40,5 @@ __all__ = ["AdmissionResult", "AsyncCodeServer", "BulkDecodePolicy",
            "MIGRATION_POLICIES", "MigrationWindow", "MultiTaskTrainer",
            "OctopusServer", "RoundEvent", "RoundScheduler", "RoundStats",
            "STANDARD_SCENARIOS", "Scenario", "SchedulerConfig",
-           "ShardedCodeStore", "StoreRecord", "TaskSpec", "TickStats",
-           "UplinkQueue"]
+           "ServerPersistence", "ShardedCodeStore", "StoreRecord",
+           "TaskSpec", "TickStats", "UplinkQueue"]

@@ -135,6 +135,35 @@ class CodebookRegistry:
             raise KeyError(version)
         self._retired.add(version)
 
+    # --------------------------------------------------------- durability
+
+    def snapshot_state(self) -> tuple:
+        """Durable state -> (JSON-able manifest, {key: np array}): every
+        pinned snapshot, the retired set and any OPEN migration window —
+        a crash mid-migration recovers back INTO the window."""
+        import numpy as np
+        arrays = {f"v{v}": np.asarray(cb)
+                  for v, cb in self._versions.items()}
+        manifest = {"latest": int(self.latest),
+                    "retired": sorted(int(v) for v in self._retired),
+                    "migration": (None if self.migration is None
+                                  else [int(self.migration.src),
+                                        int(self.migration.dst),
+                                        self.migration.policy]),
+                    "versions": sorted(int(v) for v in self._versions)}
+        return manifest, arrays
+
+    def load_state(self, manifest: dict, arrays) -> "CodebookRegistry":
+        """Restore :meth:`snapshot_state` output into this registry."""
+        self._versions = {int(v): jnp.asarray(arrays[f"v{v}"])
+                          for v in manifest["versions"]}
+        self.latest = int(manifest["latest"])
+        self._retired = {int(v) for v in manifest["retired"]}
+        mig = manifest["migration"]
+        self.migration = None if mig is None else MigrationWindow(
+            src=int(mig[0]), dst=int(mig[1]), policy=str(mig[2]))
+        return self
+
     # ----------------------------------------------------------- merging
 
     def merge(self, server: OC.ServerState, client_codebooks, client_counts,

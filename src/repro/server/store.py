@@ -231,6 +231,89 @@ class CodeStore:
         self._set_gauges()
         return tuple(gone)
 
+    # ---------------------------------------------------------- durability
+
+    def snapshot_state(self) -> Tuple[dict, Dict[str, np.ndarray]]:
+        """Durable state -> (JSON-able manifest, {key: np array}).
+
+        Captures the ring contents (packed words + full carrier
+        metadata + provenance), every ledger counter, AND the reservoir
+        RNG state — replaying the same post-snapshot adds reproduces the
+        same evictions, which is what makes journal replay bit-exact.
+        """
+        arrays: Dict[str, np.ndarray] = {}
+        recs = []
+        for i, r in enumerate(self._records):
+            p = r.packed
+            arrays[f"r{i}.words"] = np.asarray(p.payload)
+            arrays[f"r{i}.client_ids"] = np.asarray(r.client_ids)
+            tasks = sorted(r.labels) if r.labels else []
+            for t in tasks:
+                arrays[f"r{i}.label.{t}"] = np.asarray(r.labels[t])
+            recs.append({
+                "round": int(r.round), "version": int(r.version),
+                "bits": int(p.bits), "shape": list(p.shape),
+                "n_records": int(p.n_records),
+                "payload_version": int(p.version),
+                "privatized": bool(p.privatized), "wire": int(p.wire),
+                "checksum": p.checksum if p.checksum is None
+                else int(p.checksum),
+                "tasks": tasks,
+            })
+        manifest = {
+            "kind": "single",
+            "policy": self.policy,
+            "capacity_samples": self.capacity_samples,
+            "seen_records": int(self._seen_records),
+            "evicted": [int(self.evicted_samples),
+                        int(self.evicted_records), int(self.evicted_bytes)],
+            "ingested": [int(self.ingested_records),
+                         int(self.ingested_samples),
+                         int(self.ingested_bytes)],
+            "ingested_by_version": {str(v): int(n) for v, n
+                                    in self._ingested_by_version.items()},
+            "evicted_by_version": {str(v): int(n) for v, n
+                                   in self._evicted_by_version.items()},
+            "rng_state": self._rng.bit_generator.state,
+            "records": recs,
+        }
+        return manifest, arrays
+
+    def load_state(self, manifest: dict, arrays: Dict[str, np.ndarray]
+                   ) -> "CodeStore":
+        """Restore :meth:`snapshot_state` output into this (fresh) store."""
+        from repro.wire.payload import CodePayload as _CP
+        self.policy = manifest["policy"]
+        self.capacity_samples = manifest["capacity_samples"]
+        self._seen_records = int(manifest["seen_records"])
+        (self.evicted_samples, self.evicted_records,
+         self.evicted_bytes) = [int(x) for x in manifest["evicted"]]
+        (self.ingested_records, self.ingested_samples,
+         self.ingested_bytes) = [int(x) for x in manifest["ingested"]]
+        self._ingested_by_version = {
+            int(v): int(n)
+            for v, n in manifest["ingested_by_version"].items()}
+        self._evicted_by_version = {
+            int(v): int(n)
+            for v, n in manifest["evicted_by_version"].items()}
+        self._rng.bit_generator.state = manifest["rng_state"]
+        self._records = []
+        for i, m in enumerate(manifest["records"]):
+            labels = {t: jnp.asarray(arrays[f"r{i}.label.{t}"])
+                      for t in m["tasks"]} or None
+            p = _CP(payload=jnp.asarray(arrays[f"r{i}.words"]),
+                    bits=int(m["bits"]), shape=tuple(m["shape"]),
+                    n_records=int(m["n_records"]),
+                    version=int(m["payload_version"]), labels=labels,
+                    privatized=bool(m["privatized"]), wire=int(m["wire"]),
+                    checksum=(None if m["checksum"] is None
+                              else int(m["checksum"])))
+            self._records.append(StoreRecord(
+                packed=p, client_ids=np.asarray(arrays[f"r{i}.client_ids"]),
+                round=int(m["round"]), version=int(m["version"]),
+                labels=labels))
+        return self
+
     # ------------------------------------------------------------- lookup
 
     def get(self, client_id: int, round: int) -> Tuple[jax.Array, int]:
@@ -558,6 +641,45 @@ class ShardedCodeStore:
                 gone.extend(self._parts[k].retire_version(version))
         self._set_gauges()
         return tuple(gone)
+
+    # ---------------------------------------------------------- durability
+
+    def snapshot_state(self) -> Tuple[dict, Dict[str, np.ndarray]]:
+        """Durable state across ALL partitions (each ring's records,
+        ledgers and reservoir RNG state) — see ``CodeStore
+        .snapshot_state``. Array keys are prefixed ``p<version>.<shard>.``
+        so one flat npz holds the whole sharded store."""
+        arrays: Dict[str, np.ndarray] = {}
+        parts = []
+        for (v, s) in sorted(self._parts):
+            man, arr = self._parts[(v, s)].snapshot_state()
+            prefix = f"p{v}.{s}."
+            arrays.update({prefix + k: a for k, a in arr.items()})
+            parts.append({"version": int(v), "shard": int(s),
+                          "manifest": man})
+        manifest = {"kind": "sharded", "n_shards": int(self.n_shards),
+                    "capacity_samples": self.capacity_samples,
+                    "policy": self.policy, "seed": int(self.seed),
+                    "partitions": parts}
+        return manifest, arrays
+
+    def load_state(self, manifest: dict, arrays: Dict[str, np.ndarray]
+                   ) -> "ShardedCodeStore":
+        """Restore :meth:`snapshot_state` output into this (fresh)
+        sharded store. ``shard_fn`` is routing code, not state — pass it
+        to the constructor as on the original deployment."""
+        self.n_shards = int(manifest["n_shards"])
+        self.capacity_samples = manifest["capacity_samples"]
+        self.policy = manifest["policy"]
+        self.seed = int(manifest["seed"])
+        self._parts = {}
+        for pm in manifest["partitions"]:
+            v, s = int(pm["version"]), int(pm["shard"])
+            prefix = f"p{v}.{s}."
+            sub = {k[len(prefix):]: a for k, a in arrays.items()
+                   if k.startswith(prefix)}
+            self.partition(v, s).load_state(pm["manifest"], sub)
+        return self
 
     # ------------------------------------------------------------- lookup
 

@@ -7,6 +7,10 @@ at scale, not one Python object per client).
             cohorts through ONE compiled engine round, exactly
             associative Step-5 stats merge, scheduler-driven traffic +
             open-ended continuous-ingest traffic
+  faults  — FaultPlan / FaultyChannel: deterministic chaos (drop /
+            duplicate / reorder / delay / corrupt / truncate) between
+            the cohort engine and the ingest service, plus the client
+            retry loop over the exactly-once dedup window
 
 The PR-1 ``IngestBuffer`` and the ``PackedCodes`` payload alias are
 RETIRED: importing either raises with a pointer at the unified wire
@@ -18,11 +22,12 @@ from .cohort import (CohortEngine, CohortPlan, CohortRound, ContinuousTick,
                      TrafficRound)
 from .engine import (SimEngine, client_batch_size, replicate_clients,
                      stack_clients, unstack_clients)
+from .faults import FAULT_KINDS, FaultPlan, FaultyChannel
 
 __all__ = ["CodePayload", "CohortEngine", "CohortPlan", "CohortRound",
-           "ContinuousTick", "SimEngine", "TrafficRound",
-           "client_batch_size", "replicate_clients", "stack_clients",
-           "unstack_clients"]
+           "ContinuousTick", "FAULT_KINDS", "FaultPlan", "FaultyChannel",
+           "SimEngine", "TrafficRound", "client_batch_size",
+           "replicate_clients", "stack_clients", "unstack_clients"]
 
 _TOMBSTONES = {
     "IngestBuffer": "repro.server.CodeStore / repro.server.ShardedCodeStore",

@@ -332,6 +332,8 @@ class CohortEngine:
                     offered += res.nbytes
                     if res.verdict == "rejected":
                         n_rej += 1
+                    elif res.verdict == "duplicate":
+                        pass    # a retransmit raced in; counted once already
                     else:
                         if res.verdict == "deferred":
                             n_def += 1
@@ -342,12 +344,15 @@ class CohortEngine:
             merged_version = None
             if merge_every and (ev.round + 1) % merge_every == 0 \
                     and acc is not None:
-                merged_version = wire.merge_stats(acc)
+                # merge + migration go through the SERVICE delegates so
+                # they journal (crash consistency) and compose with a
+                # FaultyChannel wrapping the service
+                merged_version = service.merge_stats(acc)
                 acc = None
                 if migration_policy is not None:
                     if wire.registry.migration is not None:
-                        wire.complete_migration()
-                    wire.begin_migration(policy=migration_policy)
+                        service.complete_migration()
+                    service.begin_migration(policy=migration_policy)
             ts = service.tick(
                 merged_version=merged_version,
                 extra_fields={"n_participants": int(ev.participants.size),

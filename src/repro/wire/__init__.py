@@ -14,13 +14,16 @@
              verdict (accepted / migrated / deferred / rejected)
 """
 from .codec import decode_payloads, decode_rows
-from .payload import (DEFAULT_TASK, WIRE_VERSION, CodePayload, as_payload,
-                      concat_payloads, normalize_labels)
-from .session import (ADMISSION_VERDICTS, AdmissionResult, OctopusClient,
-                      OctopusServer, fused_round, round_words)
+from .payload import (DEFAULT_TASK, SUPPORTED_WIRE_VERSIONS, WIRE_VERSION,
+                      CodePayload, as_payload, concat_payloads,
+                      normalize_labels, payload_crc)
+from .session import (ADMISSION_VERDICTS, TRANSIENT_REASONS,
+                      AdmissionResult, OctopusClient, OctopusServer,
+                      RetryPolicy, fused_round, round_words)
 
 __all__ = ["ADMISSION_VERDICTS", "AdmissionResult", "CodePayload",
-           "OctopusClient", "OctopusServer", "WIRE_VERSION",
+           "OctopusClient", "OctopusServer", "RetryPolicy",
+           "SUPPORTED_WIRE_VERSIONS", "TRANSIENT_REASONS", "WIRE_VERSION",
            "DEFAULT_TASK", "as_payload", "concat_payloads",
            "decode_payloads", "decode_rows", "fused_round",
-           "normalize_labels", "round_words"]
+           "normalize_labels", "payload_crc", "round_words"]

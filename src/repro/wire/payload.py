@@ -26,6 +26,12 @@ that crosses that boundary travels as a :class:`CodePayload`:
   * ``wire`` — the wire-format version (:data:`WIRE_VERSION`), so
     heterogeneous deployments can reject payloads from an incompatible
     protocol revision instead of mis-decoding them.
+  * ``checksum`` — a CRC32 over the packed words AND the metadata that
+    steers decoding (bits / shape / n_records / version), stamped at
+    pack time (wire revision 2). A flipped bit or truncated word stream
+    no longer decodes silently into garbage features: admission verifies
+    the CRC and rejects with reason ``corrupt``, bytes staying on the
+    §2.8 ledger. Revision-1 payloads (no checksum) remain decodable.
 
 The packed half of ``repro.core.octopus.Transmission`` is a legacy view
 over this carrier; :func:`as_payload` coerces it. (The old
@@ -34,13 +40,37 @@ over this carrier; :func:`as_payload` coerces it. (The old
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-WIRE_VERSION = 1
+#: current wire revision: 2 added the CRC32 integrity checksum
+WIRE_VERSION = 2
+
+#: revisions the server side still admits; revision 1 (pre-checksum)
+#: traces decode unchanged — the CRC is simply absent
+SUPPORTED_WIRE_VERSIONS = (1, 2)
+
+
+def payload_crc(words, *, bits: int, shape, n_records: int,
+                version: int) -> Optional[int]:
+    """CRC32 over the packed word bytes + the decode-steering metadata.
+
+    The header folds in everything a corrupted field could silently
+    mis-decode through: bits, index shape, record count and codebook
+    version. Returns None when ``words`` is an abstract tracer (inside a
+    jit trace there are no bytes to sum — stamp outside the trace).
+    """
+    if isinstance(words, jax.core.Tracer):
+        return None
+    header = (f"{int(bits)}|{tuple(int(d) for d in shape)}|"
+              f"{int(n_records)}|{int(version)}").encode()
+    body = np.ascontiguousarray(
+        np.asarray(words, dtype=np.uint32)).tobytes()
+    return zlib.crc32(body, zlib.crc32(header)) & 0xFFFFFFFF
 
 DEFAULT_TASK = "label"
 
@@ -81,6 +111,7 @@ class CodePayload(NamedTuple):
     labels: Optional[Dict[str, jax.Array]] = None   # task -> flat labels
     privatized: bool = True      # only public Z• indices on the wire (§2.5)
     wire: int = WIRE_VERSION     # wire-format revision
+    checksum: Optional[int] = None   # CRC32 over words + metadata (rev 2)
 
     # ------------------------------------------------------------ metadata
 
@@ -94,6 +125,46 @@ class CodePayload(NamedTuple):
     def count(self) -> int:
         """Number of real (non-padding) codes across all records."""
         return int(math.prod(self.shape))
+
+    @property
+    def expected_rows(self) -> int:
+        """Minimum word rows the declared shape needs — each record is
+        padded to whole super-groups, so fewer rows means the stream was
+        cut mid-flight."""
+        from repro.kernels.pack_bits import packing_dims
+        G, _ = packing_dims(self.bits)
+        if self.n_records == 1:
+            return (self.count + G - 1) // G
+        per = self.count // self.n_records
+        return self.n_records * ((per + G - 1) // G)
+
+    # ----------------------------------------------------------- integrity
+
+    def stamped(self) -> "CodePayload":
+        """Stamp (or refresh) the CRC32 integrity checksum from the
+        current words + metadata. Inside a jit trace the words are
+        abstract, so the checksum stays None — stamp outside the trace."""
+        crc = payload_crc(self.payload, bits=self.bits, shape=self.shape,
+                          n_records=self.n_records, version=self.version)
+        return self if crc is None else self._replace(checksum=crc)
+
+    def verify(self) -> bool:
+        """Admission-door integrity check: the word stream must be long
+        enough for the declared shape, and when a checksum rides along
+        (wire revision 2) it must match a recomputation over the
+        received bytes. Checksum-less carriers (revision-1 traces, local
+        constructions) pass — the CRC is verified when present."""
+        try:
+            rows = int(self.payload.shape[0])
+        except (TypeError, IndexError):
+            return False
+        if rows < self.expected_rows:
+            return False
+        if self.checksum is None:
+            return True
+        crc = payload_crc(self.payload, bits=self.bits, shape=self.shape,
+                          n_records=self.n_records, version=self.version)
+        return crc is None or crc == int(self.checksum)
 
     # ------------------------------------------------------------- codecs
 
@@ -118,7 +189,7 @@ class CodePayload(NamedTuple):
         return cls(payload=words, bits=int(bits), shape=tuple(idx.shape),
                    n_records=1, version=int(version),
                    labels=normalize_labels(labels, n_samples),
-                   privatized=bool(privatized))
+                   privatized=bool(privatized)).stamped()
 
     @classmethod
     def pack_records(cls, indices, *, bits: int, version: int = 0,
@@ -150,7 +221,7 @@ class CodePayload(NamedTuple):
         return cls(payload=words, bits=int(bits), shape=tuple(idx.shape),
                    n_records=int(idx.shape[0]), version=int(version),
                    labels=normalize_labels(labels, n_samples),
-                   privatized=bool(privatized))
+                   privatized=bool(privatized)).stamped()
 
     @classmethod
     def from_words(cls, words, *, bits: int, shape, n_records: int = 1,
@@ -162,7 +233,7 @@ class CodePayload(NamedTuple):
         return cls(payload=words, bits=int(bits), shape=tuple(shape),
                    n_records=int(n_records), version=int(version),
                    labels=normalize_labels(labels, n_samples),
-                   privatized=bool(privatized))
+                   privatized=bool(privatized)).stamped()
 
     def unpack(self) -> jax.Array:
         """Bit-exact inverse: -> int32 indices of the original shape."""
@@ -181,11 +252,16 @@ class CodePayload(NamedTuple):
     def with_meta(self, *, version: Optional[int] = None,
                   labels: LabelsLike = None,
                   n_samples: Optional[int] = None) -> "CodePayload":
-        """Same bytes, updated provenance (version / label channels)."""
-        return self._replace(
+        """Same bytes, updated provenance (version / label channels).
+        The checksum covers the version field, so a stamped carrier is
+        re-stamped when its version moves."""
+        out = self._replace(
             version=self.version if version is None else int(version),
             labels=self.labels if labels is None
             else normalize_labels(labels, n_samples))
+        if self.checksum is not None and out.version != self.version:
+            out = out.stamped()
+        return out
 
 
 def concat_payloads(payloads) -> CodePayload:
@@ -197,8 +273,10 @@ def concat_payloads(payloads) -> CodePayload:
     ``Σ cohort.nbytes == concat.nbytes`` (§2.8 accounting is invariant
     to how a round is cohorted). All inputs must agree on bits / wire
     revision / codebook version / privatized flag and on the per-record
-    trailing index shape; labels concatenate per task when every payload
-    carries the same channels, else drop to None.
+    trailing index shape; labels concatenate per task and mismatched
+    task channels (some records labeled and some not, or differing task
+    sets) raise ``ValueError`` like any other metadata mismatch — a
+    silent drop to None would lose Step-6 supervision mid-concat.
     """
     ps = list(payloads)
     if not ps:
@@ -213,21 +291,33 @@ def concat_payloads(payloads) -> CodePayload:
         if p.shape[1:] != head.shape[1:]:
             raise ValueError(f"per-record shape mismatch: {p.shape} vs "
                              f"{head.shape}")
+    labeled = [p.labels is not None for p in ps]
+    if any(labeled) and not all(labeled):
+        raise ValueError(
+            f"label channel mismatch: {sum(labeled)}/{len(ps)} payloads "
+            f"carry labels — every record must be labeled, or none")
+    labels = None
+    if all(labeled):
+        tasks = set(head.labels)
+        for p in ps[1:]:
+            if set(p.labels) != tasks:
+                raise ValueError(
+                    f"label task-channel mismatch: {sorted(p.labels)} vs "
+                    f"{sorted(tasks)}")
+        labels = {t: jnp.concatenate([p.labels[t] for p in ps])
+                  for t in tasks}
     if len(ps) == 1:
         return head
     words = jnp.concatenate([p.payload for p in ps], axis=0)
     n_records = sum(p.n_records for p in ps)
     shape = (sum(p.shape[0] for p in ps),) + head.shape[1:]
-    labels = None
-    if all(p.labels is not None for p in ps):
-        tasks = set(ps[0].labels)
-        if all(set(p.labels) == tasks for p in ps):
-            labels = {t: jnp.concatenate([p.labels[t] for p in ps])
-                      for t in tasks}
-    return CodePayload(payload=words, bits=head.bits, shape=shape,
-                       n_records=n_records, version=head.version,
-                       labels=labels, privatized=head.privatized,
-                       wire=head.wire)
+    out = CodePayload(payload=words, bits=head.bits, shape=shape,
+                      n_records=n_records, version=head.version,
+                      labels=labels, privatized=head.privatized,
+                      wire=head.wire)
+    if all(p.checksum is not None for p in ps):
+        out = out.stamped()
+    return out
 
 
 def as_payload(tx) -> Optional[CodePayload]:
@@ -247,7 +337,7 @@ def as_payload(tx) -> Optional[CodePayload]:
         return CodePayload(payload=payload, bits=int(tx.bits),
                            shape=tuple(tx.indices.shape),
                            labels=normalize_labels(getattr(tx, "labels",
-                                                           None)))
+                                                           None))).stamped()
     return CodePayload(payload=payload, bits=int(tx.bits),
                        shape=tuple(tx.shape),
-                       n_records=int(getattr(tx, "n_records", 1)))
+                       n_records=int(getattr(tx, "n_records", 1))).stamped()

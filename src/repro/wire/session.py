@@ -33,6 +33,7 @@ the PR-4 ``client_round_fused`` tail (same calls, same dispatch count);
 from __future__ import annotations
 
 import time
+import zlib
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -42,11 +43,48 @@ from repro.core import octopus as OC
 from repro.core.dvqae import DVQAEConfig
 from repro.obs import recorder as _obs
 
-from .payload import WIRE_VERSION, CodePayload, as_payload
+from .payload import (SUPPORTED_WIRE_VERSIONS, WIRE_VERSION, CodePayload,
+                      as_payload)
 
 #: admission verdicts an ingest path can return (§2.8: ALL of them keep
 #: the payload's measured bytes on the ledger, accepted or not)
-ADMISSION_VERDICTS = ("accepted", "migrated", "deferred", "rejected")
+ADMISSION_VERDICTS = ("accepted", "migrated", "deferred", "rejected",
+                      "duplicate")
+
+#: rejection reasons worth retrying: the condition is transient (load or
+#: channel noise), so the SAME envelope re-sent later can land. The
+#: other reasons (wire_revision, unprivatized, retired/unknown version)
+#: are protocol facts a retransmit cannot fix.
+TRANSIENT_REASONS = ("queue_full", "radio_drop", "corrupt")
+
+
+class RetryPolicy(NamedTuple):
+    """Capped exponential backoff for transient uplink failures.
+
+    Attempt ``a`` waits ``min(base_ticks * 2**a, cap_ticks)`` service
+    ticks plus a deterministic jitter in ``[0, jitter_ticks]`` hashed
+    from (salt, attempt) — retries de-synchronize across clients without
+    consuming anybody's PRNG stream (toggling retry must not perturb
+    population or traffic draws).
+    """
+    max_attempts: int = 4
+    base_ticks: int = 1
+    cap_ticks: int = 8
+    jitter_ticks: int = 1
+
+    def backoff(self, attempt: int, *, salt="") -> int:
+        wait = min(self.base_ticks * (2 ** int(attempt)), self.cap_ticks)
+        if self.jitter_ticks:
+            h = zlib.crc32(f"retry|{salt}|{int(attempt)}".encode())
+            wait += h % (self.jitter_ticks + 1)
+        return int(wait)
+
+    def retryable(self, result: "AdmissionResult") -> bool:
+        """deferred and transient rejections retry; accepted / migrated /
+        duplicate (the server already holds this envelope) stop."""
+        return (result.verdict == "deferred"
+                or (result.verdict == "rejected"
+                    and result.reason in TRANSIENT_REASONS))
 
 
 class AdmissionResult(NamedTuple):
@@ -59,6 +97,9 @@ class AdmissionResult(NamedTuple):
                  the window closes)
       deferred — queued under backpressure; will be decoded, later
       rejected — refused (``reason`` says why); bytes still ledgered
+      duplicate — this ``(client_id, seq)`` envelope was already
+                 admitted; the retransmit is acknowledged but NOT
+                 stored again (exactly-once ingest)
     ``nbytes`` is the payload's measured wire size; ``record`` is the
     StoreRecord for verdicts that stored the payload, else None.
     """
@@ -168,6 +209,7 @@ class OctopusClient:
         self.client_id = int(client_id)
         self.state = OC.client_init(state)
         self.version = int(version)
+        self._seq = 0                    # next uplink envelope sequence no.
 
     # -------------------------------------------------------------- steps
 
@@ -212,6 +254,59 @@ class OctopusClient:
         """Encode-only uplink (Steps 3-4): no fine-tuning, no refresh —
         the old ``client_transmit``, minus the materialized index tensor."""
         return self.round(batch, labels=labels, finetune=0, refresh=False)
+
+    # ---------------------------------------------------- exactly-once send
+
+    def next_seq(self) -> int:
+        """Mint the next envelope sequence number: ``(client_id, seq)``
+        is the idempotency key the server dedups retransmits on."""
+        seq, self._seq = self._seq, self._seq + 1
+        return seq
+
+    def send(self, target, payload: CodePayload, *,
+             retry: Optional[RetryPolicy] = None,
+             clock=None) -> AdmissionResult:
+        """Offer ONE payload under a fresh ``(client_id, seq)`` envelope,
+        retrying transient verdicts with capped exponential backoff.
+
+        ``target`` is anything with the continuous ``offer`` door (a
+        ``ContinuousIngestService`` or a ``FaultyChannel`` in front of
+        one). Between attempts the client waits ``retry.backoff`` ticks
+        by calling ``clock()`` (default: ``target.tick``) — the envelope
+        key stays FIXED across attempts, so a retransmit of a payload
+        the server already admitted comes back ``duplicate`` and is
+        never double-counted.
+        """
+        seq = self.next_seq()
+        step = clock if clock is not None else getattr(target, "tick", None)
+        rec = _obs.active()
+        attempt = 0
+        while True:
+            res = target.offer(payload, client_ids=[self.client_id],
+                               uplink_id=(self.client_id, seq))
+            if (retry is None or not retry.retryable(res)
+                    or attempt >= retry.max_attempts):
+                return res
+            wait = retry.backoff(attempt,
+                                 salt=f"{self.client_id}.{seq}")
+            if rec is not None:
+                rec.metrics.inc("retries")
+                rec.event("retry", client_id=self.client_id, seq=seq,
+                          attempt=attempt, wait_ticks=wait,
+                          verdict=res.verdict, reason=res.reason)
+            if step is not None:
+                for _ in range(wait):
+                    step()
+            attempt += 1
+
+    def uplink(self, target, batch, *, labels=None,
+               retry: Optional[RetryPolicy] = None,
+               clock=None) -> AdmissionResult:
+        """``round`` + exactly-once ``send`` in one call: encode the
+        batch ONCE, then (re)transmit the same payload under one
+        idempotency key until the server holds it or retries exhaust."""
+        return self.send(target, self.round(batch, labels=labels),
+                         retry=retry, clock=clock)
 
     def sync(self, server: "OctopusServer") -> None:
         """Adopt the server's latest merged dictionary (Step 5 tail on
@@ -295,16 +390,18 @@ class OctopusServer:
                             f"packed legacy carrier), got "
                             f"{type(payload).__name__}")
         if hasattr(payload, "indices"):
-            p = p._replace(shape=(1,) + p.shape)
+            # the checksum covers the shape — restamp after the lift
+            p = p._replace(shape=(1,) + p.shape).stamped()
         return p
 
     def precheck(self, p: CodePayload) -> Tuple[str, str]:
         """Wire-invariant admission check -> (verdict, reason), without
         touching the store. Rejections: unknown wire revision, missing
         §2.5 privatized flag, retired or never-registered codebook
-        version. A payload packed under the src version of an OPEN
-        migration window admits as ``migrated``."""
-        if p.wire != WIRE_VERSION:
+        version, or a failed integrity check (short word stream, CRC
+        mismatch) -> ``corrupt``. A payload packed under the src version
+        of an OPEN migration window admits as ``migrated``."""
+        if p.wire not in SUPPORTED_WIRE_VERSIONS:
             return "rejected", "wire_revision"
         if self.require_privatized and not p.privatized:
             return "rejected", "unprivatized"
@@ -312,6 +409,8 @@ class OctopusServer:
             return "rejected", "retired_version"
         if p.version not in self.registry:
             return "rejected", "unknown_version"
+        if not p.verify():
+            return "rejected", "corrupt"
         win = self.registry.migration
         if win is not None and int(p.version) == win.src:
             return "migrated", "migration_window"

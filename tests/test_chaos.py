@@ -1,0 +1,380 @@
+"""Chaos plane + crash-consistent server (the Step-6 robustness
+contracts).
+
+What makes the fault plane a subsystem and not a test helper:
+  * every fault family (drop / duplicate / reorder / delay / corrupt /
+    truncate) is DETERMINISTIC under one key and draws from its own
+    PRNG substream — toggling one knob never perturbs another family's
+    draws;
+  * the §2.8 byte-conservation identity survives arbitrary chaos:
+    Σ sent == Σ delivered + Σ dropped + Σ rejected + Σ duplicate +
+    Σ in flight — corrupted, truncated, duplicated and retried bytes
+    all stay on the ledger;
+  * the ``(client_id, seq)`` idempotency envelope makes the channel
+    exactly-once over at-least-once delivery: retries that race a
+    success come back ``duplicate``, never double-stored;
+  * a journaled service recovers from a kill at ANY tick — including
+    mid-migration — to the exact verdict histogram, byte ledger and
+    bit-identical decoded features of the uninterrupted run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.kernels.pack_bits import code_bits
+from repro.obs import report as obs_report
+from repro.server import (ContinuousIngestService, RoundScheduler,
+                          SchedulerConfig, ServerPersistence,
+                          ShardedCodeStore)
+from repro.sim import FAULT_KINDS, CohortEngine, FaultPlan, FaultyChannel
+from repro.wire import CodePayload, OctopusServer, RetryPolicy
+
+N_CLIENTS = 12
+
+
+@pytest.fixture(autouse=True)
+def no_ambient_recorder():
+    obs.uninstall()
+    yield
+    obs.uninstall()
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=16, n_res_blocks=1)
+
+
+@pytest.fixture(scope="module")
+def state(tiny_cfg):
+    return OC.server_init(jax.random.PRNGKey(0), tiny_cfg)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return jax.random.normal(jax.random.PRNGKey(1),
+                             (N_CLIENTS, 2, 8, 8, 3))
+
+
+def _data_fn(data):
+    return lambda ids: data[np.asarray(ids)]
+
+
+def _pack(seed, version=0, c=1, b=3, t=4):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 16, size=(c, b, t))
+    return CodePayload.pack(jnp.asarray(codes, jnp.int32),
+                            bits=code_bits(16), version=version)
+
+
+def _service(tiny_cfg, state, **kw):
+    srv = OctopusServer(state, tiny_cfg,
+                        store=ShardedCodeStore(tiny_cfg, n_shards=2))
+    return ContinuousIngestService(srv, **kw)
+
+
+def _conserved(q):
+    return q.bytes_sent == (q.bytes_delivered + q.bytes_dropped
+                            + q.bytes_rejected + q.bytes_duplicate
+                            + q.bytes_in_flight)
+
+
+# ------------------------------------------------------- fault families
+
+def test_drop_burns_bytes_stores_nothing(tiny_cfg, state):
+    chan = FaultyChannel(_service(tiny_cfg, state), FaultPlan(drop=1.0),
+                         key=jax.random.PRNGKey(1))
+    for i in range(4):
+        res = chan.offer(_pack(i), client_ids=[i])
+        assert (res.verdict, res.reason) == ("rejected", "radio_drop")
+    chan.drain()
+    assert chan.faults == {"drop": 4}
+    assert len(chan.wire.store) == 0
+    q = chan.queue
+    assert q.bytes_dropped == q.bytes_sent > 0
+    assert _conserved(q)
+
+
+def test_duplicate_dedups_on_envelope(tiny_cfg, state):
+    """The channel's duplicated copy carries the SAME (client_id, seq)
+    envelope, so the service answers ``duplicate`` and stores once."""
+    chan = FaultyChannel(_service(tiny_cfg, state),
+                         FaultPlan(duplicate=1.0),
+                         key=jax.random.PRNGKey(2))
+    for i in range(3):
+        res = chan.offer(_pack(i), client_ids=[i])
+        assert res.verdict == "accepted"
+    chan.drain()
+    assert chan.faults == {"duplicate": 3}
+    assert chan.verdicts["duplicate"] == 3
+    assert len(chan.wire.store) == 3            # each payload held ONCE
+    q = chan.queue
+    assert q.bytes_duplicate > 0
+    assert _conserved(q)
+
+
+def test_corrupt_and_truncate_rejected_by_crc(tiny_cfg, state):
+    """A word-level bit flip or a truncated stream no longer matches the
+    carrier CRC -> rejected/corrupt at the door, bytes still ledgered."""
+    for plan in (FaultPlan(corrupt=1.0), FaultPlan(truncate=1.0)):
+        chan = FaultyChannel(_service(tiny_cfg, state), plan,
+                             key=jax.random.PRNGKey(3))
+        for i in range(3):
+            res = chan.offer(_pack(i), client_ids=[i])
+            assert (res.verdict, res.reason) == ("rejected", "corrupt")
+        chan.drain()
+        assert sum(chan.faults.values()) == 3
+        assert len(chan.wire.store) == 0
+        assert chan.queue.bytes_rejected == chan.queue.bytes_sent > 0
+        assert _conserved(chan.queue)
+
+
+def test_delay_holds_delivery_within_bound(tiny_cfg, state):
+    chan = FaultyChannel(_service(tiny_cfg, state),
+                         FaultPlan(delay=1.0, max_delay=3),
+                         key=jax.random.PRNGKey(4))
+    assert chan.offer(_pack(0), client_ids=[0]).verdict == "accepted"
+    assert chan.faults == {"delay": 1}
+    first = chan.tick()
+    assert first.n_delivered == 0               # held back in the channel
+    hist = [first] + chan.drain()
+    assert sum(t.n_delivered for t in hist) == 1
+    assert len(hist) <= 1 + 3                   # lands within max_delay
+    assert len(chan.wire.store) == 1
+    assert _conserved(chan.queue)
+
+
+def test_reorder_swaps_arrival_order(tiny_cfg, state):
+    """With reorder forced, the LAST two queued payloads swap: arrival
+    order in the store differs from send order (plain CodeStore — a
+    sharded store would itself scatter arrival order)."""
+    svc = ContinuousIngestService(OctopusServer(state, tiny_cfg))
+    chan = FaultyChannel(svc, FaultPlan(reorder=1.0),
+                         key=jax.random.PRNGKey(5))
+    a, b = _pack(10), _pack(11)
+    chan.offer(a, client_ids=[0])               # alone: nothing to swap
+    chan.offer(b, client_ids=[1])
+    assert chan.faults == {"reorder": 1}
+    chan.drain()
+    recs = list(svc.wire.store.records)
+    words = [np.asarray(r.packed.payload) for r in recs]
+    np.testing.assert_array_equal(words[0], np.asarray(b.payload))
+    np.testing.assert_array_equal(words[1], np.asarray(a.payload))
+    assert _conserved(chan.queue)
+
+
+def test_fault_families_draw_independent_substreams(tiny_cfg, state):
+    """Enabling corruption must not change WHICH sends drop — each
+    family folds its own purpose into the per-send substream."""
+    def drops(plan):
+        chan = FaultyChannel(_service(tiny_cfg, state), plan,
+                             key=jax.random.PRNGKey(6))
+        out = []
+        for i in range(30):
+            res = chan.offer(_pack(i), client_ids=[i])
+            out.append(res.reason == "radio_drop")
+        return out
+    base = drops(FaultPlan(drop=0.3))
+    assert 1 <= sum(base) <= 29                 # chaos actually mixed
+    assert drops(FaultPlan(drop=0.3, corrupt=0.9, delay=0.5)) == base
+
+
+def test_channel_is_deterministic_under_key(tiny_cfg, state):
+    def go():
+        chan = FaultyChannel(
+            _service(tiny_cfg, state),
+            FaultPlan(drop=0.2, duplicate=0.2, reorder=0.3, delay=0.3,
+                      corrupt=0.15, truncate=0.1),
+            key=jax.random.PRNGKey(7),
+            retry=RetryPolicy(max_attempts=2))
+        for i in range(25):
+            chan.offer(_pack(i), client_ids=[i % 5])
+            chan.tick()
+        chan.drain()
+        return chan
+    a, b = go(), go()
+    assert a.faults == b.faults and sum(a.faults.values()) > 0
+    assert a.verdicts == b.verdicts
+    assert a.retries == b.retries
+    assert a.queue.bytes_sent == b.queue.bytes_sent
+    assert len(a.wire.store) == len(b.wire.store)
+
+
+# --------------------------------------------------------- exactly-once
+
+def test_retry_loop_is_exactly_once(tiny_cfg, state):
+    """Dropped sends retry under the SAME envelope until they land;
+    retries that race a success answer ``duplicate``; every envelope is
+    stored at most once and the ledger stays conserved."""
+    chan = FaultyChannel(_service(tiny_cfg, state),
+                         FaultPlan(drop=0.4, duplicate=0.3),
+                         key=jax.random.PRNGKey(8),
+                         retry=RetryPolicy(max_attempts=4, base_ticks=1,
+                                           cap_ticks=4))
+    n = 20
+    for i in range(n):
+        chan.offer(_pack(i, c=1), client_ids=[i])
+        chan.tick()
+    chan.drain()
+    assert chan.retries > 0
+    assert chan.faults.get("drop", 0) > 0
+    # at-most-once per envelope: n distinct envelopes, so the store can
+    # never exceed n records even though the channel re-sent many
+    assert len(chan.wire.store) <= n
+    admitted = sum(chan.verdicts.get(v, 0)
+                   for v in ("accepted", "deferred", "migrated"))
+    assert len(chan.wire.store) == admitted
+    assert _conserved(chan.queue)
+
+
+def test_client_send_retries_through_faulty_channel(tiny_cfg, state):
+    """OctopusClient.send drives its own retry loop against the channel
+    and lands exactly once even when the first attempts drop."""
+    svc = _service(tiny_cfg, state)
+    chan = FaultyChannel(svc, FaultPlan(drop=0.5),
+                         key=jax.random.PRNGKey(9))
+    srv = OctopusServer(state, tiny_cfg)
+    cl = srv.deploy(client_id=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    results = [cl.uplink(chan, x, retry=RetryPolicy(max_attempts=6))
+               for _ in range(6)]
+    chan.drain()
+    landed = sum(1 for r in results if r.ok and r.verdict != "duplicate")
+    assert landed + sum(1 for r in results if r.verdict == "duplicate") \
+        >= sum(1 for r in results if r.ok)
+    assert len(svc.wire.store) == landed
+    assert _conserved(svc.queue)
+
+
+# ----------------------------------------------------- traced chaos run
+
+def test_chaos_run_continuous_conserves_and_traces(tiny_cfg, data,
+                                                   tmp_path):
+    """The cohort engine drives a FAULTED service unchanged; the traced
+    run passes the §2.8 report check with a non-empty fault histogram."""
+    state = OC.server_init(jax.random.PRNGKey(0), tiny_cfg)
+    svc = _service(tiny_cfg, state, capacity=4, defer_depth=3)
+    chan = FaultyChannel(
+        svc,
+        FaultPlan(drop=0.15, duplicate=0.15, reorder=0.2, delay=0.3,
+                  corrupt=0.1, truncate=0.1),
+        key=jax.random.PRNGKey(11),
+        retry=RetryPolicy(max_attempts=3))
+    sched = RoundScheduler(
+        N_CLIENTS,
+        SchedulerConfig(rate=6.0, straggler_prob=0.4, max_delay=2,
+                        drop_prob=0.1),
+        key=jax.random.PRNGKey(12))
+    engine = CohortEngine(tiny_cfg, gamma=0.9, n_local_steps=0)
+    trace = tmp_path / "chaos.jsonl"
+    with obs.recording(trace):
+        hist = engine.run_continuous(chan, sched, _data_fn(data),
+                                     cohort_size=3, n_ticks=8,
+                                     merge_every=3,
+                                     migration_policy="keep")
+        chan.drain()
+    assert len(hist) == 8
+    assert sum(chan.faults.values()) > 0
+    assert _conserved(svc.queue)
+    summary = obs_report.summarize(obs_report.load_events(str(trace)))
+    assert obs_report.check_bytes(summary) == []
+    assert summary["faults"]                    # fault histogram streamed
+    assert set(summary["faults"]) <= set(FAULT_KINDS)
+
+
+# ------------------------------------------------------ crash recovery
+
+def _chaos_run(tiny_cfg, data, root, *, n_ticks, snapshot_every=3):
+    """One journaled faulted run; returns (channel, service)."""
+    state = OC.server_init(jax.random.PRNGKey(0), tiny_cfg)
+    persist = ServerPersistence(str(root), snapshot_every=snapshot_every)
+    svc = _service(tiny_cfg, state, capacity=6, persist=persist)
+    chan = FaultyChannel(
+        svc, FaultPlan(drop=0.2, duplicate=0.2, delay=0.3, corrupt=0.1),
+        key=jax.random.PRNGKey(21), retry=RetryPolicy(max_attempts=2))
+    sched = RoundScheduler(
+        N_CLIENTS, SchedulerConfig(rate=5.0, straggler_prob=0.3,
+                                   max_delay=2),
+        key=jax.random.PRNGKey(22))
+    engine = CohortEngine(tiny_cfg, gamma=0.9, n_local_steps=0)
+    engine.run_continuous(chan, sched, _data_fn(data),
+                          cohort_size=3, n_ticks=n_ticks, merge_every=3,
+                          migration_policy="keep")
+    return chan, svc
+
+
+def _assert_recovered_exact(crashed, recovered):
+    assert recovered.tick_idx == crashed.tick_idx
+    assert recovered.verdicts == crashed.verdicts
+    assert recovered.verdict_bytes == crashed.verdict_bytes
+    for attr in ("bytes_sent", "bytes_delivered", "bytes_dropped",
+                 "bytes_rejected", "bytes_duplicate", "bytes_in_flight"):
+        assert getattr(recovered.queue, attr) == \
+            getattr(crashed.queue, attr), attr
+    assert len(recovered.wire.store) == len(crashed.wire.store)
+    assert recovered.wire.registry.latest == crashed.wire.registry.latest
+    fa, _ = crashed.wire.features()
+    fb, _ = recovered.wire.features()
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+@pytest.mark.parametrize("n_ticks", [2, 5, 7])
+def test_recover_from_kill_at_any_tick(tiny_cfg, data, tmp_path, n_ticks):
+    """Kill the faulted, journaled service after n ticks (snapshots every
+    3, so the journal tail length varies): recovery rebuilds the EXACT
+    verdict histogram, byte ledger and bit-identical decoded features."""
+    _, svc = _chaos_run(tiny_cfg, data, tmp_path / "srv", n_ticks=n_ticks)
+    recovered = ContinuousIngestService.recover(
+        str(tmp_path / "srv"), tiny_cfg,
+        OC.server_init(jax.random.PRNGKey(0), tiny_cfg),
+        shard_fn=None, capacity=6)
+    _assert_recovered_exact(svc, recovered)
+
+
+def test_recover_mid_migration_reopens_window(tiny_cfg, data, tmp_path):
+    """A kill while a rolling migration window is OPEN replays back INTO
+    the open window: same src/dst/policy, same latest version, and the
+    recovered service can still complete the migration."""
+    _, svc = _chaos_run(tiny_cfg, data, tmp_path / "srv", n_ticks=7)
+    win = svc.wire.registry.migration
+    assert win is not None                      # merge at tick 6 opened it
+    recovered = ContinuousIngestService.recover(
+        str(tmp_path / "srv"), tiny_cfg,
+        OC.server_init(jax.random.PRNGKey(0), tiny_cfg),
+        shard_fn=None, capacity=6)
+    rwin = recovered.wire.registry.migration
+    assert rwin is not None
+    assert (rwin.src, rwin.dst, rwin.policy) == \
+        (win.src, win.dst, win.policy)
+    _assert_recovered_exact(svc, recovered)
+    # the recovered service is LIVE: complete the window and keep going
+    recovered.complete_migration()
+    assert recovered.wire.registry.migration is None
+    res = recovered.offer(_pack(99, version=recovered.wire.version),
+                          client_ids=[0])
+    assert res.ok
+    recovered.drain()
+
+
+def test_recovered_service_continues_identically(tiny_cfg, data, tmp_path):
+    """Post-recovery traffic behaves exactly like the uninterrupted
+    service fed the same offers — recovery is a point on the same
+    timeline, not a fork."""
+    _, svc = _chaos_run(tiny_cfg, data, tmp_path / "srv", n_ticks=5)
+    recovered = ContinuousIngestService.recover(
+        str(tmp_path / "srv"), tiny_cfg,
+        OC.server_init(jax.random.PRNGKey(0), tiny_cfg),
+        shard_fn=None, capacity=6)
+    for s in (svc, recovered):
+        for i in range(4):
+            s.offer(_pack(100 + i, version=s.wire.version),
+                    client_ids=[i], uplink_id=(i, 1000))
+        s.drain()
+    assert recovered.verdicts == svc.verdicts
+    fa, _ = svc.wire.features()
+    fb, _ = recovered.wire.features()
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))

@@ -92,11 +92,11 @@ def test_backpressure_verdicts_and_byte_conservation(tiny_cfg, state):
     assert q.bytes_sent == sum(v.nbytes for v in verdicts)
     assert q.bytes_rejected == sum(v.nbytes for v in verdicts[2:])
     assert q.bytes_sent == q.bytes_delivered + q.bytes_dropped + \
-        q.bytes_rejected + q.bytes_in_flight
+        q.bytes_rejected + q.bytes_duplicate + q.bytes_in_flight
     ts = svc.tick()
     assert ts.n_delivered == 2 and ts.queue_depth == 0
     assert q.bytes_sent == q.bytes_delivered + q.bytes_dropped + \
-        q.bytes_rejected + q.bytes_in_flight
+        q.bytes_rejected + q.bytes_duplicate + q.bytes_in_flight
     # both admitted payloads landed (deferred is admitted, just slower)
     assert len(svc.wire.store) == 2
 
@@ -281,7 +281,7 @@ def test_run_continuous_traced_conserves_bytes(tiny_cfg, data, tmp_path):
         sum(t.n_deferred for t in hist) >= 1
     q = svc.queue
     assert q.bytes_sent == q.bytes_delivered + q.bytes_dropped + \
-        q.bytes_rejected + q.bytes_in_flight
+        q.bytes_rejected + q.bytes_duplicate + q.bytes_in_flight
     # merges happened and opened rolling windows
     assert any(t.merged_version for t in hist)
     summary = obs_report.summarize(obs_report.load_events(str(trace)))
@@ -355,4 +355,5 @@ def test_async_server_is_a_thin_shim_over_the_service(tiny_cfg, data):
         assert stats.round == r
     assert acs.bytes_sent == acs.service.queue.bytes_sent
     assert acs.bytes_sent == acs.bytes_delivered + acs.bytes_dropped + \
-        acs.queue.bytes_rejected + acs.queue.bytes_in_flight
+        acs.queue.bytes_rejected + acs.queue.bytes_duplicate + \
+        acs.queue.bytes_in_flight

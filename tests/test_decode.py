@@ -119,15 +119,19 @@ def test_codes_to_features_packed_parity(key, n_groups, n_slices, K):
 
 
 def test_codes_to_features_accepts_transmission(key):
-    """A packed Transmission takes the fused path and matches its own
-    unpacked indices decoded the classic way."""
+    """A packed legacy Transmission (hand-built — the minting shim is a
+    tombstone now) takes the fused path and matches its own unpacked
+    indices decoded the classic way."""
+    from repro.core.dvqae import forward
     cfg = DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
                       codebook_size=16, n_res_blocks=1)
     srv = OC.server_init(key, cfg)
     cl = OC.client_init(srv)
     x = jax.random.normal(key, (4, 8, 8, 3))
-    with pytest.warns(DeprecationWarning):
-        tx = OC.client_transmit(cl, cfg, x)
+    idx = forward(cl.params, cfg, x).latent.indices
+    p = CodePayload.pack(idx, bits=OC.transmit_bits(cfg))
+    tx = OC.Transmission(indices=idx, nbytes=p.nbytes,
+                         payload=p.payload, bits=p.bits)
     fused = OC.codes_to_features(srv, cfg, tx)
     want = OC.codes_to_features(srv, cfg, tx.indices)
     np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))

@@ -203,10 +203,10 @@ def test_client_round_single_encoder_pass(key):
     n = _count_encoder_passes(
         lambda: OC.client_round(cl, cfg, x, n_local_steps=0))
     assert n == 1, f"client_round ran the encoder {n}x"
-    with pytest.warns(DeprecationWarning):      # shim over wire.round_words
-        n = _count_encoder_passes(
-            lambda: OC.client_round_fused(cl, cfg, x, n_local_steps=0))
-    assert n == 1, f"client_round_fused ran the encoder {n}x"
+    from repro.wire import round_words
+    n = _count_encoder_passes(
+        lambda: round_words(cl, cfg, x, n_local_steps=0))
+    assert n == 1, f"round_words ran the encoder {n}x"
     # each fine-tune step legitimately adds exactly one gradient pass
     n = _count_encoder_passes(
         lambda: OC.client_round(cl, cfg, x, n_local_steps=2))

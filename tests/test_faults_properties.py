@@ -1,0 +1,133 @@
+"""Property tests: the chaos plane under ARBITRARY fault mixes.
+
+The invariants that make fault injection safe to leave on everywhere:
+  * BYTE CONSERVATION — at every point in an arbitrary offer/tick
+    stream through a :class:`FaultyChannel` (any FaultPlan, retries on
+    or off), Σ sent == Σ delivered + Σ dropped + Σ rejected +
+    Σ duplicate + Σ in flight; §2.8 never loses a byte to chaos;
+  * INTEGRITY — a payload the channel corrupted or truncated NEVER
+    lands in the store: every stored record still verifies its CRC;
+  * EXACTLY-ONCE — stored records == admitted verdicts; the dedup
+    window keeps duplicated/retried envelopes from double-counting.
+
+Payloads are built from raw numpy word streams via
+``CodePayload.from_words`` so the properties run many cases without a
+kernel dispatch. Hypothesis is a dev-only dependency; the fixed-case
+fallbacks keep the invariants covered without it.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import octopus as OC
+from repro.core.dvqae import DVQAEConfig
+from repro.kernels.pack_bits import code_bits, packing_dims
+from repro.server import ContinuousIngestService
+from repro.sim import FaultPlan, FaultyChannel
+from repro.wire import CodePayload, OctopusServer, RetryPolicy
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # dev-only dependency; fixed cases still run
+    HAVE_HYPOTHESIS = False
+
+BITS = code_bits(16)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=16, n_res_blocks=1)
+
+
+@pytest.fixture(scope="module")
+def state(tiny_cfg):
+    return OC.server_init(jax.random.PRNGKey(0), tiny_cfg)
+
+
+def _payload(n_samples, fill=0):
+    """A (1, n_samples, 3)-shaped stamped payload from raw words."""
+    G, W = packing_dims(BITS)
+    count = n_samples * 3
+    rows = max(2, (count + G - 1) // G)   # >= 2 rows so truncate can cut
+    words = np.full((rows, W), fill, dtype=np.uint32)
+    return CodePayload.from_words(words, bits=BITS,
+                                  shape=(1, n_samples, 3))
+
+
+# one plan knob set per case: probabilities coarse on purpose — the
+# interesting transitions are off / sometimes / always
+_P = [0.0, 0.4, 1.0]
+if HAVE_HYPOTHESIS:
+    PLAN = st.builds(FaultPlan,
+                     drop=st.sampled_from(_P),
+                     duplicate=st.sampled_from(_P),
+                     reorder=st.sampled_from(_P),
+                     delay=st.sampled_from(_P),
+                     corrupt=st.sampled_from(_P),
+                     truncate=st.sampled_from(_P))
+    # (client_id 0..5, n_samples 1..4, tick-after?) per offer
+    STEP = st.tuples(st.integers(0, 5), st.integers(1, 4), st.booleans())
+    STREAM = st.lists(STEP, min_size=1, max_size=25)
+    RETRY = st.sampled_from([None, RetryPolicy(max_attempts=2,
+                                               base_ticks=1, cap_ticks=2)])
+
+FIXED_CASES = [
+    (FaultPlan(drop=1.0, duplicate=1.0), [(0, 2, True), (1, 3, False)],
+     None),
+    (FaultPlan(corrupt=1.0, truncate=0.4, delay=0.4),
+     [(c, 2, c % 2 == 0) for c in range(6)], None),
+    (FaultPlan(drop=0.4, duplicate=0.4, reorder=0.4, delay=0.4,
+               corrupt=0.4, truncate=0.4),
+     [(c % 4, 1 + c % 3, c % 2 == 0) for c in range(12)],
+     RetryPolicy(max_attempts=2, base_ticks=1, cap_ticks=2)),
+]
+
+
+def _run(tiny_cfg, state, plan, stream, retry):
+    svc = ContinuousIngestService(OctopusServer(state, tiny_cfg),
+                                  capacity=8)
+    chan = FaultyChannel(svc, plan, key=jax.random.PRNGKey(13),
+                         retry=retry)
+    for i, (cid, n, tick_after) in enumerate(stream):
+        chan.offer(_payload(n, fill=i), client_ids=[cid])
+        q = chan.queue
+        assert q.bytes_sent == (q.bytes_delivered + q.bytes_dropped
+                                + q.bytes_rejected + q.bytes_duplicate
+                                + q.bytes_in_flight)
+        if tick_after:
+            chan.tick()
+    chan.drain()
+    return chan, svc
+
+
+def _check(chan, svc):
+    q = chan.queue
+    # conservation, with everything landed (nothing left in flight)
+    assert q.bytes_in_flight == 0
+    assert q.bytes_sent == (q.bytes_delivered + q.bytes_dropped
+                            + q.bytes_rejected + q.bytes_duplicate)
+    # integrity: nothing corrupt ever landed
+    for rec in svc.wire.store.records:
+        assert rec.packed.verify()
+    # exactly-once: one stored record per ADMITTED verdict
+    admitted = sum(chan.verdicts.get(v, 0)
+                   for v in ("accepted", "deferred", "migrated"))
+    assert len(svc.wire.store) == admitted
+
+
+if HAVE_HYPOTHESIS:
+    _CFG = DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=16, n_res_blocks=1)
+    _STATE = OC.server_init(jax.random.PRNGKey(0), _CFG)
+
+    @settings(max_examples=40, deadline=None)
+    @given(plan=PLAN, stream=STREAM, retry=RETRY)
+    def test_chaos_invariants_property(plan, stream, retry):
+        _check(*_run(_CFG, _STATE, plan, stream, retry))
+
+
+@pytest.mark.parametrize("plan,stream,retry", FIXED_CASES)
+def test_chaos_invariants_fixed(tiny_cfg, state, plan, stream, retry):
+    _check(*_run(tiny_cfg, state, plan, stream, retry))

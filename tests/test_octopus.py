@@ -35,13 +35,16 @@ def test_server_pretrain_reduces_loss(image_cfg):
 def test_client_roundtrip_codes_only(image_cfg):
     """Clients transmit int indices; server reconstructs features of the
     right shape; bytes transmitted << raw bytes."""
+    from repro.wire import CodePayload
     key = jax.random.PRNGKey(0)
     srv = octopus.server_init(key, image_cfg)
     cl = octopus.client_init(srv)
     x = jax.random.normal(key, (4, 16, 16, 3))
-    with pytest.warns(DeprecationWarning):      # legacy carrier entry
-        tx = octopus.client_transmit(cl, image_cfg, x,
-                                     labels=jnp.arange(4))
+    idx = dvqae.forward(cl.params, image_cfg, x).latent.indices
+    p = CodePayload.pack(idx, bits=octopus.transmit_bits(image_cfg))
+    tx = octopus.Transmission(indices=idx, nbytes=p.nbytes,
+                              labels=jnp.arange(4),
+                              payload=p.payload, bits=p.bits)
     assert tx.indices.dtype == jnp.int32
     raw_bytes = x.size * 4
     assert tx.nbytes < raw_bytes / 50
@@ -102,9 +105,8 @@ def test_speech_pipeline(key):
     srv, out = octopus.server_pretrain_step(srv, cfg, x)
     assert out.recon.shape == x.shape
     cl = octopus.client_init(srv)
-    with pytest.warns(DeprecationWarning):
-        tx = octopus.client_transmit(cl, cfg, x)
-    assert tx.indices.shape == (4, 8)      # 32 frames -> 8 latent steps
+    idx = dvqae.forward(cl.params, cfg, x).latent.indices
+    assert idx.shape == (4, 8)             # 32 frames -> 8 latent steps
 
 
 @pytest.mark.parametrize("n_groups,n_slices", [(4, 2), (1, 2), (4, 1)])

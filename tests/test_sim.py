@@ -66,18 +66,23 @@ def test_packed_size_is_dense(n_atoms):
 
 
 def test_transmission_measures_packed_bytes(tiny_cfg, server, key):
-    """client_transmit (deprecated shim) carries the packed payload;
-    nbytes is measured from it (CodePayload.nbytes is the single source)
-    and the payload unpacks bit-exactly to the indices."""
+    """A legacy Transmission carries the packed payload; nbytes is
+    measured from it (CodePayload.nbytes is the single source) and the
+    payload unpacks bit-exactly to the indices via the wire coercion
+    (the unpack_transmission shim is a tombstone now)."""
+    from repro.core.dvqae import forward
+    from repro.wire import CodePayload, as_payload
     client = OC.client_init(server)
     x = jax.random.normal(key, (4, 8, 8, 3))
-    with pytest.warns(DeprecationWarning):
-        tx = OC.client_transmit(client, tiny_cfg, x, labels=jnp.arange(4))
+    idx = forward(client.params, tiny_cfg, x).latent.indices
+    p = CodePayload.pack(idx, bits=OC.transmit_bits(tiny_cfg))
+    tx = OC.Transmission(indices=idx, nbytes=p.nbytes,
+                         labels=jnp.arange(4),
+                         payload=p.payload, bits=p.bits)
     assert tx.payload is not None
     assert tx.bits == code_bits(tiny_cfg.codebook_size)
     assert tx.nbytes == tx.payload.size * tx.payload.dtype.itemsize
-    with pytest.warns(DeprecationWarning):
-        back = OC.unpack_transmission(tx)
+    back = as_payload(tx).unpack()
     np.testing.assert_array_equal(np.asarray(back), np.asarray(tx.indices))
 
 

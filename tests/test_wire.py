@@ -10,10 +10,15 @@ PR-1..4 function zoo:
     payload bytes are computed: an engine round's bytes == the sum of
     the per-client payloads' bytes, and ``Transmission.nbytes`` comes
     from the same source;
-  * deprecation shims — ``client_transmit`` / ``client_round_fused`` /
-    ``unpack_transmission`` warn AND keep behavioral parity with the new
-    API (the retired ``sim.engine.PackedCodes`` now raises — see
-    tests/test_server.py's tombstone test);
+  * tombstones — the PR-5 shims (``client_transmit`` /
+    ``client_round_fused`` / ``unpack_transmission``) finished their
+    deprecation cycle: importing one raises ImportError with a pointer
+    at the wire layer (same retirement as ``sim.engine.PackedCodes``);
+    legacy ``Transmission`` carriers still coerce via ``as_payload``;
+  * integrity — every packed carrier is CRC-stamped
+    (``payload_crc`` over header + words); a flipped bit or truncated
+    stream fails ``verify()`` and is REJECTED ``corrupt`` at admission,
+    bytes staying on the §2.8 ledger;
   * wire invariants — the server side REJECTS (structured
     ``AdmissionResult`` verdicts, §2.8-ledgered, not exceptions)
     unknown wire revisions, unknown/retired codebook versions, and
@@ -23,8 +28,6 @@ PR-1..4 function zoo:
     leaks no private-residual signal (the §2.7 audit shows the private
     component is strictly more identifying).
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -35,8 +38,9 @@ from repro.core.dvqae import DVQAEConfig
 from repro.kernels import ops
 from repro.kernels.pack_bits import code_bits
 from repro.sim import SimEngine
-from repro.wire import (WIRE_VERSION, CodePayload, OctopusClient,
-                        OctopusServer, as_payload)
+from repro.wire import (SUPPORTED_WIRE_VERSIONS, WIRE_VERSION, CodePayload,
+                        OctopusClient, OctopusServer, as_payload,
+                        concat_payloads, payload_crc, round_words)
 
 
 @pytest.fixture(scope="module")
@@ -48,6 +52,17 @@ def tiny_cfg():
 @pytest.fixture(scope="module")
 def server(tiny_cfg):
     return OC.server_init(jax.random.PRNGKey(0), tiny_cfg)
+
+
+def _legacy_tx(server, cfg, x, labels=None):
+    """Hand-built legacy ``Transmission`` (the shim that minted these is
+    a tombstone now): encode-only facade uplink, repacked WITHOUT the
+    wire's leading client axis — the PR-4 layout."""
+    payload = OctopusClient(server, cfg).transmit(x)
+    idx = payload.unpack()[0]
+    p = CodePayload.pack(idx, bits=payload.bits)
+    return OC.Transmission(indices=idx, nbytes=p.nbytes, labels=labels,
+                           payload=p.payload, bits=p.bits)
 
 
 def _count_dispatches(fn):
@@ -99,6 +114,86 @@ def test_payload_label_validation():
         CodePayload.pack(idx, bits=4, labels=jnp.zeros((5,)), n_samples=6)
 
 
+# ------------------------------------------------------ payload integrity
+
+def test_payload_crc_stamped_and_verifies():
+    """Every packed carrier is wire-2 and CRC-stamped; verify() passes
+    on the intact stream and pins the exact crc32 recomputation."""
+    rng = np.random.default_rng(3)
+    idx = jnp.asarray(rng.integers(0, 16, size=(2, 3, 4)), jnp.int32)
+    p = CodePayload.pack(idx, bits=4)
+    assert p.wire == WIRE_VERSION == 2
+    assert p.wire in SUPPORTED_WIRE_VERSIONS
+    assert p.checksum == payload_crc(p.payload, bits=p.bits, shape=p.shape,
+                                     n_records=p.n_records,
+                                     version=p.version)
+    assert p.verify()
+    # metadata is inside the CRC: the same words under a different
+    # declared version must not validate against the old stamp
+    assert not p._replace(version=p.version + 1).verify()
+
+
+def test_payload_bit_flip_and_truncation_fail_verify():
+    rng = np.random.default_rng(4)
+    idx = jnp.asarray(rng.integers(0, 16, size=(2, 3, 4)), jnp.int32)
+    p = CodePayload.pack(idx, bits=4)
+    flipped = p._replace(
+        payload=p.payload.at[0, 0].set(p.payload[0, 0] ^ np.uint32(1)))
+    assert not flipped.verify()
+    truncated = p._replace(payload=p.payload[:-1])
+    assert not truncated.verify()
+    # un-stamped carriers (hand-built, legacy wire-1) skip the check
+    assert p._replace(checksum=None).verify()
+
+
+def test_corrupt_payload_rejected_at_admission(tiny_cfg, server):
+    """A flipped bit is caught AT THE DOOR: verdict rejected/corrupt,
+    bytes §2.8-ledgered, nothing stored, nothing ever decoded."""
+    from repro.server import ContinuousIngestService
+    srv = OctopusServer(server, tiny_cfg)
+    svc = ContinuousIngestService(srv)
+    rng = np.random.default_rng(5)
+    idx = jnp.asarray(rng.integers(0, 16, size=(2, 3, 4)), jnp.int32)
+    p = CodePayload.pack(idx, bits=code_bits(16))
+    bad = p._replace(
+        payload=p.payload.at[0, 0].set(p.payload[0, 0] ^ np.uint32(1)))
+    res = svc.offer(bad)
+    assert res.verdict == "rejected" and res.reason == "corrupt"
+    assert len(srv.store) == 0
+    assert svc.queue.bytes_rejected == bad.nbytes
+    # the intact twin still ingests
+    assert svc.offer(p).ok
+
+
+def test_unknown_wire_revision_rejected(tiny_cfg, server):
+    srv = OctopusServer(server, tiny_cfg)
+    p = CodePayload.pack(jnp.zeros((2, 3, 4), jnp.int32), bits=4)
+    verdict, reason = srv.precheck(p._replace(wire=99))
+    assert (verdict, reason) == ("rejected", "wire_revision")
+    # wire-1 (pre-CRC) traces remain decodable: still a supported rev
+    verdict, _ = srv.precheck(p._replace(wire=1, checksum=None))
+    assert verdict == "accepted"
+
+
+def test_concat_payloads_label_mismatch_raises():
+    """Partial labeling or disagreeing task sets across concatenated
+    payloads is an explicit ValueError, not silent label dropping."""
+    rng = np.random.default_rng(6)
+    idx = jnp.asarray(rng.integers(0, 16, size=(2, 3, 4)), jnp.int32)
+    labeled = CodePayload.pack(idx, bits=4, labels=jnp.zeros((2, 3)))
+    bare = CodePayload.pack(idx, bits=4)
+    other = CodePayload.pack(idx, bits=4,
+                             labels={"task2": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError, match="label channel mismatch"):
+        concat_payloads([labeled, bare])
+    with pytest.raises(ValueError, match="label task-channel mismatch"):
+        concat_payloads([labeled, other])
+    # the agreeing case concatenates and stays CRC-stamped
+    both = concat_payloads([labeled, labeled])
+    assert both.n_records == 2 and both.checksum is not None
+    assert both.verify()
+
+
 def test_engine_round_bytes_equal_sum_of_client_payload_bytes(tiny_cfg,
                                                               server, key):
     """Satellite: the sim-engine round's measured bytes == the sum of the
@@ -120,11 +215,9 @@ def test_engine_round_bytes_equal_sum_of_client_payload_bytes(tiny_cfg,
 
 
 def test_transmission_nbytes_single_source(tiny_cfg, server, key):
-    """Transmission.nbytes now comes from CodePayload.nbytes."""
-    cl = OC.client_init(server)
+    """Transmission.nbytes comes from CodePayload.nbytes."""
     x = jax.random.normal(key, (4, 8, 8, 3))
-    with pytest.warns(DeprecationWarning):
-        tx = OC.client_transmit(cl, tiny_cfg, x)
+    tx = _legacy_tx(server, tiny_cfg, x)
     p = as_payload(tx)
     assert isinstance(p, CodePayload)
     assert tx.nbytes == p.nbytes \
@@ -134,15 +227,13 @@ def test_transmission_nbytes_single_source(tiny_cfg, server, key):
 # ---------------------------------------------------------- facade parity
 
 def test_facade_round_bit_identical_to_fused(tiny_cfg, server, key):
-    """Acceptance: OctopusClient.round == client_round_fused (words AND
-    client state), and unpacks to client_round's indices."""
+    """Acceptance: OctopusClient.round == the pure ``round_words`` tail
+    (words AND client state), and unpacks to client_round's indices."""
     x = jax.random.normal(key, (2, 8, 8, 3))
     srv = OctopusServer(server, tiny_cfg)
     cl = srv.deploy()
     payload = cl.round(x)
-    with pytest.warns(DeprecationWarning, match="client_round_fused"):
-        ref_client, words = OC.client_round_fused(OC.client_init(server),
-                                                  tiny_cfg, x)
+    ref_client, words = round_words(OC.client_init(server), tiny_cfg, x)
     np.testing.assert_array_equal(np.asarray(payload.payload),
                                   np.asarray(words))
     jax.tree.map(lambda a, b: np.testing.assert_allclose(
@@ -160,31 +251,29 @@ def test_facade_round_dispatch_neutral(tiny_cfg, server, key):
     x = jax.random.normal(key, (2, 8, 8, 3))
     cl = OctopusClient(server, tiny_cfg, n_local_steps=0)
     assert _count_dispatches(lambda: cl.round(x)) == (1, 1)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        ref = _count_dispatches(lambda: OC.client_round_fused(
-            OC.client_init(server), tiny_cfg, x, n_local_steps=0))
+    ref = _count_dispatches(lambda: round_words(
+        OC.client_init(server), tiny_cfg, x, n_local_steps=0))
     assert ref == (1, 1)
     # refresh/finetune policy flags stay single-dispatch too
     assert _count_dispatches(lambda: cl.transmit(x)) == (1, 1)
     assert _count_dispatches(lambda: cl.round(x, finetune=2))[1] == 1
 
 
-def test_facade_transmit_matches_client_transmit(tiny_cfg, server, key):
-    """Encode-only profile == the deprecated client_transmit uplink:
-    same packed words, same measured bytes, state untouched."""
+def test_facade_transmit_is_encode_only(tiny_cfg, server, key):
+    """Encode-only profile: packed words == pack(forward indices) with
+    §2.8-measured bytes, and the client state is untouched."""
+    from repro.core.dvqae import forward
     x = jax.random.normal(key, (4, 8, 8, 3))
     cl = OctopusClient(server, tiny_cfg)
     before = jax.tree.map(np.asarray, cl.state.params)
     payload = cl.transmit(x, labels=jnp.arange(4))
-    with pytest.warns(DeprecationWarning, match="client_transmit"):
-        tx = OC.client_transmit(OC.client_init(server), tiny_cfg, x,
-                                labels=jnp.arange(4))
+    idx = forward(OC.client_init(server).params, tiny_cfg, x).latent.indices
+    ref = CodePayload.pack(idx, bits=OC.transmit_bits(tiny_cfg))
     np.testing.assert_array_equal(np.asarray(payload.payload),
-                                  np.asarray(tx.payload))
-    assert payload.nbytes == tx.nbytes
+                                  np.asarray(ref.payload))
+    assert payload.nbytes == ref.nbytes
     np.testing.assert_array_equal(np.asarray(payload.unpack()[0]),
-                                  np.asarray(tx.indices))
+                                  np.asarray(idx))
     jax.tree.map(lambda a, b: np.testing.assert_array_equal(
         a, np.asarray(b)), before, cl.state.params)   # no refresh, no tune
 
@@ -193,9 +282,7 @@ def test_ingest_lifts_legacy_transmission(tiny_cfg, server, key):
     """A packed legacy Transmission ingests through the facade: lifted to
     the (C=1, B, ...) wire layout, labels stay per-sample aligned."""
     x = jax.random.normal(key, (4, 8, 8, 3))
-    with pytest.warns(DeprecationWarning):
-        tx = OC.client_transmit(OC.client_init(server), tiny_cfg, x,
-                                labels=jnp.arange(4))
+    tx = _legacy_tx(server, tiny_cfg, x, labels=jnp.arange(4))
     srv = OctopusServer(server, tiny_cfg)
     res = srv.ingest(tx)
     assert res.verdict == "accepted" and res.ok
@@ -233,14 +320,17 @@ def test_decode_codes_rejects_conflicting_carrier_args(key):
         ops.decode_codes(p, table, bits=8, count=8)
 
 
-def test_unpack_transmission_shim_parity(tiny_cfg, server, key):
+def test_retired_shims_are_tombstones(tiny_cfg, server, key):
+    """The PR-5 shims raise ImportError pointing at repro.wire — and the
+    pointed-at path really does what the shim did (as_payload lift)."""
+    for name in ("client_transmit", "client_round_fused",
+                 "unpack_transmission"):
+        with pytest.raises(ImportError, match="repro.wire"):
+            getattr(OC, name)
+    with pytest.raises(AttributeError):
+        OC.never_existed
     x = jax.random.normal(key, (2, 8, 8, 3))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        tx = OC.client_transmit(OC.client_init(server), tiny_cfg, x)
-    with pytest.warns(DeprecationWarning, match="unpack_transmission"):
-        idx = OC.unpack_transmission(tx)
-    np.testing.assert_array_equal(np.asarray(idx), np.asarray(tx.indices))
+    tx = _legacy_tx(server, tiny_cfg, x)
     np.testing.assert_array_equal(np.asarray(as_payload(tx).unpack()),
                                   np.asarray(tx.indices))
 
