@@ -27,6 +27,28 @@ Paper targets:
   wire     unified wire protocol (repro/wire): OctopusClient facade
            round vs the PR-4 fused round — bit-identical words,
            dispatch-count-neutral, plus the CodePayload->store roundtrip
+  privacy  red-team sweep (repro/privacy): inference-attack advantage
+           vs disentanglement strength / K / GSVQ grouping, the
+           leaky-control teeth check, and oblivious-store overhead
+
+``privacy`` CSV schema (rows ``privacy,<name>,<value>[,extra]``):
+  harness_matches_wire      partial-IN harness encoder == facade wire
+                            at both endpoints (packed words, bit-exact)
+  leaky_control_advantage   attribute-attack advantage on the REAL
+                            facade wire with IN off — MUST clear chance
+                            (the harness-has-teeth gate)
+  privatized_advantage      same attack, IN on — must sit ≈ chance
+  attr_advantage/disent_s<s>   advantage at disentanglement strength s
+  attr_advantage/K<K>_{leaky|priv}        advantage vs codebook size
+  attr_advantage/gsvq_g<G>s<S>_{leaky|priv}  advantage vs GSVQ grouping
+  membership_{leaky|privatized}_advantage  client re-identification
+                            (round-2 members vs never-seen holdouts)
+  oblivious_parity_bitexact oblivious store == plain sharded store
+                            (codes + every (client, round) get)
+  oblivious_touch_ratio     partitions touched per useful partition
+                            (the access-pattern-hiding cost)
+  oblivious_get_overhead    wall ratio oblivious/plain on one identical
+                            query workload (OMLO methodology)
 
 ``wire`` CSV schema (rows ``wire,<name>,<value>[,extra]``):
   bit_identical_to_fused    facade payload words == pure round_words core
@@ -242,7 +264,7 @@ def bench_fig4(key):
 def bench_fig5(key):
     """Privatization: identity (style) recognition accuracy on raw vs
     OCTOPUS public codes; conditional entropy per Thm. 1 (Fig. 5 + Fig. 7)."""
-    from repro.core import privacy as PV
+    from repro import privacy as PV
     pipe = C.build_pipeline(key, codebook_size=256)
 
     # adversary on RAW data (centralized leak baseline)
@@ -291,7 +313,7 @@ def bench_fig5(key):
 def bench_table1(key):
     """Identity accuracy with/without disentanglement across codebook
     sizes (Table 1 / Fig. 8)."""
-    from repro.core import privacy as PV
+    from repro import privacy as PV
     for B in (32, 64, 128):
         row = []
         for apply_in in (True, False):
@@ -1032,6 +1054,19 @@ def bench_wire(key):
     _emit("wire", "decoded_samples", feats.shape[0])
 
 
+# ----------------------------------------------------------------- privacy
+
+def bench_privacy(key):
+    """Red-team sweep (repro.privacy): attack-advantage-vs-knob curves,
+    the leaky-control teeth check, membership inference, and the
+    oblivious-store parity + overhead rows. Deterministic in ``key``."""
+    from repro import privacy as P
+    for r in P.run_sweep(key, quick=C.QUICK):
+        extra = " ".join(f"{k}={v}" for k, v in sorted(r["extra"].items())) \
+            if r.get("extra") else ""
+        _emit("privacy", r["name"], r["value"], extra)
+
+
 SECTIONS = {
     "fig4": bench_fig4,
     "fig5": bench_fig5,
@@ -1046,6 +1081,7 @@ SECTIONS = {
     "decode": bench_decode,
     "encode": bench_encode,
     "wire": bench_wire,
+    "privacy": bench_privacy,
 }
 
 

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core import downstream as DS
 from repro.core import octopus as OC
-from repro.core import privacy as PV
+from repro import privacy as PV
 from repro.core.disentangle import perturb_private, recombine
 from repro.core.dvqae import DVQAEConfig, decode, forward
 from repro.data import make_speech, train_test_split

@@ -1,0 +1,89 @@
+"""Privacy red team: attack the §2.5 claim, then hide the access pattern.
+
+OCTOPUS claims transmitted codes carry no private component. This
+example plays the adversary instead of trusting the claim:
+
+  1. drive the ``adversary`` standing scenario's traffic through a
+     ``PayloadTap`` — a wiretap that (under the explicit
+     ``OCTOPUS_REDTEAM`` opt-in) records FULL packed payloads, unlike
+     the metadata-only flight recorder;
+  2. train attribute- and membership-inference attackers on the
+     captured streams — against the privatized wire they score ≈
+     chance, against the provably-leaky control codec (IN off) they
+     must NOT (the harness has teeth);
+  3. swap the server's sharded store for the ``ObliviousCodeStore``:
+     same bits out (checked), but which client's codes are touched when
+     leaks nothing — at a measured touch-ratio cost.
+
+Set ``OCTOPUS_TRACE=redteam.jsonl`` to flight-record the run — the
+trace shows ``tap``/``attack`` events (scalar results and payload
+METADATA only; even a red-team run's trace honors §2.5).
+
+    OCTOPUS_REDTEAM=1 PYTHONPATH=src python examples/privacy_redteam.py
+"""
+import os
+
+os.environ.setdefault("OCTOPUS_REDTEAM", "1")    # the explicit opt-in
+
+import jax
+import numpy as np
+
+from repro import obs, privacy as P
+from repro.privacy import sweep as SW
+from repro.server import STANDARD_SCENARIOS, RoundScheduler
+
+rec = obs.install_from_env()                 # OCTOPUS_TRACE=... to record
+key = jax.random.PRNGKey(0)
+
+# ---- 1. tap the adversary scenario's traffic ---------------------------
+
+scenario = STANDARD_SCENARIOS["adversary"]
+sched = RoundScheduler(8, scenario.sched, key=jax.random.PRNGKey(42))
+cfg, params, srv = P.make_codec(0, K=32)     # privatized wire (IN on)
+cfg_leaky, params_leaky, srv_leaky = P.make_codec(0, K=32, apply_in=False)
+
+rng = np.random.default_rng(0)
+protos = rng.normal(size=(SW.N_CONTENT, SW.T_SEQ, SW.D_MODEL))
+shifts = rng.normal(size=(SW.N_STYLES, SW.D_MODEL)) * SW.SHIFT_SCALE
+
+tap, tap_leaky = P.PayloadTap(), P.PayloadTap()   # opt-in via env above
+for _ in range(4):                                # 4 scheduled rounds
+    ev = sched.step()
+    for c in ev.participants.tolist():
+        sty = c % SW.N_STYLES
+        x, _ = SW.client_batch(rng, protos, shifts[sty], 24)
+        tap.capture(srv.deploy(client_id=c).transmit(x),
+                    client=c, style=sty)
+        tap_leaky.capture(srv_leaky.deploy(client_id=c).transmit(x),
+                          client=c, style=sty)
+print(f"tapped {len(tap)} uplinks, {tap.nbytes} B of packed codes")
+
+# ---- 2. attack the captured streams ------------------------------------
+
+ka, kb = jax.random.split(key)
+leaky = P.attribute_inference(ka, tap_leaky, attribute="style",
+                              n_classes=SW.N_STYLES, n_atoms=32, steps=120)
+priv = P.attribute_inference(kb, tap, attribute="style",
+                             n_classes=SW.N_STYLES, n_atoms=32, steps=120)
+print(f"attribute attack, leaky control:  acc {leaky.accuracy:.2f} "
+      f"(chance {leaky.chance:.2f}) -> advantage {leaky.advantage:+.2f}")
+print(f"attribute attack, privatized:     acc {priv.accuracy:.2f} "
+      f"(chance {priv.chance:.2f}) -> advantage {priv.advantage:+.2f}")
+assert leaky.advantage > 0.2, "the harness lost its teeth"
+assert abs(priv.advantage) < 0.2, "the privatized wire leaked"
+
+mem = P.membership_point(key, seed=0, strength=0.0, steps=120)
+print(f"membership (leaky wire):          acc {mem.accuracy:.2f} "
+      f"(chance {mem.chance:.2f}) -> advantage {mem.advantage:+.2f}")
+
+# ---- 3. defend the server side: oblivious store ------------------------
+
+oh = P.oblivious_point(seed=0)
+assert oh["parity_bitexact"] == 1.0
+print(f"oblivious store: bit-exact with plain store; "
+      f"touch ratio {oh['partition_touch_ratio']:.1f}x, "
+      f"get wall ratio {oh['get_wall_ratio']:.1f}x")
+
+if rec is not None:
+    print(f"trace: {rec.n_events} events -> {rec.path} "
+          f"(tap/attack events are metadata-only)")

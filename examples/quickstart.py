@@ -16,7 +16,7 @@ Everything crossing the client→server boundary is a single carrier —
 import jax
 
 from repro.core import downstream as DS
-from repro.core import privacy as PV
+from repro import privacy as PV
 from repro.core.dvqae import DVQAEConfig
 from repro.data import holdout_atd, make_images, partition, train_test_split
 from repro.wire import OctopusServer

@@ -6,7 +6,7 @@
   ema          codebook EMA refresh (Eq. 7-9)
   dvqae        conv/sequence DVQ-AE models
   octopus      client/server protocol (Steps 1-6)
-  privacy      computational adversary + conditional entropy (Thm. 1)
+  privacy      TOMBSTONE — the Thm. 1 adversary moved to repro.privacy
   overheads    §2.8 communication byte models
 """
 from . import disentangle, dvqae, ema, gsvq, octopus, overheads, privacy, vq

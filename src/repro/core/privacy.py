@@ -1,113 +1,30 @@
-"""Privacy evaluation: the computational adversary (§2.7.2, Theorem 1).
+"""TOMBSTONE: the privacy toolkit moved to ``repro.privacy``.
 
-A neural classifier q(Y | Z) is trained post-hoc on released components; its
-test cross-entropy is the (upper-bound estimate of) conditional entropy
-H(Y | Z) in bits, and its test accuracy is the re-identification rate.
-The adversary is NEVER part of OCTOPUS training — evaluation only.
+The Thm. 1 computational adversary (§2.7.2) now lives in
+``repro.privacy.audit``, where it is the shared classifier core behind
+both the paired :func:`repro.privacy.privacy_audit` and the wire-level
+inference attacks (``repro.privacy.attacks``) that train the same probe
+on captured CodePayload streams. This module only points there —
+importing a moved name raises with the new location, same shim-hygiene
+pattern as ``core.octopus`` / ``sim``.
 """
 from __future__ import annotations
 
-import math
-from typing import NamedTuple, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.nn.layers import dense_init
-from repro.optim.adamw import adamw_init, adamw_update
-
-
-class AdversaryMetrics(NamedTuple):
-    accuracy: float                 # re-identification accuracy
-    conditional_entropy_bits: float  # H(Y|Z) estimate via Thm. 1
-    loss: float
+_TOMBSTONES = {
+    "AdversaryMetrics": "repro.privacy.AdversaryMetrics",
+    "init_adversary": "repro.privacy.init_adversary",
+    "adversary_logits": "repro.privacy.adversary_logits",
+    "xent": "repro.privacy.xent",
+    "train_adversary": "repro.privacy.train_adversary",
+    "evaluate_adversary": "repro.privacy.evaluate_adversary",
+    "privacy_audit": "repro.privacy.privacy_audit",
+}
 
 
-def init_adversary(key, in_dim: int, n_classes: int, hidden: int = 256):
-    """3-layer MLP probe (paper: 3 Conv1d + FC; features are already latent
-    vectors here, so dense layers are the equivalent probe capacity)."""
-    k1, k2, k3 = jax.random.split(key, 3)
-    return {
-        "w1": dense_init(k1, in_dim, hidden), "b1": jnp.zeros((hidden,)),
-        "w2": dense_init(k2, hidden, hidden), "b2": jnp.zeros((hidden,)),
-        "w3": dense_init(k3, hidden, n_classes), "b3": jnp.zeros((n_classes,)),
-    }
-
-
-def adversary_logits(params, z):
-    h = jax.nn.relu(z @ params["w1"] + params["b1"])
-    h = jax.nn.relu(h @ params["w2"] + params["b2"])
-    return h @ params["w3"] + params["b3"]
-
-
-def xent(params, z, y):
-    logits = adversary_logits(params, z)
-    logp = jax.nn.log_softmax(logits)
-    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
-
-
-def _flatten_features(z):
-    return z.reshape(z.shape[0], -1).astype(jnp.float32)
-
-
-def train_adversary(key, features, labels, n_classes: int, *,
-                    steps: int = 300, lr: float = 1e-3, batch: int = 256):
-    """Fit q(Y|Z) by SGD on cross-entropy (the Thm. 1 bound minimizer)."""
-    z = _flatten_features(features)
-    params = init_adversary(key, z.shape[-1], n_classes)
-    opt = adamw_init(params)
-
-    @jax.jit
-    def step(params, opt, zb, yb):
-        g = jax.grad(xent)(params, zb, yb)
-        return adamw_update(params, g, opt, lr=lr)
-
-    n = z.shape[0]
-    for i in range(steps):
-        k = jax.random.fold_in(key, i)
-        sel = jax.random.randint(k, (min(batch, n),), 0, n)
-        params, opt = step(params, opt, z[sel], labels[sel])
-    return params
-
-
-def evaluate_adversary(params, features, labels, n_classes: int
-                       ) -> AdversaryMetrics:
-    """Test-set CE -> conditional entropy in bits (Thm. 1); accuracy."""
-    z = _flatten_features(features)
-    logits = adversary_logits(params, z)
-    logp = jax.nn.log_softmax(logits)
-    nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
-    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
-    return AdversaryMetrics(accuracy=float(acc),
-                            conditional_entropy_bits=float(nll) / math.log(2),
-                            loss=float(nll))
-
-
-def privacy_audit(key, public_feats, private_feats, labels, n_classes: int,
-                  steps: int = 300) -> Tuple[AdversaryMetrics, AdversaryMetrics]:
-    """Paired audit: adversary on Z• (want: high H, low acc) vs on Z∘
-    (expected: low H, high acc — the style really is there).
-
-    Samples are permuted with the provided key before the 80/20 split:
-    OCTOPUS features typically arrive label-sorted (the non-iid
-    partitions of data.federated concatenate per-class shards), and an
-    unshuffled head/tail split would evaluate the adversary on classes it
-    never saw — degenerating the H(Y|Z) bound instead of measuring leakage.
-    """
-    n = labels.shape[0]
-    # private component broadcasts over positions; tile to sample count
-    pf = jnp.broadcast_to(private_feats,
-                          (n,) + private_feats.shape[1:]) \
-        if private_feats.shape[0] != n else private_feats
-    kp, k1, k2 = jax.random.split(key, 3)
-    perm = jax.random.permutation(kp, n)
-    public_feats, pf, labels = public_feats[perm], pf[perm], labels[perm]
-    split = int(0.8 * n)
-    pub = train_adversary(k1, public_feats[:split], labels[:split], n_classes,
-                          steps=steps)
-    pub_m = evaluate_adversary(pub, public_feats[split:], labels[split:],
-                               n_classes)
-    prv = train_adversary(k2, pf[:split], labels[:split], n_classes,
-                          steps=steps)
-    prv_m = evaluate_adversary(prv, pf[split:], labels[split:], n_classes)
-    return pub_m, prv_m
+def __getattr__(name):
+    if name in _TOMBSTONES:
+        raise ImportError(
+            f"repro.core.privacy.{name} moved; use {_TOMBSTONES[name]} — "
+            f"the red-team subsystem owns the Thm. 1 adversary now, see "
+            f"repro.privacy")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

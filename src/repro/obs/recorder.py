@@ -30,6 +30,12 @@ per line, one line per event, covering the whole uplink life cycle —
                envelope (client_id / seq / attempt / backoff ticks)
   ``recovery`` one crash recovery completing (snapshot tick, journal
                entries replayed, wall duration)
+  ``tap``      a red-team :class:`repro.privacy.PayloadTap` capturing
+               one payload off the wire (capture count + the payload's
+               METADATA — the tap announces itself in the trace, but
+               the captured words live only in the opted-in tap)
+  ``attack``   one inference attack scored (attack name, accuracy,
+               chance, advantage — scalar results, never features)
 
 Zero-overhead default: no recorder is installed unless the process opts
 in (:func:`install` / :func:`recording` / the ``OCTOPUS_TRACE`` env
@@ -54,7 +60,8 @@ from typing import IO, Any, Dict, Optional, Union
 from .metrics import MetricsRegistry
 
 EVENT_KINDS = ("round", "encode", "uplink", "ingest", "decode", "merge",
-               "admission", "migration", "fault", "retry", "recovery")
+               "admission", "migration", "fault", "retry", "recovery",
+               "tap", "attack")
 
 #: uplink/ingest events carry EXACTLY this payload metadata — the §2.5
 #: boundary of the observability plane (no words, no labels, no latents)
@@ -128,7 +135,22 @@ class FlightRecorder:
     # -------------------------------------------------------------- events
 
     def event(self, kind: str, **fields) -> Dict[str, Any]:
-        """Emit one event; returns the dict that was written."""
+        """Emit one event; returns the dict that was written.
+
+        Field values must be SCALARS (numbers / strings / bools / None):
+        arrays and containers are refused outright, so no event kind —
+        present or future — can smuggle packed words, label vectors or
+        latents into a trace (§2.5 is enforced mechanically, not by
+        call-site discipline).
+        """
+        for k, v in fields.items():
+            if (isinstance(v, (list, tuple, set, dict, bytes, bytearray))
+                    or getattr(v, "ndim", 0)):
+                raise ValueError(
+                    f"trace event {kind!r} field {k!r} carries a "
+                    f"{type(v).__name__}; events are scalar-only — the "
+                    f"observability plane never records words, labels or "
+                    f"latents (§2.5)")
         ev = {"kind": kind, "ts": time.time()}
         ev.update(fields)
         with self._lock:

@@ -1,0 +1,183 @@
+"""Oblivious-access mode for the sharded code store (server defense).
+
+1912.04977 §4.2.3 flags SERVER-side access-pattern leakage: even when
+payload contents are privatized (§2.5), *which client's codes are
+touched when* is itself a side channel — a storage observer watching
+partition I/O learns participation schedules and client↔shard bindings.
+The classic fix is ORAM-style access-pattern hiding; OMLO-style
+evaluations report it as baseline-vs-oblivious overhead on identical
+workloads, which is exactly how `BENCH_privacy.json` reports it here.
+
+:class:`ObliviousCodeStore` wraps a
+:class:`repro.server.store.ShardedCodeStore` and makes every operation's
+*touch sequence* independent of its arguments:
+
+  * every op touches EVERY partition of the live grid exactly once, in
+    an order drawn from ``default_rng((seed, op_counter))`` — a schedule
+    that is a pure function of (seed, op index, grid size), never of the
+    client id, round, shard or payload being handled;
+  * real work happens when the schedule reaches the relevant partition;
+    every other touch is a dummy access of the same shape (a full
+    partition scan for reads, a ledger probe for writes), so the
+    observer sees a constant fan of partition touches per op;
+  * ``open_version`` pre-creates a version's full shard grid so lazy
+    partition creation cannot reveal which shard got first traffic.
+
+Results are BIT-EXACT with the plain store: the plain ``get`` answers
+from the minimum (version, shard) partition key holding a match, so the
+oblivious scan collects per-partition candidates and answers from the
+same minimum key — only the touch ORDER is randomized, never the
+answer. Everything else (``dataset``, ``codes``, ledgers, snapshots)
+delegates to the wrapped store unchanged; bulk decode already touches
+every partition by construction.
+
+The store keeps an ``access_log`` of (op, schedule) pairs and
+touched/useful byte counters; :meth:`overhead` summarizes them as the
+measured cost of obliviousness (the BENCH row).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dvqae import DVQAEConfig
+from repro.wire.payload import CodePayload, LabelsLike
+
+from repro.server.store import ShardedCodeStore, StoreRecord
+
+
+class ObliviousCodeStore:
+    """Access-pattern-hiding facade over a ``ShardedCodeStore``.
+
+    Same constructor surface as the plain sharded store plus
+    ``oblivious_seed`` (the schedule stream — an observer who knows it
+    still learns nothing, because schedules never depend on the query;
+    it exists so runs are replayable).
+    """
+
+    def __init__(self, cfg: DVQAEConfig, *, n_shards: int = 4,
+                 capacity_samples: Optional[int] = None,
+                 policy: str = "fifo", seed: int = 0, shard_fn=None,
+                 oblivious_seed: int = 0):
+        self.inner = ShardedCodeStore(
+            cfg, n_shards=n_shards, capacity_samples=capacity_samples,
+            policy=policy, seed=seed, shard_fn=shard_fn)
+        self.oblivious_seed = int(oblivious_seed)
+        self._op_counter = 0
+        #: (op name, partition-key schedule) per operation, for audit
+        self.access_log: List[Tuple[str, Tuple[Tuple[int, int], ...]]] = []
+        self.touched_partitions = 0
+        self.useful_partitions = 0
+        self.touched_bytes = 0
+        self.useful_bytes = 0
+
+    # ------------------------------------------------------------ schedule
+
+    def open_version(self, version: int) -> None:
+        """Pre-create the FULL shard grid for ``version`` so partition
+        creation happens at version-open time (public knowledge — the
+        registry announces versions) rather than on first traffic."""
+        for s in range(self.inner.n_shards):
+            self.inner.partition(int(version), s)
+
+    def _schedule(self, op: str) -> List[Tuple[int, int]]:
+        """All live partition keys, in an order drawn purely from
+        (oblivious_seed, op counter) — provably query-independent."""
+        keys = sorted(self.inner.partitions)
+        rng = np.random.default_rng((self.oblivious_seed,
+                                     self._op_counter))
+        order = [keys[i] for i in rng.permutation(len(keys))]
+        self._op_counter += 1
+        self.access_log.append((op, tuple(order)))
+        return order
+
+    def _touch(self, key: Tuple[int, int], *, useful: bool) -> None:
+        part = self.inner.partitions[key]
+        self.touched_partitions += 1
+        self.touched_bytes += part.total_bytes
+        if useful:
+            self.useful_partitions += 1
+            self.useful_bytes += part.total_bytes
+
+    # ----------------------------------------------------------------- add
+
+    def add(self, packed: CodePayload, *, client_ids=None, round: int = 0,
+            version: Optional[int] = None, labels: LabelsLike = None
+            ) -> StoreRecord:
+        """Ingest one payload obliviously: the full grid is touched in
+        schedule order; the record lands in its real partition when the
+        schedule reaches it, every other touch is a same-shape dummy
+        (ledger probe). The stored result is identical to the plain
+        store's — dummy touches mutate nothing."""
+        if version is None:
+            version = int(getattr(packed, "version", 0))
+        self.open_version(version)
+        shard = self.inner.shard_of(client_ids)
+        target = (int(version), int(shard))
+        rec: Optional[StoreRecord] = None
+        for key in self._schedule("add"):
+            self._touch(key, useful=key == target)
+            if key == target:
+                rec = self.inner.partition(*key).add(
+                    packed, client_ids=client_ids, round=round,
+                    version=version, labels=labels)
+            else:
+                # dummy write: probe the partition's ledger so the touch
+                # has the same read shape as a real admission check
+                _ = self.inner.partitions[key].n_samples
+        self.inner._set_gauges()
+        assert rec is not None
+        return rec
+
+    # ----------------------------------------------------------------- get
+
+    def get(self, client_id: int, round: int):
+        """Decode one client's codes without revealing which partition
+        held them: EVERY partition is fully scanned in schedule order,
+        hits are collected, and the answer is the hit from the minimum
+        partition key — exactly what the plain store's sorted-order
+        first-match scan returns."""
+        hits: Dict[Tuple[int, int], tuple] = {}
+        for key in self._schedule("get"):
+            part = self.inner.partitions[key]
+            try:
+                found = part.get(client_id, round)
+            except KeyError:
+                found = None
+            if found is not None:
+                hits[key] = found
+            self._touch(key, useful=found is not None)
+        if not hits:
+            raise KeyError((client_id, round))
+        return hits[min(hits)]
+
+    # ------------------------------------------------------------ overhead
+
+    def overhead(self) -> Dict[str, float]:
+        """Measured cost of obliviousness on the workload so far
+        (OMLO-style baseline-vs-oblivious accounting): a plain store
+        touches only the useful partitions/bytes, this one touches them
+        all — the ratios ARE the overhead factor."""
+        return {
+            "ops": float(self._op_counter),
+            "touched_partitions": float(self.touched_partitions),
+            "useful_partitions": float(self.useful_partitions),
+            "partition_touch_ratio": self.touched_partitions
+            / max(1, self.useful_partitions),
+            "touched_bytes": float(self.touched_bytes),
+            "useful_bytes": float(self.useful_bytes),
+            "byte_touch_ratio": self.touched_bytes
+            / max(1, self.useful_bytes),
+        }
+
+    # --------------------------------------------------------- delegation
+
+    def __len__(self) -> int:
+        return len(self.inner)
+
+    def __getattr__(self, name):
+        # everything not overridden (dataset, codes, labels, ledgers,
+        # snapshot/load, retire_version, partitions, ...) behaves exactly
+        # as the wrapped store — bulk paths already touch every partition
+        return getattr(self.__dict__["inner"], name)

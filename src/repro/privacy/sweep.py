@@ -1,0 +1,327 @@
+"""Deterministic leakage-vs-knob sweep: the `BENCH_privacy.json` rows.
+
+Attack-advantage curves over the three §2.5-relevant knobs —
+disentanglement strength, codebook size K, GSVQ grouping — plus the
+oblivious-store overhead row, all on the PR-5 linear (``sequence``)
+codec from ``test_wire.py``. That codec is the PROVABLY-leaky control:
+with IN off, a per-instance channel shift (the style carrier Eq. 4
+exists to strip) flows straight through the linear encoder into the
+code stream, so the attribute attacker MUST score above chance there —
+if it doesn't, the harness is broken, not the defense.
+
+Everything is deterministic: population draws come from
+``np.random.default_rng(seed)``, attacks from the provided JAX key, and
+the oblivious store's schedules from its own seed — re-running a sweep
+reproduces every row bit-for-bit.
+
+Two encode paths feed the tap:
+
+  * the FACADE path (``OctopusClient.transmit`` — the fused production
+    wire) for the headline leaky-vs-privatized rows;
+  * a partial-IN HARNESS encoder for the knob curves:
+    ``z_s = (1-s)·z + s·IN(z)`` lets strength ``s`` move continuously,
+    and at the endpoints (s=0, s=1) it is BIT-IDENTICAL to the facade
+    with ``apply_in`` off/on — asserted every sweep as the
+    ``harness_matches_wire`` row, so the curves are anchored to the
+    real wire, not a look-alike.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import octopus as OC
+from repro.core.disentangle import instance_norm_latent
+from repro.core.dvqae import DVQAEConfig, init_dvqae
+from repro.core.gsvq import gsvq_quantize
+from repro.core.vq import quantize
+from repro.optim.adamw import adamw_init
+from repro.server.store import ShardedCodeStore
+from repro.wire.payload import CodePayload
+from repro.wire.session import OctopusServer
+
+from .attacks import AttackReport, attribute_inference, membership_inference
+from .oblivious import ObliviousCodeStore
+from .tap import PayloadTap
+
+#: the PR-5 linear codec's dimensions (test_wire.py's privacy regression)
+D_MODEL = 12
+M_LATENT = 8
+T_SEQ = 10
+N_CONTENT = 4
+N_STYLES = 4
+SHIFT_SCALE = 2.0      # style shift magnitude — IN-strippable by design
+
+
+def make_codec(seed: int, *, K: int = 32, apply_in: bool = True,
+               n_groups: int = 1, n_slices: int = 1):
+    """(cfg, params, facade server) for one knob point. Params depend
+    only on ``seed`` and the shape knobs, never on ``apply_in`` — the
+    leaky and privatized variants share the exact same codec weights."""
+    cfg = DVQAEConfig(kind="sequence", latent_dim=M_LATENT,
+                      codebook_size=K, apply_in=apply_in,
+                      n_groups=n_groups, n_slices=n_slices)
+    params = init_dvqae(jax.random.PRNGKey(seed), cfg, d_model=D_MODEL)
+    state = OC.ServerState(params=params, opt=adamw_init(params),
+                           step=jnp.zeros((), jnp.int32))
+    return cfg, params, OctopusServer(state, cfg)
+
+
+def n_atoms(cfg: DVQAEConfig) -> int:
+    """The transmitted alphabet the attacker histograms over."""
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
+        return cfg.n_groups
+    return cfg.codebook_size
+
+
+def client_batch(rng, protos, shift, batch: int, noise: float = 0.05):
+    """One client's local batch: time-varying content prototypes (IN
+    cannot strip those) + a constant-over-T channel shift (IN strips
+    exactly those) + sample noise."""
+    content = rng.integers(0, protos.shape[0], size=batch)
+    x = protos[content] + noise * rng.normal(
+        size=(batch,) + protos.shape[1:])
+    x = x + shift[None, None, :]
+    return jnp.asarray(x, jnp.float32), content
+
+
+def encode_partial(params, cfg: DVQAEConfig, x, strength: float
+                   ) -> CodePayload:
+    """Harness encoder with a CONTINUOUS disentanglement-strength knob.
+
+    ``strength=0`` transmits VQ(z) (the leaky control), ``strength=1``
+    transmits VQ(IN(z)) — both bit-identical to the facade wire with
+    ``apply_in`` off/on (see :func:`harness_matches_wire`); intermediate
+    values interpolate the pre-VQ latent, sweeping how much style
+    survives quantization.
+    """
+    z = x @ params["encoder"]["proj"]
+    s = float(strength)
+    z_s = (1.0 - s) * z + s * instance_norm_latent(z)
+    if cfg.n_groups > 1 or cfg.n_slices > 1:
+        idx = gsvq_quantize(z_s, params["codebook"], n_groups=cfg.n_groups,
+                            n_slices=cfg.n_slices).indices
+    else:
+        idx = quantize(z_s, params["codebook"]).indices
+    return CodePayload.pack(idx[None], bits=OC.transmit_bits(cfg))
+
+
+def harness_matches_wire(seed: int = 0, batch: int = 32) -> bool:
+    """Anchor the harness to the production wire: at both endpoints the
+    packed WORDS must equal a real ``OctopusClient.transmit``'s."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(N_CONTENT, T_SEQ, D_MODEL))
+    shift = rng.normal(size=(D_MODEL,)) * SHIFT_SCALE
+    x, _ = client_batch(rng, protos, shift, batch)
+    ok = True
+    for s, apply_in in ((0.0, False), (1.0, True)):
+        cfg, params, srv = make_codec(seed, apply_in=apply_in)
+        wire = srv.deploy().transmit(x)
+        harness = encode_partial(params, cfg, x, s)
+        ok = ok and np.array_equal(np.asarray(wire.payload),
+                                   np.asarray(harness.payload))
+    return ok
+
+
+# ------------------------------------------------------------ attack points
+
+def capture_population(params, cfg: DVQAEConfig, *, strength: float,
+                       n_clients: int, batch: int, seed: int,
+                       encode=None) -> PayloadTap:
+    """Tap one round of a styled population: client ``c`` carries style
+    ``c % N_STYLES``; the tap's meta holds the attacker-side ground
+    truth. ``encode(x) -> CodePayload`` overrides the harness encoder
+    (the facade rows pass a real client's ``transmit``)."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(N_CONTENT, T_SEQ, D_MODEL))
+    shifts = rng.normal(size=(N_STYLES, D_MODEL)) * SHIFT_SCALE
+    tap = PayloadTap(allow=True)
+    for c in range(n_clients):
+        sty = c % N_STYLES
+        x, _ = client_batch(rng, protos, shifts[sty], batch)
+        p = encode(x) if encode is not None else \
+            encode_partial(params, cfg, x, strength)
+        tap.capture(p, client=c, style=sty)
+    return tap
+
+
+def attribute_point(key, *, seed: int, K: int = 32, n_groups: int = 1,
+                    n_slices: int = 1, strength: float = 1.0,
+                    n_clients: int = 8, batch: int = 40,
+                    steps: int = 150) -> AttackReport:
+    """One knob point: build codec, capture a round, run the attribute
+    attacker. Fully determined by (key, seed, knobs)."""
+    cfg, params, _ = make_codec(seed, K=K, n_groups=n_groups,
+                                n_slices=n_slices)
+    tap = capture_population(params, cfg, strength=strength,
+                             n_clients=n_clients, batch=batch,
+                             seed=seed + 17)
+    return attribute_inference(key, tap, attribute="style",
+                               n_classes=N_STYLES, n_atoms=n_atoms(cfg),
+                               steps=steps)
+
+
+def membership_point(key, *, seed: int, strength: float,
+                     n_members: int = 4, n_shadow: int = 12,
+                     n_holdout: int = 8, batch: int = 24,
+                     steps: int = 150) -> AttackReport:
+    """One membership point: members carry persistent per-client
+    signatures across rounds; the attacker trains on a round-1 capture
+    of members + shadow non-members, and is tested on a LATER round of
+    the members (fresh content, same signatures) plus never-seen
+    holdout clients."""
+    cfg, params, _ = make_codec(seed, K=32)
+    rng = np.random.default_rng(seed + 53)
+    protos = rng.normal(size=(N_CONTENT, T_SEQ, D_MODEL))
+    member_sig = rng.normal(size=(n_members, D_MODEL)) * SHIFT_SCALE
+    shadow_sig = rng.normal(size=(n_shadow, D_MODEL)) * SHIFT_SCALE
+    holdout_sig = rng.normal(size=(n_holdout, D_MODEL)) * SHIFT_SCALE
+
+    def rounds(tap, sigs, member):
+        for i in range(sigs.shape[0]):
+            x, _ = client_batch(rng, protos, sigs[i], batch)
+            tap.capture(encode_partial(params, cfg, x, strength),
+                        member=member)
+
+    train = PayloadTap(allow=True)
+    rounds(train, member_sig, 1)
+    rounds(train, shadow_sig, 0)
+    test = PayloadTap(allow=True)
+    rounds(test, member_sig, 1)       # round 2: same members, new content
+    rounds(test, holdout_sig, 0)      # fresh clients the attacker never saw
+    return membership_inference(key, train, test, n_atoms=n_atoms(cfg),
+                                steps=steps)
+
+
+# --------------------------------------------------------- oblivious point
+
+def oblivious_point(*, seed: int, n_clients: int = 8, rounds: int = 2,
+                    batch: int = 16, n_shards: int = 4) -> Dict[str, float]:
+    """OMLO-style baseline-vs-oblivious measurement on one identical
+    workload: same ingest stream and same (client, round) query set
+    against a plain ``ShardedCodeStore`` and an
+    :class:`ObliviousCodeStore`; parity is checked bit-for-bit."""
+    cfg, params, _ = make_codec(seed, K=32)
+    rng = np.random.default_rng(seed + 99)
+    protos = rng.normal(size=(N_CONTENT, T_SEQ, D_MODEL))
+    sigs = rng.normal(size=(n_clients, D_MODEL)) * SHIFT_SCALE
+    plain = ShardedCodeStore(cfg, n_shards=n_shards, seed=seed)
+    obl = ObliviousCodeStore(cfg, n_shards=n_shards, seed=seed,
+                             oblivious_seed=7)
+    for r in range(rounds):
+        for c in range(n_clients):
+            x, _ = client_batch(rng, protos, sigs[c], batch)
+            p = encode_partial(params, cfg, x, 1.0)
+            plain.add(p, client_ids=[c], round=r)
+            obl.add(p, client_ids=[c], round=r)
+    queries = [(c, r) for r in range(rounds) for c in range(n_clients)]
+    # warm both paths (unpack dispatch compilation) before timing
+    plain.get(*queries[0]), obl.get(*queries[0])
+    t0 = time.perf_counter()
+    got_plain = [plain.get(c, r) for c, r in queries]
+    t_plain = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    got_obl = [obl.get(c, r) for c, r in queries]
+    t_obl = time.perf_counter() - t0
+    parity = np.array_equal(np.asarray(plain.codes()),
+                            np.asarray(obl.codes()))
+    for (ia, va), (ib, vb) in zip(got_plain, got_obl):
+        parity = parity and va == vb and np.array_equal(np.asarray(ia),
+                                                        np.asarray(ib))
+    oh = obl.overhead()
+    oh.update(parity_bitexact=float(parity),
+              get_wall_ratio=t_obl / max(t_plain, 1e-9),
+              n_queries=float(len(queries)))
+    return oh
+
+
+# ---------------------------------------------------------------- the sweep
+
+def run_sweep(key, *, quick: bool = False, seed: int = 0
+              ) -> List[Dict[str, object]]:
+    """All `BENCH_privacy.json` rows: headline facade rows, the three
+    knob curves, membership, and the oblivious-store overheads. Returns
+    ``[{"name", "value", "extra"}, ...]`` for ``benchmarks.run`` to emit.
+    """
+    steps = 80 if quick else 150
+    batch = 24 if quick else 40
+    n_clients = 8
+    rows: List[Dict[str, object]] = []
+
+    def row(name, value, **extra):
+        rows.append({"name": name, "value": float(value), "extra": extra})
+
+    def attack_rows(name, rep: AttackReport, **extra):
+        row(name, rep.advantage, accuracy=rep.accuracy, chance=rep.chance,
+            h_bits=rep.conditional_entropy_bits, n_test=rep.n_test, **extra)
+
+    # anchor: the harness encoder IS the wire at both endpoints
+    row("harness_matches_wire", 1.0 if harness_matches_wire(seed) else 0.0)
+
+    # headline: the REAL fused wire path, leaky control vs privatized.
+    # The leaky row is the teeth check — the linear codec with IN off
+    # provably forwards the style shift, so advantage must clear chance.
+    ks = iter(jax.random.split(key, 64))
+    for name, apply_in in (("leaky_control", False), ("privatized", True)):
+        cfg, params, srv = make_codec(seed, K=32, apply_in=apply_in)
+        tap = capture_population(
+            params, cfg, strength=1.0, n_clients=n_clients, batch=batch,
+            seed=seed + 17, encode=lambda x: srv.deploy().transmit(x))
+        rep = attribute_inference(next(ks), tap, attribute="style",
+                                  n_classes=N_STYLES,
+                                  n_atoms=n_atoms(cfg), steps=steps)
+        attack_rows(f"{name}_advantage", rep, knob="facade",
+                    apply_in=apply_in, captured_bytes=tap.nbytes)
+
+    # knob 1: disentanglement strength s in [0, 1]
+    strengths = (0.0, 0.5, 1.0) if quick else (0.0, 0.25, 0.5, 0.75, 1.0)
+    for s in strengths:
+        rep = attribute_point(next(ks), seed=seed, strength=s,
+                              n_clients=n_clients, batch=batch, steps=steps)
+        attack_rows(f"attr_advantage/disent_s{s:.2f}", rep,
+                    knob="disentanglement_strength", strength=s)
+
+    # knob 2: codebook size K (leaky + privatized at each point)
+    for K in ((16, 64) if quick else (16, 64, 256)):
+        for tag, s in (("leaky", 0.0), ("priv", 1.0)):
+            rep = attribute_point(next(ks), seed=seed, K=K, strength=s,
+                                  n_clients=n_clients, batch=batch,
+                                  steps=steps)
+            attack_rows(f"attr_advantage/K{K}_{tag}", rep,
+                        knob="codebook_size", K=K, strength=s)
+
+    # knob 3: GSVQ grouping (G groups x S slices)
+    gsvq = ((2, 1), (4, 2)) if quick else ((2, 1), (4, 1), (4, 2))
+    for G, S in gsvq:
+        for tag, s in (("leaky", 0.0), ("priv", 1.0)):
+            rep = attribute_point(next(ks), seed=seed, n_groups=G,
+                                  n_slices=S, strength=s,
+                                  n_clients=n_clients, batch=batch,
+                                  steps=steps)
+            attack_rows(f"attr_advantage/gsvq_g{G}s{S}_{tag}", rep,
+                        knob="gsvq_grouping", n_groups=G, n_slices=S,
+                        strength=s)
+
+    # membership (client re-identification), leaky vs privatized
+    mem_kw = dict(n_members=3, n_shadow=8, n_holdout=5, batch=16) if quick \
+        else dict(n_members=4, n_shadow=12, n_holdout=8, batch=24)
+    for tag, s in (("leaky", 0.0), ("privatized", 1.0)):
+        rep = membership_point(next(ks), seed=seed, strength=s,
+                               steps=steps, **mem_kw)
+        attack_rows(f"membership_{tag}_advantage", rep, knob="membership",
+                    strength=s, **mem_kw)
+
+    # oblivious store: bit-exact parity + measured overhead
+    oh = oblivious_point(seed=seed, batch=8 if quick else 16)
+    row("oblivious_parity_bitexact", oh["parity_bitexact"])
+    row("oblivious_touch_ratio", oh["partition_touch_ratio"],
+        byte_touch_ratio=oh["byte_touch_ratio"], ops=oh["ops"])
+    row("oblivious_get_overhead", oh["get_wall_ratio"],
+        n_queries=oh["n_queries"],
+        touched_bytes=oh["touched_bytes"],
+        useful_bytes=oh["useful_bytes"])
+    return rows

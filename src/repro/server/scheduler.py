@@ -229,4 +229,12 @@ STANDARD_SCENARIOS: Dict[str, Scenario] = {
                                       straggler_prob=0.5, max_delay=3,
                                       leave_prob=0.2, join_prob=0.5),
                       merge_every=2),
+    # the red-team regime (repro.privacy): an on-path adversary taps the
+    # wire while the population churns — moderate participation so every
+    # round leaves observable traffic, join churn so membership turnover
+    # gives a membership-inference attacker something to chase
+    "adversary": Scenario(SchedulerConfig(participation=0.5,
+                                          straggler_prob=0.3, max_delay=2,
+                                          drop_prob=0.1, leave_prob=0.1,
+                                          join_prob=0.25), merge_every=2),
 }

@@ -235,23 +235,50 @@ def test_dispatch_monitor_counts_decode_and_pack(tiny_cfg):
 
 def test_trace_never_carries_words_or_labels(tiny_cfg, server, data,
                                             tmp_path):
-    """Metadata-only capture: no event field holds the packed words, a
-    label channel, or anything array-shaped."""
+    """Metadata-only capture, enumerated over EVERY event kind: no event
+    field holds the packed words, a label channel, or anything
+    array-shaped. The kind list comes from ``obs.EVENT_KINDS`` at
+    runtime, so a newly added event type lands in this scan the moment
+    it exists — it cannot silently start carrying words or latents."""
     srv = OctopusServer(server, tiny_cfg)
     batch = data[0]
     labels = {"content": np.arange(batch.shape[0], dtype=np.int32)}
-    with obs.recording(tmp_path / "t.jsonl"):
+    with obs.recording(tmp_path / "t.jsonl") as rec:
         p = srv.deploy().round(batch, labels=labels)
         srv.ingest(p)
         srv.features()
+        # synthesize one event of every registered kind with payload
+        # metadata attached — the §2.5 scan below must hold for ALL of
+        # them, including kinds no pipeline call emitted above
+        for kind in obs.EVENT_KINDS:
+            rec.event(kind, **obs.payload_meta(p))
+    seen = set()
     for ev in obs_report.load_events(str(tmp_path / "t.jsonl")):
+        seen.add(ev["kind"])
         assert "payload" not in ev and "words" not in ev
         assert "labels" not in ev and "content" not in ev
         for v in ev.values():
             assert isinstance(v, (int, float, bool, str, type(None)))
+    assert seen >= set(obs.EVENT_KINDS)       # every kind was scanned
     meta = obs.payload_meta(p)
     assert set(meta) == set(obs.PAYLOAD_META_FIELDS)
     assert meta["nbytes"] == p.nbytes and meta["privatized"] is True
+
+
+def test_event_refuses_arrays_and_containers(tmp_path):
+    """The recorder enforces §2.5 mechanically: array- or
+    container-valued event fields raise, for every event kind — new
+    call sites cannot leak words/labels even by mistake."""
+    with obs.recording(tmp_path / "t.jsonl") as rec:
+        for kind in obs.EVENT_KINDS:
+            for bad in (np.arange(4), [1, 2], (1, 2), {"y": 1}, b"words"):
+                with pytest.raises(ValueError, match="scalar-only"):
+                    rec.event(kind, leak=bad)
+        ok = rec.event("tap", n=3, f=1.5, s="x", b=True, none=None,
+                       np_scalar=np.float32(2.0))
+        assert ok["n"] == 3
+    events = obs_report.load_events(str(tmp_path / "t.jsonl"))
+    assert [e["kind"] for e in events] == ["tap"]   # refused != written
 
 
 # ----------------------------------------------------------- report CLI

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import overheads as OH
-from repro.core import privacy as PV
+from repro import privacy as PV
 
 
 def test_adversary_learns_separable_labels(key):

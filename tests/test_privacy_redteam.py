@@ -1,0 +1,290 @@
+"""Red-team subsystem tests (repro.privacy).
+
+Covers the four §2.5-critical properties:
+  * the tap is OPT-IN (no ambient full-payload capture) and, when
+    active, announces itself in traces with metadata only;
+  * the attack harness has teeth — the provably-leaky control codec
+    (PR-5 linear codec, IN off) scores well above chance while the
+    privatized wire sits at chance — and is deterministic per seed;
+  * the oblivious store is bit-exact with the plain sharded store and
+    its access schedules are provably query-independent, with byte
+    ledgers conserved under arbitrary access streams (hypothesis
+    property, fixed fallbacks without it);
+  * the old ``core.privacy`` home is a tombstone pointing here.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import obs, privacy as P
+from repro.core.dvqae import DVQAEConfig
+from repro.kernels.pack_bits import code_bits, packing_dims
+from repro.obs import report as obs_report
+from repro.privacy import sweep as SW
+from repro.server import STANDARD_SCENARIOS, ShardedCodeStore
+from repro.wire import CodePayload
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # dev-only dependency; fixed cases still run
+    HAVE_HYPOTHESIS = False
+
+BITS = code_bits(16)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return DVQAEConfig(kind="image", in_channels=3, hidden=8, latent_dim=8,
+                       codebook_size=16, n_res_blocks=1)
+
+
+@pytest.fixture(autouse=True)
+def no_ambient_redteam(monkeypatch):
+    monkeypatch.delenv(P.REDTEAM_ENV_VAR, raising=False)
+
+
+def _payload(n_samples, version=0, fill=0):
+    """A 1-client, (1, n_samples, 3)-shaped payload from raw words —
+    no kernels, ready for per-client store routing."""
+    G, W = packing_dims(BITS)
+    rows = (n_samples * 3 + G - 1) // G
+    words = np.full((rows, W), fill, dtype=np.uint32)
+    return CodePayload.from_words(words, bits=BITS,
+                                  shape=(1, n_samples, 3),
+                                  version=version)
+
+
+# ------------------------------------------------------------------ the tap
+
+def test_tap_requires_explicit_opt_in(monkeypatch):
+    with pytest.raises(P.RedTeamOptInError, match="OCTOPUS_REDTEAM"):
+        P.PayloadTap()
+    assert not P.redteam_enabled()
+    monkeypatch.setenv(P.REDTEAM_ENV_VAR, "1")
+    assert P.redteam_enabled()
+    P.PayloadTap()                               # env opt-in
+    monkeypatch.delenv(P.REDTEAM_ENV_VAR)
+    P.PayloadTap(allow=True)                     # code opt-in
+
+
+def test_tap_captures_full_payload_but_traces_metadata_only(tmp_path):
+    tap = P.PayloadTap(allow=True)
+    p = _payload(4, fill=7)
+    with obs.recording(tmp_path / "t.jsonl") as rec:
+        out = tap.capture(p, style=2, member=1)
+        assert rec.metrics.snapshot()["counters"]["tapped_bytes"] == p.nbytes
+    assert out is p                              # inline-tap friendly
+    assert len(tap) == 1 and tap.nbytes == p.nbytes
+    assert tap.metas("style") == [2] and tap.metas("member") == [1]
+    # the tap HOLDS the words (flattened to per-sample rows); the trace
+    # does NOT
+    np.testing.assert_array_equal(
+        tap.codes(), np.asarray(p.unpack()).reshape(-1, 3))
+    events = obs_report.load_events(str(tmp_path / "t.jsonl"))
+    assert [e["kind"] for e in events] == ["tap"]
+    assert "payload" not in events[0] and "words" not in events[0]
+    for v in events[0].values():
+        assert isinstance(v, (int, float, bool, str, type(None)))
+    assert events[0]["nbytes"] == p.nbytes
+
+
+def test_tap_as_wiretap_channel():
+    class Sink:
+        def __init__(self):
+            self.offers, self.ticks = [], 0
+
+        def offer(self, payload, **kw):
+            self.offers.append((payload, kw))
+            return "ok"
+
+        def tick(self):
+            self.ticks += 1
+
+        def drain(self):
+            return "drained"
+
+    sink = Sink()
+    tap = P.PayloadTap(allow=True, target=sink)
+    p = _payload(2)
+    assert tap.offer(p, client_ids=[5], uplink_id=(5, 0)) == "ok"
+    assert sink.offers[0][0] is p                # forwarded unmodified
+    tap.tick()
+    assert sink.ticks == 1 and tap.drain() == "drained"
+    assert tap.records[0].meta["client_ids"] == [5]
+    assert tap.records[0].meta["uplink_id"] == (5, 0)
+    # untargeted taps refuse channel duty instead of dropping traffic
+    with pytest.raises(ValueError, match="target"):
+        P.PayloadTap(allow=True).offer(p)
+
+
+def test_wiring_registered():
+    assert "adversary" in STANDARD_SCENARIOS
+    assert STANDARD_SCENARIOS["adversary"].sched.join_prob > 0
+    assert "tap" in obs.EVENT_KINDS and "attack" in obs.EVENT_KINDS
+
+
+# ------------------------------------------------------------- the attacks
+
+def test_attribute_attack_teeth_and_chance(key):
+    """The §2.5 gate in miniature: leaky control well above chance,
+    privatized wire at chance — same codec weights, same population."""
+    leaky = P.attribute_point(key, seed=0, strength=0.0, n_clients=8,
+                              batch=16, steps=60)
+    priv = P.attribute_point(key, seed=0, strength=1.0, n_clients=8,
+                             batch=16, steps=60)
+    assert leaky.advantage > 0.2, leaky
+    assert abs(priv.advantage) <= 0.2, priv
+    assert leaky.conditional_entropy_bits < priv.conditional_entropy_bits
+
+
+def test_attack_determinism_under_fixed_seed(key):
+    """Same key + same captured stream -> the IDENTICAL AttackReport,
+    field for field (the sweep's reproducibility contract)."""
+    a = P.attribute_point(key, seed=3, strength=0.0, n_clients=8,
+                          batch=12, steps=40)
+    b = P.attribute_point(key, seed=3, strength=0.0, n_clients=8,
+                          batch=12, steps=40)
+    assert a == b
+    c = P.membership_point(key, seed=3, strength=0.0, n_members=2,
+                           n_shadow=4, n_holdout=3, batch=8, steps=40)
+    d = P.membership_point(key, seed=3, strength=0.0, n_members=2,
+                           n_shadow=4, n_holdout=3, batch=8, steps=40)
+    assert c == d and c.attack == "membership"
+
+
+def test_harness_is_bit_anchored_to_wire():
+    """The partial-IN knob encoder equals the production facade at both
+    endpoints — the sweep curves measure the real wire, not a model."""
+    assert SW.harness_matches_wire(seed=0, batch=16)
+
+
+def test_attack_emits_scalar_event(key, tmp_path):
+    tap = P.PayloadTap(allow=True)
+    tap.capture(_payload(40, fill=3), style=0)
+    tap.capture(_payload(40, fill=9), style=1)
+    with obs.recording(tmp_path / "t.jsonl"):
+        P.attribute_inference(key, tap, attribute="style", n_classes=2,
+                              n_atoms=16, steps=10)
+    events = obs_report.load_events(str(tmp_path / "t.jsonl"))
+    att = [e for e in events if e["kind"] == "attack"]
+    assert len(att) == 1 and att[0]["attack"] == "attribute:style"
+    for v in att[0].values():
+        assert isinstance(v, (int, float, bool, str, type(None)))
+
+
+# ------------------------------------------------------- oblivious store
+
+def _mirror_stores(tiny_cfg, policy="fifo", capacity=8):
+    plain = ShardedCodeStore(tiny_cfg, n_shards=3, seed=5, policy=policy,
+                             capacity_samples=capacity)
+    obl = P.ObliviousCodeStore(tiny_cfg, n_shards=3, seed=5, policy=policy,
+                               capacity_samples=capacity, oblivious_seed=11)
+    return plain, obl
+
+
+def _run_parity_and_ledgers(tiny_cfg, policy, stream):
+    """Feed one arbitrary (n, version, client) stream into both stores;
+    check bit-exact feature parity and per-version byte conservation at
+    EVERY step of the oblivious store's life."""
+    plain, obl = _mirror_stores(tiny_cfg, policy=policy)
+    for i, (n, version, client) in enumerate(stream):
+        p = _payload(n, version, fill=i)
+        plain.add(p, client_ids=[client], round=i)
+        obl.add(p, client_ids=[client], round=i)
+        ing = obl.ingested_bytes_by_version
+        ev = obl.evicted_bytes_by_version
+        st_ = obl.stored_bytes_by_version
+        for v in ing:      # Σ stored + Σ evicted == Σ ingested, always
+            assert st_.get(v, 0) + ev.get(v, 0) == ing[v]
+    assert len(plain) == len(obl)
+    assert plain.total_bytes == obl.total_bytes
+    np.testing.assert_array_equal(np.asarray(plain.codes()),
+                                  np.asarray(obl.codes()))
+    for i, (_, _, client) in enumerate(stream):
+        try:
+            ia, va = plain.get(client, i)
+        except KeyError:
+            with pytest.raises(KeyError):
+                obl.get(client, i)
+            continue
+        ib, vb = obl.get(client, i)
+        assert va == vb
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+
+
+FIXED_STREAMS = [
+    [(2, 0, 0), (3, 0, 1), (2, 1, 0), (4, 0, 2), (1, 1, 3), (2, 0, 0)],
+    [(4, 0, 0)] * 8,                        # one partition, heavy churn
+    [(1, v, c) for v in (0, 1, 2) for c in range(6)],
+]
+
+
+@pytest.mark.parametrize("policy", ["fifo", "reservoir"])
+@pytest.mark.parametrize("stream", FIXED_STREAMS)
+def test_oblivious_parity_fixed(tiny_cfg, policy, stream):
+    _run_parity_and_ledgers(tiny_cfg, policy, stream)
+
+
+if HAVE_HYPOTHESIS:
+    STEP = st.tuples(st.integers(1, 4), st.integers(0, 2),
+                     st.integers(0, 7))
+
+    @settings(max_examples=40, deadline=None)
+    @given(stream=st.lists(STEP, min_size=1, max_size=25),
+           policy=st.sampled_from(["fifo", "reservoir"]))
+    def test_oblivious_parity_property(stream, policy):
+        cfg = DVQAEConfig(kind="image", in_channels=3, hidden=8,
+                          latent_dim=8, codebook_size=16, n_res_blocks=1)
+        _run_parity_and_ledgers(cfg, policy, stream)
+
+
+def test_oblivious_schedule_is_query_independent(tiny_cfg):
+    """Two stores with the same oblivious seed and the same partition
+    grid produce IDENTICAL touch schedules under completely different
+    query streams — the observer learns op count and grid size, nothing
+    else. Every schedule touches every partition exactly once."""
+    a_plain, a = _mirror_stores(tiny_cfg)
+    b_plain, b = _mirror_stores(tiny_cfg)
+    for i in range(6):
+        a.add(_payload(2, version=i % 2, fill=i), client_ids=[i], round=i)
+        b.add(_payload(2, version=i % 2, fill=i + 40),
+              client_ids=[5 - i], round=i)
+    for i in range(6):                    # disjoint query targets
+        a.get(i, i)
+        b.get(5 - i, i)
+    assert len(a.access_log) == len(b.access_log)
+    for (op_a, sched_a), (op_b, sched_b) in zip(a.access_log, b.access_log):
+        assert op_a == op_b
+        # same schedule despite different clients/shards being useful...
+        assert sched_a == sched_b
+        # ...and full coverage: every live partition exactly once
+        assert sorted(sched_a) == sorted(set(sched_a))
+    oh = a.overhead()
+    assert oh["touched_partitions"] > oh["useful_partitions"]
+    assert oh["partition_touch_ratio"] > 1.0
+
+
+def test_oblivious_open_version_pre_creates_grid(tiny_cfg):
+    obl = P.ObliviousCodeStore(tiny_cfg, n_shards=4, oblivious_seed=2)
+    obl.open_version(3)
+    assert sorted(obl.partitions) == [(3, s) for s in range(4)]
+    # a later add to ANY shard of v3 touches the whole pre-opened grid
+    obl.add(_payload(2, version=3), client_ids=[1], round=0)
+    op, sched = obl.access_log[-1]
+    assert op == "add" and sorted(sched) == [(3, s) for s in range(4)]
+
+
+# ------------------------------------------------------------- tombstone
+
+def test_core_privacy_is_a_tombstone():
+    from repro.core import privacy as old
+    for name in ("privacy_audit", "train_adversary", "AdversaryMetrics"):
+        with pytest.raises(ImportError, match="repro.privacy"):
+            getattr(old, name)
+    with pytest.raises(AttributeError):
+        old.never_existed
+    # the migrated toolkit is whole at the new home
+    for name in ("privacy_audit", "train_adversary", "evaluate_adversary",
+                 "init_adversary", "AdversaryMetrics"):
+        assert callable(getattr(P, name)) or name == "AdversaryMetrics"

@@ -445,7 +445,7 @@ def test_privatized_payload_leaks_no_private_residual(key):
     wire-decoded features scores ~chance on style, and the private
     residual Z∘ (which the carrier structurally cannot hold) nails it.
     """
-    from repro.core import privacy as PV
+    from repro import privacy as PV
     from repro.core.dvqae import init_dvqae
     from repro.optim.adamw import adamw_init
     d_model, M, K = 12, 8, 32
